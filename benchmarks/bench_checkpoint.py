@@ -1,0 +1,59 @@
+"""Checkpoint/restart end-to-end: save/restore wall time for a model state
+(sync + async), compressed variant, and elastic restore cost."""
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager, restore, save
+from repro.configs import get_config, smoke
+from repro.models import init_lm
+from repro.optim import adamw
+
+
+def _state(scale=4):
+    cfg = smoke(get_config("yi-6b"))
+    params = init_lm(cfg, jax.random.PRNGKey(0))
+    # pad with a big dense leaf so timings are meaningful
+    params["big"] = jnp.zeros((scale << 20,), jnp.float32)  # scale·4 MiB
+    return {"params": params, "opt": adamw.init(params)}
+
+
+def run(quick=False):
+    rows = []
+    state = _state(2 if quick else 8)
+    nbytes = sum(x.nbytes for x in jax.tree_util.tree_leaves(state))
+    with tempfile.TemporaryDirectory() as d:
+        p = os.path.join(d, "sync.scda")
+        t0 = time.perf_counter()
+        save(p, state, step=1)
+        dt = time.perf_counter() - t0
+        rows.append(("checkpoint.save_sync", dt * 1e6,
+                     f"{nbytes / dt / 1e6:.0f}MB/s"))
+
+        t0 = time.perf_counter()
+        out, _ = restore(p, jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state))
+        dt = time.perf_counter() - t0
+        rows.append(("checkpoint.restore", dt * 1e6,
+                     f"{nbytes / dt / 1e6:.0f}MB/s"))
+
+        mgr = CheckpointManager(os.path.join(d, "mgr"))
+        t0 = time.perf_counter()
+        mgr.save(2, state)          # async: only snapshot is synchronous
+        dt_fg = time.perf_counter() - t0
+        mgr.wait()
+        dt_total = time.perf_counter() - t0
+        rows.append(("checkpoint.save_async_foreground", dt_fg * 1e6,
+                     f"background={dt_total - dt_fg:.2f}s"))
+
+        mgrc = CheckpointManager(os.path.join(d, "c"), compressed=True)
+        t0 = time.perf_counter()
+        mgrc.save(3, state, blocking=True)
+        dt = time.perf_counter() - t0
+        csize = os.path.getsize(mgrc.path_for(3))
+        rows.append(("checkpoint.save_compressed", dt * 1e6,
+                     f"ratio={nbytes / csize:.2f}x"))
+    return rows

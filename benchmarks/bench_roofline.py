@@ -1,0 +1,39 @@
+"""Roofline summary from the dry-run artifacts (see EXPERIMENTS.md for the
+full table and methodology)."""
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun.json")
+
+PEAK = 197e12
+HBM = 819e9
+
+
+def roofline_fraction(r):
+    t = r["roofline"]
+    bound = t["step_s_lower_bound"]
+    if not bound:
+        return 0.0
+    if r["kind"] in ("train", "prefill"):
+        ideal = r["model_flops_per_chip"] / PEAK
+    else:  # decode: bandwidth utilization of the minimal state read
+        ideal = r["hbm_state_bytes_per_device"] / HBM
+    return ideal / bound
+
+
+def run(quick=False):
+    if not os.path.exists(RESULTS):
+        return [("roofline.missing", 0.0, "run repro.launch.dryrun --all")]
+    rows = []
+    records = json.load(open(RESULTS))
+    for r in records:
+        if r["mesh"] != [16, 16]:
+            continue
+        t = r["roofline"]
+        frac = roofline_fraction(r)
+        name = "roofline." + r["arch"] + "." + r["shape"]
+        rows.append((name, t["step_s_lower_bound"] * 1e6,
+                     "dom=" + t["dominant"] + f";frac={frac:.3f}"))
+    n_multi = sum(1 for r in records if r["mesh"] == [2, 16, 16])
+    rows.append(("roofline.multipod_cells_compiled", 0.0, f"n={n_multi}"))
+    return rows

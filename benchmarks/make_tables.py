@@ -1,0 +1,59 @@
+"""Regenerate the EXPERIMENTS.md roofline tables from dry-run artifacts.
+
+    PYTHONPATH=src python benchmarks/make_tables.py
+"""
+import json
+import os
+
+PEAK, HBM = 197e12, 819e9
+HERE = os.path.join(os.path.dirname(__file__), "results")
+
+
+def frac(r):
+    bound = r["roofline"]["step_s_lower_bound"]
+    if not bound:
+        return 0.0
+    if r["kind"] in ("train", "prefill"):
+        ideal = r["model_flops_per_chip"] / PEAK
+    else:
+        ideal = r["hbm_state_bytes_per_device"] / HBM
+    return ideal / bound
+
+
+def table(path, mesh):
+    rows = []
+    for r in json.load(open(path)):
+        if r["mesh"] != mesh:
+            continue
+        t = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {t['dominant']} "
+            f"| {t['compute_s']:.4f} | {t['memory_s']:.4f} "
+            f"| {t['collective_s']:.4f} | {r['useful_flop_ratio'] or 0:.3f} "
+            f"| {100 * frac(r):.2f}% |")
+    rows.sort()
+    head = ("| arch | shape | dominant | compute s | memory s "
+            "| collective s | useful | roofline |\n"
+            "|---|---|---|---|---|---|---|---|")
+    return head + "\n" + "\n".join(rows)
+
+
+def compile_stats(path):
+    rs = json.load(open(path))
+    n1 = sum(1 for r in rs if r["mesh"] == [16, 16])
+    n2 = sum(1 for r in rs if r["mesh"] == [2, 16, 16])
+    tmax = max(r["compile_s"] for r in rs)
+    return n1, n2, tmax
+
+
+if __name__ == "__main__":
+    base = os.path.join(HERE, "dryrun_baseline.json")
+    opt = os.path.join(HERE, "dryrun.json")
+    print("## baseline single-pod (16x16)\n")
+    print(table(base, [16, 16]))
+    if os.path.exists(opt):
+        print("\n## optimized single-pod (16x16)\n")
+        print(table(opt, [16, 16]))
+    print("\nbaseline cells:", compile_stats(base))
+    if os.path.exists(opt):
+        print("optimized cells:", compile_stats(opt))

@@ -1,0 +1,46 @@
+"""Benchmark harness — one section per paper claim (the RFC has no numeric
+tables; §4 is an intentional placeholder, so these quantify the format's
+*claims*: minimal overhead, scalable parallel access, per-element
+compression with selective access, and checkpoint/restart viability), plus
+the roofline summary from the dry-run artifacts.
+
+Prints ``name,us_per_call,derived`` CSV per the harness contract.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller sizes (CI-speed)")
+    ap.add_argument("--only", default="",
+                    help="comma-separated benchmark prefixes to run")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_checkpoint, bench_compression,
+                            bench_format, bench_parallel_io, bench_roofline)
+    suites = [
+        ("format", bench_format.run),
+        ("parallel_io", bench_parallel_io.run),
+        ("compression", bench_compression.run),
+        ("checkpoint", bench_checkpoint.run),
+        ("roofline", bench_roofline.run),
+    ]
+    only = [s for s in args.only.split(",") if s]
+    print("name,us_per_call,derived")
+    for name, fn in suites:
+        if only and not any(name.startswith(o) for o in only):
+            continue
+        for row in fn(quick=args.quick):
+            bench, us, derived = row
+            print(f"{bench},{us:.1f},{derived}")
+            sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Archival with §3 per-element compression + selective random access.
+
+Stores a model checkpoint twice — raw and with per-chunk deflate — then
+demonstrates the property the paper's per-element design buys: restoring a
+*single* leaf (or a single shard of one) reads only the chunks that overlap
+it, without inflating the rest of the archive.
+
+Run:  PYTHONPATH=src python examples/compressed_archive.py
+"""
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import read_manifest, restore, save
+from repro.configs import get_config, smoke
+from repro.core import fopen_read
+from repro.models import init_lm
+
+
+def main():
+    cfg = smoke(get_config("yi-6b"))
+    params = init_lm(cfg, jax.random.PRNGKey(0))
+    # make the weights compressible (real checkpoints often are: sparsity,
+    # repeated structure, low-rank adapters, zero-init optimizer moments)
+    params["embed"] = (params["embed"] * 100).round() / 100
+
+    d = tempfile.mkdtemp(prefix="repro-archive-")
+    raw, packed = os.path.join(d, "raw.scda"), os.path.join(d, "packed.scda")
+    save(raw, params, step=1)
+    save(packed, params, step=1, compressed=True, chunk_bytes=1 << 14)
+    r, p = os.path.getsize(raw), os.path.getsize(packed)
+    print(f"raw    : {r / 1e6:7.2f} MB")
+    print(f"packed : {p / 1e6:7.2f} MB   (ratio {r / p:.2f}x)")
+
+    # full restore round-trips exactly
+    like = jax.eval_shape(lambda: init_lm(cfg, jax.random.PRNGKey(0)))
+    out, _ = restore(packed, like)
+    for a, b in zip(jax.tree_util.tree_leaves(out),
+                    jax.tree_util.tree_leaves(params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    print("compressed round-trip: exact")
+
+    # selective access: restore only the embedding leaf
+    doc = read_manifest(packed)
+    t0 = time.time()
+    sub, _ = restore(packed, like={"embed": like["embed"]})
+    dt = time.time() - t0
+    np.testing.assert_array_equal(np.asarray(sub["embed"]),
+                                  np.asarray(params["embed"]))
+    print(f"selective restore of 'embed' "
+          f"({doc['leaves'][0]['nbytes'] / 1e6:.2f} MB) in {dt * 1e3:.1f} ms "
+          f"— other leaves never inflated")
+
+    # the archive is an ordinary scda file: read one compressed element
+    # directly with the core API
+    with fopen_read(None, packed) as r_:
+        r_.read_section_header(); r_.skip_data()          # status
+        r_.read_section_header(); r_.skip_data()          # manifest
+        hdr = r_.read_section_header(decode=True)         # first leaf
+        first_chunk = r_.read_varray_elements([0])[0]
+        print(f"leaf0 ({hdr.user_string!r}): chunk[0] = "
+              f"{len(first_chunk)} bytes inflated on demand")
+
+
+if __name__ == "__main__":
+    main()

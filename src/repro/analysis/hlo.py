@@ -1,0 +1,327 @@
+"""Roofline-term extraction from compiled (post-SPMD) HLO text.
+
+``jax.stages.Compiled.cost_analysis()`` counts every while-loop body ONCE —
+for scan-over-layers models that understates flops/bytes/collectives by the
+layer count (verified experimentally; see EXPERIMENTS.md §Dry-run).  This
+module re-derives the three roofline inputs directly from
+``compiled.as_text()``:
+
+  * flops             — dot/convolution ops (plus matmul custom-calls),
+                        2·M·N·K from the printed shapes & contracting dims,
+  * traffic bytes     — Σ (operand + result bytes) over compute
+                        instructions, a fusion-granularity memory model,
+  * collective bytes  — Σ operand bytes over all-reduce / all-gather /
+                        reduce-scatter / all-to-all / collective-permute,
+                        with a per-type breakdown,
+
+each multiplied through while-loop bodies by the trip count (taken from the
+scheduler's ``backend_config known_trip_count``, falling back to the
+condition's comparison constant).  The HLO is the per-device SPMD program,
+so every figure is *per chip*.
+
+Caveats (documented in EXPERIMENTS.md §Dry-run): CPU-backend fusion is
+finer than TPU's, so the traffic term is an upper bound; flops of
+non-matmul elementwise work are excluded (VPU, not MXU, work).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "f8e4m3b11fnuz": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z]            [a-z0-9]*)\[([0-9,]*)\]".replace(" ", ""))
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all",
+)
+_SKIP_OPCODES = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "while", "conditional",
+    "call", "rng-get-and-update-state", "opt-barrier", "domain",
+    "get-dimension-size", "add-dependency", "token",
+}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0  # token/opaque
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _shapes_in(text: str) -> List[Tuple[str, str]]:
+    return _SHAPE_RE.findall(text)
+
+
+def _sum_bytes(text: str) -> int:
+    return sum(_shape_bytes(dt, dims) for dt, dims in _shapes_in(text))
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    opcode: str
+    result: str      # result type text
+    operands: str    # operand list text (names, no types)
+    attrs: str       # everything after the closing paren
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    params: Dict[str, str]                  # param name → type text
+    instructions: List[Instruction]
+    types: Dict[str, str]                   # any symbol → result type text
+
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s+([\w\-]+)\(")
+_HEADER_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->")
+_PARAM_RE = re.compile(r"%?([\w.\-]+)\s*:\s*([^,]+(?:\[[0-9,]*\][^,]*)?)")
+
+
+def _parse_instruction(line: str) -> Optional[Instruction]:
+    m = _INSTR_RE.match(line)
+    if not m:
+        return None
+    name, result, opcode = m.groups()
+    open_idx = line.index(opcode + "(", m.end(2)) + len(opcode)
+    depth = 0
+    i = open_idx
+    for i in range(open_idx, len(line)):
+        if line[i] == "(":
+            depth += 1
+        elif line[i] == ")":
+            depth -= 1
+            if depth == 0:
+                break
+    operands = line[open_idx + 1:i]
+    attrs = line[i + 1:]
+    return Instruction(name, opcode, result, operands, attrs)
+
+
+def parse_computations(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    current: Optional[Computation] = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if current is None:
+            if stripped.endswith("{") and "->" in stripped:
+                m = _HEADER_RE.match(stripped)
+                if m:
+                    name, params_text = m.groups()
+                    params = {p: t.strip() for p, t
+                              in _PARAM_RE.findall(params_text)}
+                    current = Computation(name, params, [], dict(params))
+                    comps[name] = current
+            continue
+        if stripped == "}":
+            current = None
+            continue
+        instr = _parse_instruction(line)
+        if instr is not None:
+            current.instructions.append(instr)
+            current.types[instr.name] = instr.result
+    return comps
+
+
+def _entry_name(hlo: str, comps: Dict[str, Computation]) -> str:
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", hlo, re.M)
+    if m and m.group(1) in comps:
+        return m.group(1)
+    return max(comps, key=lambda c: len(comps[c].instructions))
+
+
+_ATTR_NAME_RE = re.compile(r"(condition|body|to_apply|calls)=\s*%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*"n"[^0-9]*(\d+)')
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _called(instr: Instruction) -> Dict[str, str]:
+    return dict(_ATTR_NAME_RE.findall(instr.attrs))
+
+
+def _operand_bytes(ins: Instruction, comp: Computation) -> int:
+    total = 0
+    for name in _OPERAND_RE.findall(ins.operands):
+        t = comp.types.get(name)
+        if t:
+            total += _sum_bytes(t)
+    return total
+
+
+def _operand_shapes(ins: Instruction, comp: Computation) \
+        -> List[List[int]]:
+    out = []
+    for name in _OPERAND_RE.findall(ins.operands):
+        t = comp.types.get(name)
+        if t:
+            shapes = _shapes_in(t)
+            if shapes:
+                dims = [int(d) for d in shapes[0][1].split(",") if d]
+                out.append(dims)
+    return out
+
+
+def _trip_count(ins: Instruction,
+                comps: Dict[str, Computation]) -> int:
+    m = _TRIP_RE.search(ins.attrs)
+    if m:
+        return max(1, int(m.group(1)))
+    cond = _called(ins).get("condition")
+    best = 1
+    if cond and cond in comps:
+        for ci in comps[cond].instructions:
+            if ci.opcode == "constant":
+                cm = re.match(r"^(\d+)$", ci.operands.strip())
+                if cm:
+                    best = max(best, int(cm.group(1)))
+    return best
+
+
+def _dot_flops(ins: Instruction, comp: Computation) -> float:
+    res_shapes = _shapes_in(ins.result)
+    if not res_shapes:
+        return 0.0
+    out_elems = 1
+    for d in res_shapes[0][1].split(","):
+        if d:
+            out_elems *= int(d)
+    operand_shapes = _operand_shapes(ins, comp)
+    if not operand_shapes:
+        return 0.0
+    lhs = operand_shapes[0] or [1]
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.attrs)
+    if m and m.group(1):
+        k = 1
+        for idx in m.group(1).split(","):
+            k *= lhs[int(idx)]
+    else:
+        k = lhs[-1]
+    return 2.0 * out_elems * k
+
+
+def _custom_call_flops(ins: Instruction, comp: Computation) -> float:
+    if not re.search(r"(matmul|dot|gemm)", ins.attrs, re.I):
+        return 0.0
+    ops = _operand_shapes(ins, comp)
+    res = _shapes_in(ins.result)
+    if len(ops) < 2 or not res:
+        return 0.0
+    out = [int(d) for d in res[0][1].split(",") if d]
+    lhs, rhs = ops[0], ops[1]
+    k = next((d for d in lhs if d in rhs and d not in out),
+             lhs[-1] if lhs else 1)
+    return 2.0 * math.prod(out) * k
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    traffic_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    by_collective: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Costs", mult: float = 1.0) -> None:
+        self.flops += mult * other.flops
+        self.traffic_bytes += mult * other.traffic_bytes
+        self.collective_bytes += mult * other.collective_bytes
+        for k, v in other.by_collective.items():
+            self.by_collective[k] = self.by_collective.get(k, 0.0) + mult * v
+
+
+def analyze(hlo: str) -> Costs:
+    comps = parse_computations(hlo)
+    memo: Dict[str, Costs] = {}
+
+    def comp_cost(name: str) -> Costs:
+        if name in memo:
+            return memo[name]
+        memo[name] = Costs()  # break cycles defensively
+        comp = comps.get(name)
+        total = Costs()
+        if comp is None:
+            return total
+        for ins in comp.instructions:
+            called = _called(ins)
+            if ins.opcode == "while":
+                body = called.get("body")
+                trips = _trip_count(ins, comps)
+                if body:
+                    total.add(comp_cost(body), mult=trips)
+                continue
+            if ins.opcode == "fusion":
+                # memory model: the fusion's operand/result traffic;
+                # flops & collectives: whatever got fused inside
+                total.traffic_bytes += _operand_bytes(ins, comp) \
+                    + _sum_bytes(ins.result)
+                sub = called.get("calls")
+                if sub:
+                    inner = comp_cost(sub)
+                    total.flops += inner.flops
+                    total.collective_bytes += inner.collective_bytes
+                continue
+            if ins.opcode in ("call", "conditional"):
+                for sub in called.values():
+                    total.add(comp_cost(sub))
+                continue
+            if ins.opcode in _SKIP_OPCODES:
+                continue
+            base = next((c for c in _COLLECTIVES
+                         if ins.opcode.startswith(c)), None)
+            if base is not None:
+                if ins.opcode.endswith("-done"):
+                    continue  # counted at -start
+                nbytes = _operand_bytes(ins, comp)
+                total.collective_bytes += nbytes
+                total.by_collective[base] = \
+                    total.by_collective.get(base, 0.0) + nbytes
+                total.traffic_bytes += nbytes + _sum_bytes(ins.result)
+                continue
+            if ins.opcode == "dot":
+                total.flops += _dot_flops(ins, comp)
+            elif ins.opcode == "convolution":
+                total.flops += _dot_flops(ins, comp)
+            elif ins.opcode == "custom-call":
+                total.flops += _custom_call_flops(ins, comp)
+            total.traffic_bytes += _operand_bytes(ins, comp) \
+                + _sum_bytes(ins.result)
+        memo[name] = total
+        return total
+
+    return comp_cost(_entry_name(hlo, comps))
+
+
+# -- hardware model (TPU v5e-class, constants per the project brief) -------
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+
+def roofline_terms(costs: Costs) -> Dict[str, float]:
+    compute_s = costs.flops / PEAK_FLOPS
+    memory_s = costs.traffic_bytes / HBM_BW
+    collective_s = costs.collective_bytes / ICI_BW
+    dominant = max(
+        (("compute", compute_s), ("memory", memory_s),
+         ("collective", collective_s)), key=lambda kv: kv[1])[0]
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "step_s_lower_bound": max(compute_s, memory_s, collective_s),
+    }

@@ -1,0 +1,26 @@
+"""Checkpoint/restart on the scda format — the paper's technique as a
+first-class framework feature.
+
+    from repro.checkpoint import CheckpointManager, save, restore
+
+    mgr = CheckpointManager("/ckpts/run7", keep=3)
+    state, start = mgr.restore_or_init(init_fn, like=abstract_state)
+    for step in range(start + 1, total):
+        state = train_step(state, batch)
+        if step % 500 == 0:
+            mgr.save(step, state)          # async, atomic, serial-equivalent
+"""
+from repro.checkpoint.layout import shard_runs, chunk_sizes, runs_cover_exactly
+from repro.checkpoint.manifest import (MANIFEST_USER_STRING,
+                                       STATUS_USER_STRING)
+from repro.checkpoint.pytree_io import (save, restore, read_manifest,
+                                        flatten_named, leaf_name,
+                                        DEFAULT_CHUNK_BYTES)
+from repro.checkpoint.manager import CheckpointManager, snapshot_to_host
+
+__all__ = [
+    "shard_runs", "chunk_sizes", "runs_cover_exactly",
+    "MANIFEST_USER_STRING", "STATUS_USER_STRING",
+    "save", "restore", "read_manifest", "flatten_named", "leaf_name",
+    "DEFAULT_CHUNK_BYTES", "CheckpointManager", "snapshot_to_host",
+]

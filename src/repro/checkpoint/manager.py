@@ -1,0 +1,189 @@
+"""Checkpoint lifecycle management for long-running training jobs.
+
+Fault-tolerance properties (the paper's motivating use case, §A.6: "file
+errors should never crash the simulation"):
+
+  * **Async**: the only synchronous work is the device→host snapshot;
+    serialization + disk I/O run on a background thread (straggler-safe —
+    checkpoint I/O never sits on the training critical path).
+  * **Atomic**: writes go to ``<name>.tmp`` and are fsync'd before an
+    atomic rename; a crash mid-write never leaves a visible partial
+    checkpoint, and ``latest_step`` only ever sees complete files.
+  * **Non-fatal**: any ScdaError during a save is recorded and surfaced on
+    the *next* call (or ``wait()``), never raised into the training loop
+    mid-step unless the caller asks.
+  * **Elastic**: ``restore_latest(like=...)`` restores under any mesh; the
+    file does not know or care how many hosts wrote it.
+  * **Retention**: keep the newest ``keep`` checkpoints (always ≥ 1), so a
+    corrupted latest file can fall back to an older one.
+"""
+from __future__ import annotations
+
+import os
+import re
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.checkpoint import pytree_io
+from repro.core import ScdaError
+from repro.core.comm import Communicator, SerialComm
+
+_CKPT_RE = re.compile(r"^step_(\d{10})\.scda$")
+
+
+def _ckpt_name(step: int) -> str:
+    return f"step_{step:010d}.scda"
+
+
+def snapshot_to_host(tree):
+    """Synchronous device→host copy preserving shape/dtype (per shard).
+
+    For single-process jax.Arrays the result is plain numpy (canonical
+    layout); the background writer then never touches device state, so
+    training can overwrite donated buffers immediately.
+    """
+    def _snap(x):
+        if isinstance(x, jax.Array):
+            return np.asarray(x)
+        return x
+    return jax.tree_util.tree_map(_snap, tree)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep: int = 3,
+                 compressed: bool = False,
+                 comm: Optional[Communicator] = None,
+                 chunk_bytes: int = pytree_io.DEFAULT_CHUNK_BYTES) -> None:
+        self.directory = directory
+        self.keep = max(1, keep)
+        self.compressed = compressed
+        self.comm = comm or SerialComm()
+        self.chunk_bytes = chunk_bytes
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        self._crash_before_commit = False  # test hook: simulated node death
+        if self.comm.rank == 0:
+            os.makedirs(directory, exist_ok=True)
+        self.comm.barrier()
+
+    # -- inventory -----------------------------------------------------------
+    def all_steps(self) -> List[int]:
+        try:
+            names = os.listdir(self.directory)
+        except OSError:
+            return []
+        steps = [int(m.group(1)) for n in names
+                 if (m := _CKPT_RE.match(n))]
+        return sorted(steps)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def path_for(self, step: int) -> str:
+        return os.path.join(self.directory, _ckpt_name(step))
+
+    # -- saving ----------------------------------------------------------------
+    def save(self, step: int, tree, *, blocking: bool = False,
+             aux_extra: Optional[Dict[str, Any]] = None) -> None:
+        """Snapshot now; serialize + write in the background.
+
+        Raises any error from the *previous* async save (so failures are
+        observed, but off the hot path).
+        """
+        self.wait()  # one in-flight save at a time; surfaces prior errors
+        host_tree = snapshot_to_host(tree)
+
+        def _write() -> None:
+            try:
+                self._write_and_commit(step, host_tree, aux_extra)
+            except BaseException as e:  # noqa: BLE001 - stored, not raised
+                self._error = e
+
+        if blocking:
+            _write()
+            self._raise_pending()
+        else:
+            self._thread = threading.Thread(target=_write, daemon=True,
+                                            name=f"ckpt-save-{step}")
+            self._thread.start()
+
+    def _write_and_commit(self, step: int, host_tree,
+                          aux_extra: Optional[Dict[str, Any]]) -> None:
+        final = self.path_for(step)
+        tmp = final + ".tmp"
+        pytree_io.save(tmp, host_tree, comm=self.comm, step=step,
+                       compressed=self.compressed,
+                       chunk_bytes=self.chunk_bytes, aux_extra=aux_extra)
+        if self._crash_before_commit:
+            raise RuntimeError("injected crash before commit")
+        self.comm.barrier()
+        if self.comm.rank == 0:
+            os.replace(tmp, final)  # atomic commit
+            self._apply_retention()
+        self.comm.barrier()
+
+    def _apply_retention(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            try:
+                os.remove(self.path_for(s))
+            except OSError:
+                pass  # retention is best-effort
+        # sweep stale tmp files from crashed attempts
+        for n in os.listdir(self.directory):
+            if n.endswith(".scda.tmp"):
+                try:
+                    os.remove(os.path.join(self.directory, n))
+                except OSError:
+                    pass
+
+    def wait(self) -> None:
+        """Join any in-flight save and surface its error, if any."""
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        self._raise_pending()
+
+    def _raise_pending(self) -> None:
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    # -- restoring ---------------------------------------------------------------
+    def restore(self, step: int, like=None) -> Tuple[Any, Optional[int]]:
+        return pytree_io.restore(self.path_for(step), like, comm=self.comm)
+
+    def restore_latest(self, like=None) -> Tuple[Any, Optional[int]]:
+        """Restore the newest complete checkpoint; fall back on corruption.
+
+        Node-failure recovery: a half-written or corrupted newest file
+        (e.g. the job died during a commit on another file system) must not
+        brick the restart — older retained checkpoints are tried in order.
+        """
+        steps = self.all_steps()
+        last_err: Optional[BaseException] = None
+        for step in reversed(steps):
+            try:
+                return self.restore(step, like)
+            except ScdaError as e:
+                last_err = e
+                continue
+        if last_err is not None:
+            raise last_err
+        return None, None
+
+    def restore_or_init(self, init_fn, like=None):
+        """The standard restart entry point: resume if possible, else init.
+
+        Returns ``(tree, step)`` where step is -1 for a fresh start.
+        """
+        steps = self.all_steps()
+        if steps:
+            tree, step = self.restore_latest(like)
+            if tree is not None:
+                return tree, (step if step is not None else steps[-1])
+        return init_fn(), -1

@@ -1,0 +1,88 @@
+"""Checkpoint manifest — the self-description layer scda leaves to the user.
+
+scda is deliberately oblivious to variables, dtypes, and endianness (paper
+§1: "the definition of variables … may all be specified on top of scda").
+This module *is* that layer for JAX pytrees: a JSON document stored in a
+block section, naming every leaf (tree path), its shape/dtype/byte order,
+and how it is laid out in subsequent array sections.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+MANIFEST_USER_STRING = b"scda-ckpt manifest"
+STATUS_USER_STRING = b"scda-ckpt status"
+LEAF_USER_PREFIX = "leaf"
+FORMAT_VERSION = 1
+
+_BYTE_ORDER = "<" if sys.byteorder == "little" else ">"
+
+
+def dtype_name(dtype) -> str:
+    return np.dtype(dtype).name
+
+
+def dtype_from_name(name: str):
+    """Inverse of :func:`dtype_name`, covering the ml_dtypes family."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+class LeafSpec(Dict[str, Any]):
+    """A dict with the manifest schema for one array leaf."""
+
+    @staticmethod
+    def make(name: str, shape: Tuple[int, ...], dtype,
+             compressed: bool, chunk_bytes: Optional[int]) -> "LeafSpec":
+        nbytes = int(np.prod(shape, dtype=np.int64)) * np.dtype(dtype).itemsize
+        out = LeafSpec(name=name, shape=list(shape),
+                       dtype=dtype_name(dtype), nbytes=int(nbytes),
+                       byte_order=_BYTE_ORDER, compressed=bool(compressed))
+        if compressed:
+            out["chunk_bytes"] = int(chunk_bytes)
+        return out
+
+
+def build(step: Optional[int], leaves: List[LeafSpec],
+          aux: Dict[str, Any]) -> bytes:
+    """Serialize the manifest to JSON bytes (raw ASCII, human-readable —
+    in the spirit of the format's human-friendliness goal)."""
+    doc = {
+        "format": "repro-scda-checkpoint",
+        "version": FORMAT_VERSION,
+        "step": step,
+        "leaves": leaves,
+        "aux": aux,   # non-array leaves (python scalars, strings, None)
+    }
+    return json.dumps(doc, indent=1, sort_keys=True).encode("ascii")
+
+
+def parse(raw: bytes) -> Dict[str, Any]:
+    doc = json.loads(raw.decode("ascii"))
+    if doc.get("format") != "repro-scda-checkpoint":
+        raise ValueError(f"not a repro checkpoint manifest: "
+                         f"{doc.get('format')!r}")
+    if doc.get("version") != FORMAT_VERSION:
+        raise ValueError(f"unsupported manifest version {doc.get('version')}")
+    return doc
+
+
+def status_inline(step: Optional[int]) -> bytes:
+    """A 32-byte human-readable status for the leading inline section."""
+    text = f"step {step if step is not None else '-':>20}\n"
+    return text.encode("ascii").ljust(32, b" ")[:32]
+
+
+def parse_status_inline(data: bytes) -> Optional[int]:
+    try:
+        token = data.decode("ascii").split()[1]
+        return None if token == "-" else int(token)
+    except (ValueError, IndexError, UnicodeDecodeError):
+        return None

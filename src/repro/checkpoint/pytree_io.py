@@ -1,0 +1,356 @@
+"""Sharded-pytree checkpointing on scda — the framework's core feature.
+
+``save`` writes one scda file whose bytes depend only on the *logical*
+train state (leaf values in canonical row-major order), never on the mesh,
+process count, or sharding — the paper's serial-equivalence, delivered for
+JAX pytrees.  ``restore`` rebuilds the state under *any* target sharding /
+mesh ("the file can be read on any number of processes that agree on any
+partition"), which is what makes restarts elastic.
+
+File layout:
+    F  header (vendor "repro scda-jax 0.1")
+    I  "scda-ckpt status"    — human-readable step number
+    B  "scda-ckpt manifest"  — JSON: leaf names/shapes/dtypes/layout + aux
+    per array leaf, in manifest order:
+        raw:        A("leaf NNNNNN", N = nbytes, E = 1)
+        compressed: §3.4 convention (A of U-entries + V of deflate chunks),
+                    fixed chunking recorded in the manifest
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.checkpoint import layout, manifest as mf
+from repro.core import ScdaError, ScdaErrorCode
+from repro.core.comm import Communicator, SerialComm
+from repro.core.reader import ScdaReader, fopen_read
+from repro.core.writer import ScdaWriter, fopen_write
+
+DEFAULT_CHUNK_BYTES = 1 << 20  # 1 MiB deflate chunks for encoded leaves
+
+
+# --------------------------------------------------------------------------
+# Tree flattening with stable, human-readable names
+# --------------------------------------------------------------------------
+
+def _key_name(k) -> str:
+    if isinstance(k, jax.tree_util.DictKey):
+        return str(k.key)
+    if isinstance(k, jax.tree_util.SequenceKey):
+        return str(k.idx)
+    if isinstance(k, jax.tree_util.GetAttrKey):
+        return str(k.name)
+    if isinstance(k, jax.tree_util.FlattenedIndexKey):
+        return str(k.key)
+    return str(k)
+
+
+def leaf_name(path) -> str:
+    return "/".join(_key_name(k) for k in path) or "."
+
+
+def flatten_named(tree) -> Tuple[List[Tuple[str, Any]], Any]:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    named = [(leaf_name(p), v) for p, v in flat]
+    names = [n for n, _ in named]
+    if len(set(names)) != len(names):
+        raise ScdaError(ScdaErrorCode.ARG_SEQUENCE,
+                        "pytree leaf names are not unique")
+    return named, treedef
+
+
+def _is_array(x) -> bool:
+    return isinstance(x, (jax.Array, np.ndarray)) and np.ndim(x) is not None
+
+
+# --------------------------------------------------------------------------
+# Saving
+# --------------------------------------------------------------------------
+
+def _byte_view(host: np.ndarray) -> memoryview:
+    """A zero-copy byte view of a contiguous array (bf16/f8-safe — the
+    ml_dtypes scalar types have no buffer protocol, uint8 views do)."""
+    if host.nbytes == 0:
+        return memoryview(b"")
+    return memoryview(np.ascontiguousarray(host).reshape(-1).view(np.uint8))
+
+
+def _owned_windows(arr, nbytes: int) -> List[Tuple[int, memoryview]]:
+    """This process's deduplicated (byte_offset, buffer) windows of ``arr``.
+
+    For a jax.Array, every addressable shard with replica_id == 0 is owned
+    here; across all processes that tiles the canonical stream exactly once.
+    numpy arrays are treated as fully owned (callers pass them on rank 0 or
+    rely on identical replicated writes, which are byte-identical anyway).
+    """
+    windows: List[Tuple[int, memoryview]] = []
+    if isinstance(arr, jax.Array):
+        for shard in arr.addressable_shards:
+            if shard.replica_id != 0:
+                continue
+            host = np.asarray(shard.data)
+            buf = _byte_view(host)
+            for goff, loff, length in layout.shard_runs(
+                    arr.shape, shard.index, arr.dtype.itemsize):
+                windows.append((goff, buf[loff:loff + length]))
+    else:
+        host = np.asarray(arr)
+        if host.nbytes:
+            windows.append((0, _byte_view(host)))
+    return windows
+
+
+def save(path: str, tree, *, comm: Optional[Communicator] = None,
+         step: Optional[int] = None, compressed: bool = False,
+         chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+         aux_extra: Optional[Dict[str, Any]] = None) -> None:
+    """Write ``tree`` to ``path`` as a serial-equivalent scda checkpoint."""
+    comm = comm or SerialComm()
+    named, _ = flatten_named(tree)
+    leaves: List[mf.LeafSpec] = []
+    arrays: List[Any] = []
+    aux: Dict[str, Any] = dict(aux_extra or {})
+    for name, value in named:
+        if _is_array(value):
+            leaves.append(mf.LeafSpec.make(
+                name, tuple(np.shape(value)), value.dtype,
+                compressed, chunk_bytes))
+            arrays.append(value)
+        else:
+            aux[name] = _encode_aux(value)
+    if compressed and comm.size > 1:
+        raise ScdaError(ScdaErrorCode.ARG_SEQUENCE,
+                        "compressed checkpoints require chunk-aligned "
+                        "partitions; use comm.size == 1 (async snapshot)")
+
+    with fopen_write(comm, path, user_string=b"repro checkpoint") as f:
+        f.write_inline(mf.STATUS_USER_STRING, mf.status_inline(step),
+                       root=0)
+        f.write_block(mf.MANIFEST_USER_STRING,
+                      mf.build(step, leaves, aux) if comm.rank == 0 else None,
+                      E=None, root=0)
+        for i, (spec_, arr) in enumerate(zip(leaves, arrays)):
+            user = f"{mf.LEAF_USER_PREFIX} {i:06d}".encode()
+            if compressed:
+                _save_leaf_compressed(f, user, arr, spec_, chunk_bytes)
+            else:
+                windows = _owned_windows(arr, spec_["nbytes"])
+                f.write_array_windows(user, windows, N=spec_["nbytes"], E=1)
+
+
+def _save_leaf_compressed(f: ScdaWriter, user: bytes, arr,
+                          spec_: mf.LeafSpec, chunk_bytes: int) -> None:
+    flat = _byte_view(np.asarray(arr))
+    sizes = layout.chunk_sizes(spec_["nbytes"], chunk_bytes)
+    elements, pos = [], 0
+    for s in sizes:
+        elements.append(bytes(flat[pos:pos + s]))
+        pos += s
+    f.write_varray(user, elements, [len(sizes)], sizes, encode=True)
+
+
+def _encode_aux(value) -> Any:
+    if value is None or isinstance(value, (bool, int, float, str)):
+        return value
+    if isinstance(value, (np.integer,)):
+        return int(value)
+    if isinstance(value, (np.floating,)):
+        return float(value)
+    raise ScdaError(ScdaErrorCode.ARG_SEQUENCE,
+                    f"unsupported non-array leaf type {type(value)!r}")
+
+
+# --------------------------------------------------------------------------
+# Restoring
+# --------------------------------------------------------------------------
+
+def read_manifest(path: str, comm: Optional[Communicator] = None) \
+        -> Dict[str, Any]:
+    """Read just the status + manifest (cheap metadata probe)."""
+    with fopen_read(comm, path) as r:
+        hdr = r.read_section_header()
+        if hdr.type != "I" or hdr.user_string != mf.STATUS_USER_STRING:
+            raise ScdaError(ScdaErrorCode.CORRUPT_ENCODING,
+                            "not a repro checkpoint: missing status inline")
+        r.read_inline_data()
+        hdr = r.read_section_header()
+        if hdr.type != "B" or hdr.user_string != mf.MANIFEST_USER_STRING:
+            raise ScdaError(ScdaErrorCode.CORRUPT_ENCODING,
+                            "not a repro checkpoint: missing manifest block")
+        return mf.parse(r.read_block_data())
+
+
+def restore(path: str, like=None, *, comm: Optional[Communicator] = None):
+    """Restore a checkpoint.
+
+    ``like``: an abstract pytree of ``jax.ShapeDtypeStruct`` (with optional
+    ``.sharding``) or concrete arrays defining the target structure and
+    placement.  With ``like=None`` a nested dict of numpy arrays is
+    rebuilt from the manifest names.
+
+    Returns ``(tree, step)``.
+    """
+    comm = comm or SerialComm()
+    with fopen_read(comm, path) as r:
+        hdr = r.read_section_header()
+        step = mf.parse_status_inline(r.read_inline_data())
+        r.read_section_header()
+        doc = mf.parse(r.read_block_data())
+        by_name: Dict[str, Any] = {}
+        for i, spec_ in enumerate(doc["leaves"]):
+            by_name[spec_["name"]] = (i, spec_)
+
+        if like is None:
+            out: Dict[str, Any] = {}
+            for spec_ in doc["leaves"]:
+                hdr = r.read_section_header()
+                _check_leaf_header(hdr, spec_)
+                out[spec_["name"]] = _read_leaf_full(r, hdr, spec_)
+            for name, value in doc["aux"].items():
+                out[name] = value
+            return _unflatten_names(out), doc.get("step", step)
+
+        named, treedef = flatten_named(like)
+        targets = {n: v for n, v in named}
+        missing = [n for n in targets
+                   if n not in by_name and n not in doc["aux"]]
+        if missing:
+            raise ScdaError(ScdaErrorCode.ARG_SEQUENCE,
+                            f"leaves missing from checkpoint: {missing[:5]}"
+                            f"{'…' if len(missing) > 5 else ''}")
+        values: Dict[str, Any] = {}
+        for spec_ in doc["leaves"]:
+            hdr = r.read_section_header()
+            _check_leaf_header(hdr, spec_)
+            name = spec_["name"]
+            target = targets.get(name)
+            if target is None:
+                r.skip_data()  # present in file, not wanted by this restore
+                continue
+            values[name] = _read_leaf_to_target(r, hdr, spec_, target)
+        for name in targets:
+            if name in doc["aux"]:
+                values[name] = doc["aux"][name]
+        leaves_out = [values[n] for n, _ in named]
+        return jax.tree_util.tree_unflatten(treedef, leaves_out), \
+            doc.get("step", step)
+
+
+def _check_leaf_header(hdr, spec_) -> None:
+    if spec_["compressed"]:
+        if hdr.type != "V" or hdr.N != len(layout.chunk_sizes(
+                spec_["nbytes"], spec_["chunk_bytes"])):
+            raise ScdaError(ScdaErrorCode.CORRUPT_ENCODING,
+                            f"leaf {spec_['name']}: bad compressed section")
+    else:
+        if hdr.type != "A" or hdr.N != spec_["nbytes"] or hdr.E != 1:
+            raise ScdaError(ScdaErrorCode.CORRUPT_ENCODING,
+                            f"leaf {spec_['name']}: bad array section "
+                            f"({hdr.type} N={hdr.N} E={hdr.E})")
+
+
+def _read_leaf_full(r: ScdaReader, hdr, spec_) -> np.ndarray:
+    dtype = mf.dtype_from_name(spec_["dtype"])
+    if spec_["compressed"]:
+        sizes = layout.chunk_sizes(spec_["nbytes"], spec_["chunk_bytes"])
+        n = len(sizes)
+        raw = b"".join(r.read_varray_elements(list(range(n))))
+        r.skip_data()
+    else:
+        raw = b"".join(r.read_array_windows([(0, spec_["nbytes"])], 1))
+        r.skip_data()
+    if len(raw) != spec_["nbytes"]:
+        raise ScdaError(ScdaErrorCode.CORRUPT_CHECKSUM,
+                        f"leaf {spec_['name']}: {len(raw)} bytes, "
+                        f"manifest says {spec_['nbytes']}")
+    arr = np.frombuffer(raw, dtype=dtype).reshape(spec_["shape"])
+    return arr.copy()
+
+
+def _read_leaf_to_target(r: ScdaReader, hdr, spec_, target):
+    """Assemble the leaf under the target's sharding (any mesh)."""
+    dtype = mf.dtype_from_name(spec_["dtype"])
+    shape = tuple(spec_["shape"])
+    t_shape = tuple(getattr(target, "shape", np.shape(target)))
+    if tuple(t_shape) != shape:
+        raise ScdaError(ScdaErrorCode.ARG_SEQUENCE,
+                        f"leaf {spec_['name']}: target shape {t_shape} != "
+                        f"checkpoint shape {shape}")
+    sharding = getattr(target, "sharding", None)
+    if sharding is None:
+        return _read_leaf_full(r, hdr, spec_)
+
+    # One host buffer per *distinct* addressable shard extent.
+    device_map = sharding.addressable_devices_indices_map(shape)
+    shard_arrays: Dict[Tuple, np.ndarray] = {}
+    per_device = []
+    for device, index in device_map.items():
+        key = _index_key(index, shape)
+        if key not in shard_arrays:
+            shard_arrays[key] = _read_shard(r, spec_, index, shape, dtype)
+        per_device.append((device, shard_arrays[key]))
+    r.skip_data()
+    arrays = [jax.device_put(arr, device) for device, arr in per_device]
+    return jax.make_array_from_single_device_arrays(shape, sharding, arrays)
+
+
+def _index_key(index, shape) -> Tuple:
+    out = []
+    for sl, dim in zip(index, shape):
+        start, stop, _ = sl.indices(dim)
+        out.append((start, stop))
+    return tuple(out)
+
+
+def _read_shard(r: ScdaReader, spec_, index, shape, dtype) -> np.ndarray:
+    itemsize = np.dtype(dtype).itemsize
+    runs = layout.shard_runs(shape, index, itemsize)
+    shard_shape = tuple(sl.indices(dim)[1] - sl.indices(dim)[0]
+                        for sl, dim in zip(index, shape)) if shape else ()
+    buf = bytearray(int(np.prod(shard_shape, dtype=np.int64)) * itemsize
+                    if shard_shape else itemsize)
+    if spec_["compressed"]:
+        _fill_from_chunks(r, spec_, runs, buf)
+    else:
+        if runs:
+            got = r.read_array_windows([(g, n) for g, _, n in runs], 1)
+            for (g, loff, n), raw in zip(runs, got):
+                buf[loff:loff + n] = raw
+    arr = np.frombuffer(bytes(buf), dtype=dtype)
+    return arr.reshape(shard_shape)
+
+
+def _fill_from_chunks(r: ScdaReader, spec_, runs, buf: bytearray) -> None:
+    """Selective chunk reads: only chunks overlapping this shard's runs."""
+    chunk = spec_["chunk_bytes"]
+    needed = sorted({g // chunk
+                     for (g, _, n) in runs
+                     for g in range(g, g + n, chunk)} |
+                    {(g + n - 1) // chunk for (g, _, n) in runs if n})
+    if not needed:
+        return
+    chunks = dict(zip(needed, r.read_varray_elements(needed)))
+    for goff, loff, n in runs:
+        pos = 0
+        while pos < n:
+            ci, off = divmod(goff + pos, chunk)
+            take = min(n - pos, chunk - off)
+            data = chunks[ci]
+            buf[loff + pos:loff + pos + take] = data[off:off + take]
+            pos += take
+
+
+def _unflatten_names(flat: Dict[str, Any]):
+    """Rebuild a nested dict from 'a/b/c' names (like=None restores)."""
+    root: Dict[str, Any] = {}
+    for name, value in flat.items():
+        parts = name.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = value
+    return root

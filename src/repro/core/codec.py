@@ -1,0 +1,123 @@
+"""Per-element transparent compression convention (paper §3).
+
+Two-stage algorithm (§3.1), applied to a block's data or to each array
+element independently:
+
+  stage 1:  8-byte big-endian uncompressed size ‖ b'z' ‖ RFC1950/1951
+            deflate stream (any legal level; we default to zlib level 9,
+            the paper's recommendation of "zlib's best compression").
+  stage 2:  base64, broken into lines of 76 code bytes + a 2-byte break
+            ("=\n" Unix, "\r\n" MIME), including after the final short line.
+
+On reading, the length is known from file context; base64-decode, read the
+size from the first 8 bytes, check the 'z' tag at byte 9, inflate, and verify
+the three redundant checks (§3.1): the adler32 inside zlib, the size match,
+and the 'z' marker.
+
+Convention magic user strings (§3.2–3.4), version (00)₁₆:
+  block        : I("B compressed scda 00", U-entry) ; B(user, compressed)
+  fixed array  : I("A compressed scda 00", U-entry) ; V(user, N, compressed…)
+  var. array   : A("V compressed scda 00", N, 32, U-entries) ; V(user, N, …)
+"""
+from __future__ import annotations
+
+import base64
+import struct
+import zlib
+from typing import List, Sequence
+
+from repro.core import spec
+from repro.core.errors import ScdaError, ScdaErrorCode
+
+#: Magic user strings identifying the compression convention (§3.2).
+MAGIC_BLOCK = b"B compressed scda 00"
+MAGIC_ARRAY = b"A compressed scda 00"
+MAGIC_VARRAY = b"V compressed scda 00"
+MAGIC_BY_TYPE = {b"B": MAGIC_BLOCK, b"A": MAGIC_ARRAY, b"V": MAGIC_VARRAY}
+
+_B64_LINE = 76
+_LINE_BREAK = {spec.UNIX: b"=\n", spec.MIME: b"\r\n"}
+
+#: zlib level.  The paper recommends Z_BEST_COMPRESSION (9); §Perf
+#: checkpoint-I/O iteration CK2 measured level 6 at 12x the deflate
+#: throughput of level 9 at IDENTICAL ratio on checkpoint-like payloads
+#: (level 9 burns its time on the incompressible half), so the library
+#: default is 6 (REPRO_ZLIB_LEVEL overrides; 9 reproduces the paper's
+#: recommendation, 0 is legal for zlib-free writers).
+import os as _os
+DEFAULT_LEVEL = int(_os.environ.get("REPRO_ZLIB_LEVEL", "6"))
+
+
+def compress(data: bytes, style: str = spec.UNIX,
+             level: int = DEFAULT_LEVEL) -> bytes:
+    """Apply the two-stage §3.1 algorithm to one data item."""
+    stage1 = struct.pack(">Q", len(data)) + b"z" + zlib.compress(data, level)
+    encoded = base64.b64encode(stage1)
+    brk = _LINE_BREAK[style]
+    lines: List[bytes] = []
+    for i in range(0, len(encoded), _B64_LINE):
+        lines.append(encoded[i:i + _B64_LINE])
+        lines.append(brk)
+    if not encoded:  # zero-byte stage1 cannot happen (≥ 9 bytes), but be safe
+        lines.append(brk)
+    # "The same two bytes are added after the last line of encoding if it is
+    # short of 76 bytes." — a full final line already got its break above; an
+    # exact multiple of 76 therefore ends with exactly one break.
+    return b"".join(lines)
+
+
+def decompress(stream: bytes) -> bytes:
+    """Invert :func:`compress`; enforce the three redundant checks (§3.1).
+
+    The stage-2 stream has exact structure: zero or more chunks of 76 code
+    bytes + 2 break bytes, with the final chunk allowed to be shorter
+    (r code bytes + 2 break bytes, 0 < r ≤ 76).  The 2 break bytes are
+    "arbitrary" per §3.1, so we validate only the geometry, not their value.
+    """
+    if len(stream) < 2:
+        raise ScdaError(ScdaErrorCode.CORRUPT_ENCODING,
+                        f"stage-2 stream only {len(stream)} bytes")
+    code = bytearray()
+    i, L = 0, len(stream)
+    while i < L:
+        chunk = stream[i:i + _B64_LINE + 2]
+        if len(chunk) < 3:  # a chunk must hold ≥ 1 code byte + 2 break bytes
+            raise ScdaError(ScdaErrorCode.CORRUPT_ENCODING,
+                            "truncated base64 line")
+        code += chunk[:-2]
+        i += len(chunk)
+    try:
+        stage1 = base64.b64decode(bytes(code), validate=True)
+    except Exception as e:
+        raise ScdaError(ScdaErrorCode.CORRUPT_ENCODING,
+                        f"base64 decode failed: {e}") from e
+    if len(stage1) < 9:
+        raise ScdaError(ScdaErrorCode.CORRUPT_ENCODING,
+                        f"stage-1 stream only {len(stage1)} bytes")
+    (usize,) = struct.unpack(">Q", stage1[:8])
+    if stage1[8:9] != b"z":
+        raise ScdaError(ScdaErrorCode.CORRUPT_ENCODING,
+                        f"missing 'z' marker, got {stage1[8:9]!r}")
+    try:
+        raw = zlib.decompress(stage1[9:])  # adler32 verified inside zlib
+    except zlib.error as e:
+        raise ScdaError(ScdaErrorCode.CORRUPT_CHECKSUM, str(e)) from e
+    if len(raw) != usize:
+        raise ScdaError(ScdaErrorCode.CORRUPT_CHECKSUM,
+                        f"inflated {len(raw)} bytes, header says {usize}")
+    return raw
+
+
+def compress_elements(elements: Sequence[bytes], style: str = spec.UNIX,
+                      level: int = DEFAULT_LEVEL) -> List[bytes]:
+    """Per-element compression for array sections (§3.3/§3.4)."""
+    return [compress(e, style, level) for e in elements]
+
+
+def uncompressed_size_entry(u: int, style: str = spec.UNIX) -> bytes:
+    """The 32-byte 'U' entry of Fig. 6 / Fig. 7."""
+    return spec.count_entry(b"U", u, style)
+
+
+def parse_uncompressed_size_entry(entry: bytes) -> int:
+    return spec.parse_count_entry(entry, b"U")

@@ -1,0 +1,73 @@
+"""Serial (in-memory) section encoders — the byte oracle for the format.
+
+These functions produce the complete on-disk bytes of each section from the
+*global* data.  They define serial-equivalence: the parallel writer must
+produce byte-identical output for any partition.  Tests compare the parallel
+writer against these oracles, and the parallel writer itself reuses them for
+rank-0-owned metadata.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+from repro.core import spec
+from repro.core.errors import ScdaError, ScdaErrorCode
+
+
+def encode_inline(user_string: bytes, data: bytes, style: str = spec.UNIX) -> bytes:
+    """Inline section I (paper §2.3, Fig. 2): exactly 32 unpadded data bytes."""
+    if len(data) != spec.INLINE_DATA_BYTES:
+        raise ScdaError(ScdaErrorCode.ARG_INLINE_SIZE, f"{len(data)} bytes")
+    out = spec.section_header(b"I", user_string, style) + data
+    assert len(out) == spec.INLINE_SECTION_BYTES
+    return out
+
+
+def encode_block(user_string: bytes, data: bytes, style: str = spec.UNIX) -> bytes:
+    """Block section B (paper §2.4, Fig. 3)."""
+    E = len(data)
+    out = (spec.section_header(b"B", user_string, style)
+           + spec.count_entry(b"E", E, style)
+           + data
+           + spec.pad_data(E, data[-1] if E else None, style))
+    assert len(out) == spec.block_section_bytes(E)
+    return out
+
+
+def encode_array(user_string: bytes, data: bytes, N: int, E: int,
+                 style: str = spec.UNIX) -> bytes:
+    """Fixed-size array section A (paper §2.5, Fig. 4)."""
+    if len(data) != N * E:
+        raise ScdaError(ScdaErrorCode.ARG_DATA_SIZE,
+                        f"{len(data)} bytes != N*E = {N * E}")
+    n = N * E
+    out = (spec.section_header(b"A", user_string, style)
+           + spec.count_entry(b"N", N, style)
+           + spec.count_entry(b"E", E, style)
+           + data
+           + spec.pad_data(n, data[-1] if n else None, style))
+    assert len(out) == spec.array_section_bytes(N, E)
+    return out
+
+
+def encode_varray(user_string: bytes, elements: Sequence[bytes],
+                  style: str = spec.UNIX) -> bytes:
+    """Variable-size array section V (paper §2.6, Fig. 5)."""
+    N = len(elements)
+    sizes = [len(e) for e in elements]
+    data = b"".join(elements)
+    n = len(data)
+    parts = [spec.section_header(b"V", user_string, style),
+             spec.count_entry(b"N", N, style)]
+    parts += [spec.count_entry(b"E", s, style) for s in sizes]
+    parts.append(data)
+    parts.append(spec.pad_data(n, data[-1] if n else None, style))
+    out = b"".join(parts)
+    assert len(out) == spec.varray_section_bytes(N, n)
+    return out
+
+
+def encode_file(vendor: bytes, user_string: bytes, sections: Sequence[bytes],
+                style: str = spec.UNIX) -> bytes:
+    """A complete file: header F followed by pre-encoded sections, no gaps."""
+    return spec.file_header(vendor, user_string, style) + b"".join(sections)

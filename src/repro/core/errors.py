@@ -1,0 +1,94 @@
+"""Error taxonomy for the scda format library (paper §A.6).
+
+The paper mandates that file errors never crash a simulation: every API call
+reports an error code that the caller can react to.  In Python we raise
+:class:`ScdaError` carrying an :class:`ScdaErrorCode`; the training loop
+catches these and keeps running (fault tolerance).  ``ferror_string`` mirrors
+``scda_ferror_string`` for code→string translation.
+
+Three groups of checked runtime errors (paper §A.6):
+  (1) corrupt file contents,
+  (2) file system errors,
+  (3) semantically invalid input parameters or call sequence.
+"""
+from __future__ import annotations
+
+import enum
+
+
+class ScdaErrorCode(enum.IntEnum):
+    SUCCESS = 0
+
+    # -- group 1: corrupt file contents ------------------------------------
+    CORRUPT_MAGIC = 101          # bad magic bytes / unsupported version
+    CORRUPT_PADDING = 102        # '-' or '=' padding malformed
+    CORRUPT_COUNT = 103          # count entry not a valid decimal
+    CORRUPT_SECTION_TYPE = 104   # section letter not in {I,B,A,V}
+    CORRUPT_TRUNCATED = 105      # file ends mid-section
+    CORRUPT_ENCODING = 106       # §3 compression convention violated
+    CORRUPT_CHECKSUM = 107       # adler32 / size mismatch on inflate
+
+    # -- group 2: file system errors ----------------------------------------
+    FS_OPEN = 201
+    FS_READ = 202
+    FS_WRITE = 203
+    FS_CLOSE = 204
+
+    # -- group 3: invalid parameters / call sequence ------------------------
+    ARG_USER_STRING = 301        # user string exceeds 58 bytes
+    ARG_VENDOR_STRING = 302      # vendor string exceeds 20 bytes
+    ARG_COUNT_RANGE = 303        # count negative or > 26 decimal digits
+    ARG_INLINE_SIZE = 304        # inline data not exactly 32 bytes
+    ARG_PARTITION = 305          # partition counts inconsistent / non-collective
+    ARG_MODE = 306               # bad open mode
+    ARG_SEQUENCE = 307           # reading functions improperly composed
+    ARG_DATA_SIZE = 308          # local data does not match declared sizes
+
+
+_ERROR_STRINGS = {
+    ScdaErrorCode.SUCCESS: "success",
+    ScdaErrorCode.CORRUPT_MAGIC: "corrupt file: bad magic bytes or unsupported scda version",
+    ScdaErrorCode.CORRUPT_PADDING: "corrupt file: malformed padding",
+    ScdaErrorCode.CORRUPT_COUNT: "corrupt file: malformed count entry",
+    ScdaErrorCode.CORRUPT_SECTION_TYPE: "corrupt file: unknown section type",
+    ScdaErrorCode.CORRUPT_TRUNCATED: "corrupt file: unexpected end of file",
+    ScdaErrorCode.CORRUPT_ENCODING: "corrupt file: compression convention violated",
+    ScdaErrorCode.CORRUPT_CHECKSUM: "corrupt file: checksum or size mismatch on decompression",
+    ScdaErrorCode.FS_OPEN: "file system: cannot open file",
+    ScdaErrorCode.FS_READ: "file system: read failed",
+    ScdaErrorCode.FS_WRITE: "file system: write failed",
+    ScdaErrorCode.FS_CLOSE: "file system: close failed",
+    ScdaErrorCode.ARG_USER_STRING: "invalid argument: user string exceeds 58 bytes",
+    ScdaErrorCode.ARG_VENDOR_STRING: "invalid argument: vendor string exceeds 20 bytes",
+    ScdaErrorCode.ARG_COUNT_RANGE: "invalid argument: count out of 26-decimal-digit range",
+    ScdaErrorCode.ARG_INLINE_SIZE: "invalid argument: inline data must be exactly 32 bytes",
+    ScdaErrorCode.ARG_PARTITION: "invalid argument: inconsistent partition",
+    ScdaErrorCode.ARG_MODE: "invalid argument: bad file open mode",
+    ScdaErrorCode.ARG_SEQUENCE: "invalid argument: improper call sequence",
+    ScdaErrorCode.ARG_DATA_SIZE: "invalid argument: local data size mismatch",
+}
+
+
+class ScdaError(Exception):
+    """Exception carrying an scda error code (paper §A.6)."""
+
+    def __init__(self, code: ScdaErrorCode, detail: str = ""):
+        self.code = ScdaErrorCode(code)
+        self.detail = detail
+        msg = ferror_string(self.code)
+        if detail:
+            msg = f"{msg}: {detail}"
+        super().__init__(msg)
+
+    @property
+    def group(self) -> int:
+        """Error group per paper §A.6: 1 corrupt, 2 file system, 3 usage."""
+        return int(self.code) // 100
+
+
+def ferror_string(code: int) -> str:
+    """Translate an error code to a string (paper §A.6.1, non-collective)."""
+    try:
+        return _ERROR_STRINGS[ScdaErrorCode(code)]
+    except (ValueError, KeyError):
+        return f"unknown scda error code {code}"

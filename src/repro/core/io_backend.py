@@ -1,0 +1,95 @@
+"""Positioned file I/O — the MPI-IO role (``MPI_File_write_at``) in scda.
+
+Every rank holds its own descriptor onto the shared file and performs
+positioned reads/writes at offsets computed *deterministically* from
+collective section parameters.  No rank ever seeks relative to another —
+that independence is what makes the write path scale and the bytes
+partition-independent.
+
+On a parallel file system (Lustre, GPFS) this maps 1:1 to MPI-IO or
+per-node POSIX pwrite; on this container it is plain POSIX.  File-system
+errors are translated to the paper's group-2 error codes.
+"""
+from __future__ import annotations
+
+import os
+from typing import Union
+
+from repro.core.errors import ScdaError, ScdaErrorCode
+
+BytesLike = Union[bytes, bytearray, memoryview]
+
+
+class FileBackend:
+    """One rank's positioned-I/O handle on the shared file."""
+
+    def __init__(self, path: str, mode: str, create: bool) -> None:
+        self.path = path
+        self.mode = mode
+        flags = os.O_RDONLY
+        if mode == "w":
+            # fopen('w') semantics (§A.3): create new or truncate existing.
+            flags = os.O_RDWR | os.O_CREAT
+            if create:
+                flags |= os.O_TRUNC
+        try:
+            self.fd = os.open(path, flags, 0o644)
+        except OSError as e:
+            raise ScdaError(ScdaErrorCode.FS_OPEN, f"{path}: {e}") from e
+
+    def pwrite(self, offset: int, data: BytesLike) -> None:
+        try:
+            view = memoryview(data)
+            written = 0
+            while written < len(view):
+                written += os.pwrite(self.fd, view[written:], offset + written)
+        except OSError as e:
+            raise ScdaError(ScdaErrorCode.FS_WRITE,
+                            f"{self.path}@{offset}: {e}") from e
+
+    def pread(self, offset: int, n: int) -> bytes:
+        try:
+            chunks = []
+            got = 0
+            while got < n:
+                chunk = os.pread(self.fd, n - got, offset + got)
+                if not chunk:
+                    raise ScdaError(
+                        ScdaErrorCode.CORRUPT_TRUNCATED,
+                        f"{self.path}: EOF at {offset + got}, wanted {n}")
+                chunks.append(chunk)
+                got += len(chunk)
+            return b"".join(chunks)
+        except OSError as e:
+            raise ScdaError(ScdaErrorCode.FS_READ,
+                            f"{self.path}@{offset}: {e}") from e
+
+    def size(self) -> int:
+        try:
+            return os.fstat(self.fd).st_size
+        except OSError as e:
+            raise ScdaError(ScdaErrorCode.FS_READ, str(e)) from e
+
+    def truncate(self, n: int) -> None:
+        try:
+            os.ftruncate(self.fd, n)
+        except OSError as e:
+            raise ScdaError(ScdaErrorCode.FS_WRITE, str(e)) from e
+
+    def fsync(self) -> None:
+        try:
+            os.fsync(self.fd)
+        except OSError as e:
+            raise ScdaError(ScdaErrorCode.FS_WRITE, str(e)) from e
+
+    def close(self, sync: bool = False) -> None:
+        if self.fd < 0:
+            return
+        try:
+            if sync:
+                os.fsync(self.fd)
+            os.close(self.fd)
+        except OSError as e:
+            raise ScdaError(ScdaErrorCode.FS_CLOSE, str(e)) from e
+        finally:
+            self.fd = -1

@@ -1,0 +1,301 @@
+"""Byte-exact primitives of the scda format (paper §2).
+
+Everything in this module is a pure function over ``bytes`` — no I/O, no
+parallelism.  The parallel writer/reader and the serial oracle encoder are
+built strictly on top of these primitives, so format conformance is testable
+in one place.
+
+Layout summary (paper Figures 1–5):
+
+  file header F (128 B) = magic(7) ' ' pad('-', vendor → 24)        | 32 B
+                          'F' ' ' pad('-', user → 62)               | 64 B
+                          pad('=', 0 data bytes → 32)               | 32 B
+  inline I     (96 B)  = 'I' ' ' pad('-', user → 62)  + data(32)
+  block B              = 'B' ' ' pad('-', user → 62)
+                         'E' ' ' pad('-', decimal E → 30)
+                         data(E) + pad('=')
+  array A              = 'A' header + 'N' entry + 'E' entry + data(N·E) + pad('=')
+  varray V             = 'V' header + 'N' entry + N × 'E' entries + data(ΣEᵢ) + pad('=')
+
+Two padding disciplines (§2.1):
+  pad('-' to d):  input n ≤ d−4 →  ' ' + (p−3)ד-” + q,  p = d−n,
+                  q = "-\n" (Unix) | "\r\n" (MIME).  Invertible from the right.
+  pad('=' mod D): D = 32, p ∈ [7, 38] unique with (n+p) % 32 == 0,
+                  = P + Qד=” + R with P/Q/R per Table 1; ends in a blank line.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.core.errors import ScdaError, ScdaErrorCode
+
+# --------------------------------------------------------------------------
+# Format constants (paper §2, Figure 1)
+# --------------------------------------------------------------------------
+
+#: scda format identifier byte (paper Fig. 1): (da)₁₆ = 218.
+MAGIC_IDENT = 0xDA
+#: Current format version (paper Fig. 1): counts from (a0)₁₆ to (ff)₁₆.
+FORMAT_VERSION = 0xA0
+#: The 7 magic bytes, ``sc%02xt%02x`` → b"scdata0" for version a0.
+MAGIC = b"sc%02xt%02x" % (MAGIC_IDENT, FORMAT_VERSION)
+assert MAGIC == b"scdata0" and len(MAGIC) == 7
+
+#: Entry geometry.
+VENDOR_FIELD = 24          # vendor string padded width (Fig. 1)
+VENDOR_MAX = VENDOR_FIELD - 4          # = 20
+USER_FIELD = 62            # user string padded width (Figs. 1–5)
+USER_MAX = USER_FIELD - 4              # = 58
+COUNT_FIELD = 30           # decimal count padded width (Figs. 3–5)
+COUNT_MAX_DIGITS = COUNT_FIELD - 4     # = 26
+COUNT_MAX = 10**COUNT_MAX_DIGITS - 1
+COUNT_ENTRY_BYTES = 32     # letter + ' ' + padded count
+SECTION_HEADER_BYTES = 64  # type letter + ' ' + padded user string
+DATA_PAD_DIV = 32          # D in §2.1.2
+FILE_HEADER_BYTES = 128
+INLINE_DATA_BYTES = 32
+INLINE_SECTION_BYTES = SECTION_HEADER_BYTES + INLINE_DATA_BYTES  # 96
+
+SECTION_TYPES = (b"I", b"B", b"A", b"V")
+
+#: Line-break styles (§2.1): the writer chooses; readers accept either.
+UNIX = "unix"
+MIME = "mime"
+_FIXED_Q = {UNIX: b"-\n", MIME: b"\r\n"}
+
+
+# --------------------------------------------------------------------------
+# §2.1.1 — '-' padding of strings and counts to a fixed width
+# --------------------------------------------------------------------------
+
+def pad_fixed(data: bytes, d: int, style: str = UNIX) -> bytes:
+    """Right-pad ``data`` (n ≤ d−4) to exactly ``d`` bytes per §2.1.1 (1)."""
+    n = len(data)
+    if n > d - 4:
+        raise ScdaError(ScdaErrorCode.ARG_USER_STRING,
+                        f"{n} bytes exceeds field capacity {d - 4}")
+    p = d - n
+    return data + b" " + b"-" * (p - 3) + _FIXED_Q[style]
+
+
+def unpad_fixed(padded: bytes, d: int) -> bytes:
+    """Invert :func:`pad_fixed`: parse from the right to infer p, return data.
+
+    Either line-break style is accepted (§2.1: the writer's choice has no
+    effect on reading).  Raises CORRUPT_PADDING on malformed padding.
+    """
+    if len(padded) != d:
+        raise ScdaError(ScdaErrorCode.CORRUPT_PADDING,
+                        f"field is {len(padded)} bytes, expected {d}")
+    q = padded[-2:]
+    if q not in (b"-\n", b"\r\n"):
+        raise ScdaError(ScdaErrorCode.CORRUPT_PADDING,
+                        f"bad terminal bytes {q!r}")
+    # Scan dashes backwards from d-3 until the single space separator.
+    i = d - 3
+    while i >= 0 and padded[i:i + 1] == b"-":
+        i -= 1
+    if i < 0 or padded[i:i + 1] != b" ":
+        raise ScdaError(ScdaErrorCode.CORRUPT_PADDING,
+                        "missing space before dash padding")
+    n = i
+    p = d - n
+    if p < 4:
+        raise ScdaError(ScdaErrorCode.CORRUPT_PADDING,
+                        f"padding only {p} bytes, minimum is 4")
+    return padded[:n]
+
+
+# --------------------------------------------------------------------------
+# §2.1.2 — '=' padding of data bytes to a multiple of 32
+# --------------------------------------------------------------------------
+
+def data_pad_length(n: int) -> int:
+    """The unique p ∈ [7, 38] with (n + p) divisible by 32."""
+    p = (-n) % DATA_PAD_DIV
+    if p < 7:
+        p += DATA_PAD_DIV
+    return p
+
+
+def pad_data(n: int, last_byte: Optional[int], style: str = UNIX) -> bytes:
+    """The data padding for ``n`` input bytes whose final byte is ``last_byte``.
+
+    ``last_byte`` is ``None`` iff n == 0.  Per §2.1.2 and Table 1:
+    P = "==" if the input ends in a line feed, else "\\n=" (Unix) / "\\r\\n"
+    (MIME); then Q '=' bytes and R = "\\n\\n" (Unix) / "\\r\\n\\r\\n" (MIME).
+    """
+    p = data_pad_length(n)
+    if n > 0 and last_byte == 0x0A:
+        head = b"=="
+    elif style == MIME:
+        head = b"\r\n"
+    else:
+        head = b"\n="
+    if style == MIME:
+        return head + b"=" * (p - 6) + b"\r\n\r\n"
+    return head + b"=" * (p - 4) + b"\n\n"
+
+
+def check_data_pad(pad: bytes, n: int, last_byte: Optional[int]) -> None:
+    """Validate data padding leniently.
+
+    §2.1.2: "If neither MIME nor Unix line endings are desired, the data
+    padding may consist of p arbitrary bytes" — so only the *length* is
+    normative.  We still sanity-check the length (the byte count is always
+    inferable from the preceding file contents).
+    """
+    if len(pad) != data_pad_length(n):
+        raise ScdaError(ScdaErrorCode.CORRUPT_PADDING,
+                        f"data padding is {len(pad)} bytes, expected "
+                        f"{data_pad_length(n)} for {n} data bytes")
+
+
+# --------------------------------------------------------------------------
+# Count entries ('E', 'N', and the §3 'U' convention)
+# --------------------------------------------------------------------------
+
+def format_count(value: int) -> bytes:
+    """Decimal without leading spaces or zeros (§2.4), ≤ 26 digits."""
+    if not isinstance(value, int) or isinstance(value, bool):
+        raise ScdaError(ScdaErrorCode.ARG_COUNT_RANGE, f"{value!r} not an int")
+    if value < 0 or value > COUNT_MAX:
+        raise ScdaError(ScdaErrorCode.ARG_COUNT_RANGE, str(value))
+    return str(value).encode("ascii")
+
+
+def count_entry(letter: bytes, value: int, style: str = UNIX) -> bytes:
+    """A 32-byte count entry: letter, ' ', decimal padded('-' to 30)."""
+    assert len(letter) == 1
+    return letter + b" " + pad_fixed(format_count(value), COUNT_FIELD, style)
+
+
+def parse_count_entry(entry: bytes, letter: bytes) -> int:
+    """Parse and validate a 32-byte count entry."""
+    if len(entry) != COUNT_ENTRY_BYTES:
+        raise ScdaError(ScdaErrorCode.CORRUPT_TRUNCATED,
+                        f"count entry is {len(entry)} bytes")
+    if entry[0:1] != letter or entry[1:2] != b" ":
+        raise ScdaError(ScdaErrorCode.CORRUPT_COUNT,
+                        f"expected {letter!r} entry, got {entry[:2]!r}")
+    digits = unpad_fixed(entry[2:], COUNT_FIELD)
+    if not digits or not digits.isdigit():
+        raise ScdaError(ScdaErrorCode.CORRUPT_COUNT, repr(digits))
+    if len(digits) > COUNT_MAX_DIGITS:
+        raise ScdaError(ScdaErrorCode.CORRUPT_COUNT,
+                        f"{len(digits)} digits exceeds {COUNT_MAX_DIGITS}")
+    value = int(digits)
+    if str(value).encode() != digits:  # no leading zeros (except "0")
+        raise ScdaError(ScdaErrorCode.CORRUPT_COUNT,
+                        f"leading zeros in {digits!r}")
+    return value
+
+
+# --------------------------------------------------------------------------
+# Section headers and the file header
+# --------------------------------------------------------------------------
+
+def section_header(type_letter: bytes, user_string: bytes,
+                   style: str = UNIX) -> bytes:
+    """The 64-byte 'section type and user string' entry."""
+    assert len(type_letter) == 1
+    if len(user_string) > USER_MAX:
+        raise ScdaError(ScdaErrorCode.ARG_USER_STRING,
+                        f"{len(user_string)} > {USER_MAX}")
+    return type_letter + b" " + pad_fixed(user_string, USER_FIELD, style)
+
+
+def parse_section_header(entry: bytes) -> Tuple[bytes, bytes]:
+    """Parse a 64-byte section header → (type letter, user string)."""
+    if len(entry) != SECTION_HEADER_BYTES:
+        raise ScdaError(ScdaErrorCode.CORRUPT_TRUNCATED,
+                        f"section header is {len(entry)} bytes")
+    letter = entry[0:1]
+    if entry[1:2] != b" ":
+        raise ScdaError(ScdaErrorCode.CORRUPT_SECTION_TYPE,
+                        f"missing separator after type {letter!r}")
+    user = unpad_fixed(entry[2:], USER_FIELD)
+    return letter, user
+
+
+def file_header(vendor: bytes, user_string: bytes, style: str = UNIX,
+                version: int = FORMAT_VERSION) -> bytes:
+    """The 128-byte file header section F (paper Fig. 1)."""
+    if len(vendor) > VENDOR_MAX:
+        raise ScdaError(ScdaErrorCode.ARG_VENDOR_STRING,
+                        f"{len(vendor)} > {VENDOR_MAX}")
+    if not (0xA0 <= version <= 0xFF):
+        raise ScdaError(ScdaErrorCode.ARG_COUNT_RANGE,
+                        f"version {version:#x} outside [a0, ff]")
+    magic = b"sc%02xt%02x" % (MAGIC_IDENT, version)
+    row1 = magic + b" " + pad_fixed(vendor, VENDOR_FIELD, style)
+    row2 = section_header(b"F", user_string, style)
+    row3 = pad_data(0, None, style)  # zero data bytes → 32 pad bytes
+    out = row1 + row2 + row3
+    assert len(out) == FILE_HEADER_BYTES
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class FileHeader:
+    version: int
+    vendor: bytes
+    user_string: bytes
+
+
+def parse_file_header(buf: bytes) -> FileHeader:
+    """Parse and validate the 128-byte file header."""
+    if len(buf) != FILE_HEADER_BYTES:
+        raise ScdaError(ScdaErrorCode.CORRUPT_TRUNCATED,
+                        f"file header is {len(buf)} bytes")
+    magic = buf[:7]
+    if magic[:2] != b"sc" or magic[4:5] != b"t":
+        raise ScdaError(ScdaErrorCode.CORRUPT_MAGIC, repr(magic))
+    try:
+        ident = int(magic[2:4], 16)
+        version = int(magic[5:7], 16)
+    except ValueError as e:
+        raise ScdaError(ScdaErrorCode.CORRUPT_MAGIC, repr(magic)) from e
+    if ident != MAGIC_IDENT:
+        raise ScdaError(ScdaErrorCode.CORRUPT_MAGIC,
+                        f"identifier {ident:#x} is not scda ({MAGIC_IDENT:#x})")
+    if not (0xA0 <= version <= 0xFF):
+        raise ScdaError(ScdaErrorCode.CORRUPT_MAGIC,
+                        f"version {version:#x} outside [a0, ff]")
+    if buf[7:8] != b" ":
+        raise ScdaError(ScdaErrorCode.CORRUPT_MAGIC, "missing magic separator")
+    vendor = unpad_fixed(buf[8:32], VENDOR_FIELD)
+    letter, user = parse_section_header(buf[32:96])
+    if letter != b"F":
+        raise ScdaError(ScdaErrorCode.CORRUPT_SECTION_TYPE,
+                        f"file header section letter {letter!r}")
+    check_data_pad(buf[96:128], 0, None)
+    return FileHeader(version=version, vendor=vendor, user_string=user)
+
+
+# --------------------------------------------------------------------------
+# Section size arithmetic (used by writer/reader cursor bookkeeping)
+# --------------------------------------------------------------------------
+
+def padded_data_bytes(n: int) -> int:
+    """Bytes occupied on disk by an n-byte data payload plus its padding."""
+    return n + data_pad_length(n)
+
+
+def inline_section_bytes() -> int:
+    return INLINE_SECTION_BYTES
+
+
+def block_section_bytes(E: int) -> int:
+    return SECTION_HEADER_BYTES + COUNT_ENTRY_BYTES + padded_data_bytes(E)
+
+
+def array_section_bytes(N: int, E: int) -> int:
+    return (SECTION_HEADER_BYTES + 2 * COUNT_ENTRY_BYTES
+            + padded_data_bytes(N * E))
+
+
+def varray_section_bytes(N: int, total_data: int) -> int:
+    return (SECTION_HEADER_BYTES + (1 + N) * COUNT_ENTRY_BYTES
+            + padded_data_bytes(total_data))

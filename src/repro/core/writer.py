@@ -1,0 +1,375 @@
+"""Parallel scda writer (paper §A.3–A.4).
+
+All methods are collective over the communicator and must be called in the
+same order on every rank with identical collective parameters (paper §A.2:
+"it is an unchecked runtime error if they are indeed not collective" — we
+*do* check what is cheaply checkable).  Every rank computes the identical
+section layout from collective parameters and writes only its own windows
+via positioned writes; rank 0 writes section metadata; the rank owning the
+final data byte writes the '='-padding (its value depends on that byte).
+
+This mirrors MPI_File_write_at usage in the reference libsc implementation
+and keeps the file bytes invariant under the writing partition — the
+serial-equivalence property at the heart of the paper.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple, Union
+
+from repro.core import codec, partition, spec
+from repro.core.comm import Communicator, SerialComm
+from repro.core.errors import ScdaError, ScdaErrorCode
+from repro.core.io_backend import BytesLike, FileBackend
+
+DEFAULT_VENDOR = b"repro scda-jax 0.1"
+assert len(DEFAULT_VENDOR) <= spec.VENDOR_MAX
+
+#: A window is (element_start, buffer): ``buffer`` covers elements
+#: [element_start, element_start + len/E) of the section's global data.
+Window = Tuple[int, BytesLike]
+
+
+def _as_bytes(data: BytesLike) -> memoryview:
+    return memoryview(data).cast("B")
+
+
+class ScdaWriter:
+    """File context for mode 'w' (create new / overwrite, fopen semantics)."""
+
+    def __init__(self, comm: Communicator, path: str,
+                 user_string: bytes = b"",
+                 vendor: bytes = DEFAULT_VENDOR,
+                 style: str = spec.UNIX) -> None:
+        self.comm = comm
+        self.style = style
+        self._closed = False
+        self._backend = FileBackend(path, "w", create=(comm.rank == 0))
+        self.cursor = 0
+        # Root lays down the file header (Fig. 1); everyone syncs before any
+        # section writes so the truncate cannot clobber them.
+        comm.barrier()
+        if comm.rank == 0:
+            header = spec.file_header(vendor, user_string, style)
+            self._backend.truncate(0)
+            self._backend.pwrite(0, header)
+        self.cursor = spec.FILE_HEADER_BYTES
+        comm.barrier()
+
+    # -- context manager ----------------------------------------------------
+    def __enter__(self) -> "ScdaWriter":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
+
+    # ------------------------------------------------------------------ I --
+    def write_inline(self, user_string: bytes, data: Optional[BytesLike],
+                     root: int = 0) -> None:
+        """§A.4.1 — MPI_Bcast semantics: data is significant on root only."""
+        self._check_open()
+        if self.comm.rank == root:
+            if data is None or len(_as_bytes(data)) != spec.INLINE_DATA_BYTES:
+                raise ScdaError(ScdaErrorCode.ARG_INLINE_SIZE,
+                                f"got {0 if data is None else len(data)}")
+            buf = (spec.section_header(b"I", user_string, self.style)
+                   + bytes(_as_bytes(data)))
+            self._backend.pwrite(self.cursor, buf)
+        else:
+            spec.section_header(b"I", user_string, self.style)  # arg check
+        self.cursor += spec.INLINE_SECTION_BYTES
+
+    # ------------------------------------------------------------------ B --
+    def write_block(self, user_string: bytes, data: Optional[BytesLike],
+                    E: Optional[int] = None, root: int = 0,
+                    encode: bool = False) -> None:
+        """§A.4.2 — global data block from ``root``; optional §3 encoding."""
+        self._check_open()
+        if encode:
+            self._write_block_encoded(user_string, data, root)
+            return
+        if E is None:
+            E = self.comm.bcast(
+                len(_as_bytes(data)) if self.comm.rank == root else None, root)
+        if self.comm.rank == root:
+            view = _as_bytes(data)
+            if len(view) != E:
+                raise ScdaError(ScdaErrorCode.ARG_DATA_SIZE,
+                                f"block data {len(view)} != E {E}")
+            last = view[-1] if E else None
+            buf = (spec.section_header(b"B", user_string, self.style)
+                   + spec.count_entry(b"E", E, self.style)
+                   + bytes(view)
+                   + spec.pad_data(E, last, self.style))
+            self._backend.pwrite(self.cursor, buf)
+        self.cursor += spec.block_section_bytes(E)
+
+    def _write_block_encoded(self, user_string: bytes,
+                             data: Optional[BytesLike], root: int) -> None:
+        """§3.2 — I(magic, U-entry) followed by B(user, compressed)."""
+        if self.comm.rank == root:
+            view = _as_bytes(data)
+            u = len(view)
+            compressed = codec.compress(bytes(view), self.style)
+            meta = codec.uncompressed_size_entry(u, self.style)
+            self.write_inline(codec.MAGIC_BLOCK, meta, root)
+            # Compressed size must reach all ranks for cursor bookkeeping.
+            self.comm.bcast(len(compressed), root)
+            self.write_block(user_string, compressed, len(compressed), root)
+        else:
+            self.write_inline(codec.MAGIC_BLOCK, None, root)
+            csize = self.comm.bcast(None, root)
+            self.write_block(user_string, None, csize, root)
+
+    # ------------------------------------------------------------------ A --
+    def write_array(self, user_string: bytes,
+                    local_data: Union[BytesLike, Sequence[BytesLike], None],
+                    counts: Sequence[int], E: int,
+                    indirect: bool = False, encode: bool = False) -> None:
+        """§A.4.3 — fixed-size array under partition (N_q)_{<P}.
+
+        ``local_data``: the rank's N_p elements — one contiguous buffer, or
+        a sequence of N_p element buffers when ``indirect`` is true (lists
+        and tuples are auto-detected as indirect).
+        """
+        self._check_open()
+        indirect = indirect or isinstance(local_data, (list, tuple))
+        if len(counts) != self.comm.size:
+            raise ScdaError(ScdaErrorCode.ARG_PARTITION,
+                            f"{len(counts)} counts for {self.comm.size} ranks")
+        N = sum(counts)
+        if encode:
+            elements = self._local_elements(local_data, counts, E, indirect)
+            self.write_inline(
+                codec.MAGIC_ARRAY,
+                codec.uncompressed_size_entry(E, self.style)
+                if self.comm.rank == 0 else None, 0)
+            compressed = codec.compress_elements(elements, self.style)
+            self._write_varray_raw(user_string, compressed, counts, N)
+            return
+        local = self._flatten(local_data, counts, E, indirect)
+        header = (spec.section_header(b"A", user_string, self.style)
+                  + spec.count_entry(b"N", N, self.style)
+                  + spec.count_entry(b"E", E, self.style))
+        data_start = self.cursor + len(header)
+        if self.comm.rank == 0:
+            self._backend.pwrite(self.cursor, header)
+        off, length = partition.byte_range(counts, E, self.comm.rank)
+        if len(local) != length:
+            raise ScdaError(ScdaErrorCode.ARG_DATA_SIZE,
+                            f"local data {len(local)} != N_p*E {length}")
+        if length:
+            self._backend.pwrite(data_start + off, local)
+        self._write_array_padding(data_start, N * E,
+                                  [c * E for c in counts], local)
+        self.cursor = data_start + spec.padded_data_bytes(N * E)
+
+    def write_array_windows(self, user_string: bytes,
+                            windows: Sequence[Window],
+                            N: int, E: int,
+                            pad_last_byte: Optional[int] = None) -> None:
+        """Generalized A-section write for non-contiguous ownership.
+
+        The checkpoint layer uses this for 2-D-sharded tensors whose shards
+        decompose into multiple contiguous runs of the canonical (row-major)
+        element order.  ``windows`` are this rank's runs; collectively the
+        runs must tile [0, N) exactly once.  ``pad_last_byte`` must be the
+        value of the final data byte on the rank owning element N-1 (that
+        rank writes the padding); pass None elsewhere.  This is a strict
+        superset of :meth:`write_array` (which is the paper's contiguous
+        case) and writes byte-identical files.
+        """
+        self._check_open()
+        header = (spec.section_header(b"A", user_string, self.style)
+                  + spec.count_entry(b"N", N, self.style)
+                  + spec.count_entry(b"E", E, self.style))
+        data_start = self.cursor + len(header)
+        if self.comm.rank == 0:
+            self._backend.pwrite(self.cursor, header)
+        owns_last = False
+        for start, buf in windows:
+            view = _as_bytes(buf)
+            if len(view) % E:
+                raise ScdaError(ScdaErrorCode.ARG_DATA_SIZE,
+                                f"window not a multiple of E={E}")
+            if start * E + len(view) > N * E:
+                raise ScdaError(ScdaErrorCode.ARG_DATA_SIZE,
+                                "window exceeds array extent")
+            if len(view):
+                self._backend.pwrite(data_start + start * E, view)
+                if start * E + len(view) == N * E:
+                    owns_last = True
+                    if pad_last_byte is None:
+                        pad_last_byte = view[-1]
+        n = N * E
+        if owns_last:
+            self._backend.pwrite(data_start + n,
+                                 spec.pad_data(n, pad_last_byte, self.style))
+        elif n == 0 and self.comm.rank == 0:
+            self._backend.pwrite(data_start, spec.pad_data(0, None, self.style))
+        self.cursor = data_start + spec.padded_data_bytes(n)
+
+    # ------------------------------------------------------------------ V --
+    def write_varray(self, user_string: bytes,
+                     local_data: Union[BytesLike, Sequence[BytesLike], None],
+                     counts: Sequence[int],
+                     local_sizes: Sequence[int],
+                     per_rank_bytes: Optional[Sequence[int]] = None,
+                     indirect: bool = False, encode: bool = False) -> None:
+        """§A.4.4 — variable-size array.
+
+        ``local_sizes`` are (E_i) for this rank's elements; ``per_rank_bytes``
+        is the collective (S_q)_{<P} — per the paper we leave the allgather
+        to the caller, but compute it if None is passed.  Lists/tuples are
+        auto-detected as indirect addressing.
+        """
+        self._check_open()
+        indirect = indirect or isinstance(local_data, (list, tuple))
+        if len(counts) != self.comm.size:
+            raise ScdaError(ScdaErrorCode.ARG_PARTITION,
+                            f"{len(counts)} counts for {self.comm.size} ranks")
+        if len(local_sizes) != counts[self.comm.rank]:
+            raise ScdaError(ScdaErrorCode.ARG_PARTITION,
+                            f"{len(local_sizes)} sizes != N_p "
+                            f"{counts[self.comm.rank]}")
+        elements = self._split(local_data, local_sizes, indirect)
+        N = sum(counts)
+        if encode:
+            # §3.4 — A(magic, N, 32, U-entries) then V(user, compressed…).
+            self._write_u_entry_array(counts, local_sizes, N)
+            compressed = codec.compress_elements(
+                [bytes(e) for e in elements], self.style)
+            self._write_varray_raw(user_string, compressed, counts, N)
+            return
+        if per_rank_bytes is None:
+            per_rank_bytes = self.comm.allgather(sum(local_sizes))
+        self._write_varray_raw(user_string, elements, counts, N,
+                               per_rank_bytes)
+
+    def _write_varray_raw(self, user_string: bytes,
+                          local_elements: Sequence[BytesLike],
+                          counts: Sequence[int], N: int,
+                          per_rank_bytes: Optional[Sequence[int]] = None) \
+            -> None:
+        """Shared raw-V writer (also the §3.3/§3.4 compressed-data carrier)."""
+        local_sizes = [len(_as_bytes(e)) for e in local_elements]
+        if per_rank_bytes is None:
+            per_rank_bytes = self.comm.allgather(sum(local_sizes))
+        partition.validate(counts, N)
+        offs = partition.offsets(counts)
+        rank = self.comm.rank
+        header = (spec.section_header(b"V", user_string, self.style)
+                  + spec.count_entry(b"N", N, self.style))
+        entries_start = self.cursor + len(header)
+        data_start = entries_start + N * spec.COUNT_ENTRY_BYTES
+        if rank == 0:
+            self._backend.pwrite(self.cursor, header)
+        # Each rank writes its own E_i entries …
+        if counts[rank]:
+            entries = b"".join(spec.count_entry(b"E", s, self.style)
+                               for s in local_sizes)
+            self._backend.pwrite(
+                entries_start + offs[rank] * spec.COUNT_ENTRY_BYTES, entries)
+        # … and its own data window.
+        my_off, my_len = partition.var_byte_ranges(
+            counts, local_sizes, per_rank_bytes, rank)
+        if my_len:
+            flat = b"".join(bytes(_as_bytes(e)) for e in local_elements)
+            self._backend.pwrite(data_start + my_off, flat)
+            last_local = flat[-1]
+        else:
+            last_local = None
+        total = sum(per_rank_bytes)
+        self._write_varray_padding(data_start, total, per_rank_bytes,
+                                   last_local)
+        self.cursor = data_start + spec.padded_data_bytes(total)
+
+    def _write_u_entry_array(self, counts: Sequence[int],
+                             local_sizes: Sequence[int], N: int) -> None:
+        """The A("V compressed scda 00", N, 32, U-entries) metadata section."""
+        entries = [codec.uncompressed_size_entry(s, self.style)
+                   for s in local_sizes]
+        self.write_array(codec.MAGIC_VARRAY, entries, counts,
+                         spec.COUNT_ENTRY_BYTES, indirect=True)
+
+    # -- shared helpers -------------------------------------------------------
+    def _write_array_padding(self, data_start: int, n: int,
+                             rank_bytes: Sequence[int],
+                             local: memoryview) -> None:
+        last_rank = partition.last_nonempty_rank(rank_bytes)
+        if last_rank < 0:
+            if self.comm.rank == 0:
+                self._backend.pwrite(data_start,
+                                     spec.pad_data(0, None, self.style))
+        elif self.comm.rank == last_rank:
+            self._backend.pwrite(data_start + n,
+                                 spec.pad_data(n, local[-1], self.style))
+
+    def _write_varray_padding(self, data_start: int, total: int,
+                              per_rank_bytes: Sequence[int],
+                              last_local: Optional[int]) -> None:
+        last_rank = partition.last_nonempty_rank(per_rank_bytes)
+        if last_rank < 0:
+            if self.comm.rank == 0:
+                self._backend.pwrite(data_start,
+                                     spec.pad_data(0, None, self.style))
+        elif self.comm.rank == last_rank:
+            self._backend.pwrite(data_start + total,
+                                 spec.pad_data(total, last_local, self.style))
+
+    def _flatten(self, local_data, counts, E, indirect) -> memoryview:
+        if indirect:
+            elems = list(local_data or [])
+            if len(elems) != counts[self.comm.rank]:
+                raise ScdaError(ScdaErrorCode.ARG_PARTITION,
+                                f"{len(elems)} buffers != N_p")
+            for e in elems:
+                if len(_as_bytes(e)) != E:
+                    raise ScdaError(ScdaErrorCode.ARG_DATA_SIZE,
+                                    f"element is {len(e)} bytes, E={E}")
+            return memoryview(b"".join(bytes(_as_bytes(e)) for e in elems))
+        if local_data is None:
+            local_data = b""
+        return _as_bytes(local_data)
+
+    def _local_elements(self, local_data, counts, E, indirect) -> List[bytes]:
+        flat = self._flatten(local_data, counts, E, indirect)
+        np_ = counts[self.comm.rank]
+        return [bytes(flat[i * E:(i + 1) * E]) for i in range(np_)]
+
+    def _split(self, local_data, local_sizes, indirect) -> List[memoryview]:
+        if indirect:
+            elems = [_as_bytes(e) for e in (local_data or [])]
+            if [len(e) for e in elems] != list(local_sizes):
+                raise ScdaError(ScdaErrorCode.ARG_DATA_SIZE,
+                                "indirect buffer sizes != local_sizes")
+            return elems
+        flat = _as_bytes(local_data if local_data is not None else b"")
+        if len(flat) != sum(local_sizes):
+            raise ScdaError(ScdaErrorCode.ARG_DATA_SIZE,
+                            f"flat data {len(flat)} != Σ sizes "
+                            f"{sum(local_sizes)}")
+        out, pos = [], 0
+        for s in local_sizes:
+            out.append(flat[pos:pos + s])
+            pos += s
+        return out
+
+    def _check_open(self) -> None:
+        if self._closed:
+            raise ScdaError(ScdaErrorCode.ARG_SEQUENCE, "writer is closed")
+
+    def close(self) -> None:
+        """Collective close (§A.3.2); fsync before releasing."""
+        if self._closed:
+            return
+        self.comm.barrier()
+        self._backend.close(sync=True)
+        self._closed = True
+        self.comm.barrier()
+
+
+def fopen_write(comm: Optional[Communicator], path: str,
+                user_string: bytes = b"", vendor: bytes = DEFAULT_VENDOR,
+                style: str = spec.UNIX) -> ScdaWriter:
+    """``scda_fopen(..., 'w')`` — collective create/overwrite."""
+    return ScdaWriter(comm or SerialComm(), path, user_string, vendor, style)

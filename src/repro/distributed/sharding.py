@@ -1,0 +1,290 @@
+"""Divisibility-aware sharding rules: FSDP + TP (+ EP/SP) over the mesh.
+
+Rather than hand-writing PartitionSpecs per architecture, parameters carry
+*logical* roles inferred from their tree path and shape; ``spec_for``
+assigns mesh axes with divisibility checks and graceful fallback (e.g.
+granite's 49155-row vocab cannot take the 16-way model axis → the embedding
+shards on d_model instead; its 40 experts likewise fall back to
+expert-internal TP).  This is what makes every (arch × mesh) cell lower
+without per-arch special cases — and why the same rules hold on 256 or 512
+chips.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# --------------------------------------------------------------------------
+# Ambient mesh policy — lets model code place activation constraints without
+# threading mesh objects through every function.  No mesh set → no-ops, so
+# tests and single-device runs are unaffected.
+# --------------------------------------------------------------------------
+
+import dataclasses
+import threading
+
+
+@dataclasses.dataclass
+class Policy:
+    mesh: Optional[Mesh] = None
+    #: decode attention merges partial softmax over this axis via shard_map
+    #: when the KV cache is sequence-sharded (long-context SP decode).
+    sp_decode_axis: Optional[str] = None
+
+
+_POLICY = threading.local()
+
+
+def set_mesh(mesh: Optional[Mesh], sp_decode_axis: Optional[str] = None):
+    _POLICY.value = Policy(mesh=mesh, sp_decode_axis=sp_decode_axis)
+
+
+def get_policy() -> Policy:
+    return getattr(_POLICY, "value", None) or Policy()
+
+
+def model_axis_size() -> int:
+    mesh = get_policy().mesh
+    return int(mesh.shape[MODEL_AXIS]) if mesh is not None else 1
+
+
+def constrain(x, *logical):
+    """with_sharding_constraint by logical dim roles.
+
+    Roles per dim: None (unsharded), "batch" (data axes), "model", or
+    "seq_model"/"seq_data" for sequence-parallel layouts.  Roles whose mesh
+    axes do not divide the dim are dropped (correctness first).
+    """
+    policy = get_policy()
+    mesh = policy.mesh
+    if mesh is None:
+        return x
+    spec = []
+    for dim, role in zip(x.shape, logical):
+        if role is None:
+            spec.append(None)
+            continue
+        if role == "batch":
+            axes = data_axes(mesh)
+            ax = axes if len(axes) > 1 else axes[0]
+        elif role == "model" or role == "seq_model":
+            ax = MODEL_AXIS
+        elif role == "seq_data":
+            axes = data_axes(mesh)
+            ax = axes if len(axes) > 1 else axes[0]
+        else:
+            raise ValueError(role)
+        size = axis_size(mesh, ax)
+        spec.append(ax if dim % size == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))
+
+
+def padded_heads(n_heads: int) -> int:
+    """Round the head count up to a model-axis multiple (forward-time pad).
+
+    Archs whose head count does not divide the 16-way model axis (gemma3's
+    8, llama4's 40, granite's 24) get zero-weight phantom heads so the
+    uniform head-parallel attention layout applies everywhere; the phantom
+    heads' wo rows are zero, so outputs are exact.  The flop overhead is
+    visible in the roofline's useful-flop ratio.
+    """
+    m = model_axis_size()
+    if m <= 1 or n_heads % m == 0:
+        return n_heads
+    return ((n_heads + m - 1) // m) * m
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """The batch/FSDP axes: ('pod', 'data') when multi-pod, else ('data',)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+MODEL_AXIS = "model"
+
+
+def _divisible(dim: int, n: int) -> bool:
+    return n > 0 and dim % n == 0
+
+
+def best_spec(mesh: Mesh, shape: Sequence[int],
+              prefer_model: Sequence[int],
+              prefer_data: Sequence[int] = (),
+              skip: Sequence[int] = ()) -> P:
+    """Assign mesh axes to tensor dims.
+
+    ``prefer_model``: dim indices to try for the model (TP) axis, in order.
+    ``prefer_data``: dim indices to try for the FSDP axes (defaults to all
+    dims, largest first, excluding the model dim).
+    Dims that do not divide are skipped — correctness first.
+    """
+    ndim = len(shape)
+    assign: Dict[int, Any] = {}
+    msize = axis_size(mesh, MODEL_AXIS)
+    model_dim = None
+    for d in prefer_model:
+        if d < ndim and d not in skip and _divisible(shape[d], msize):
+            assign[d] = MODEL_AXIS
+            model_dim = d
+            break
+    daxes = data_axes(mesh)
+    dsize = axis_size(mesh, daxes)
+    cand = list(prefer_data) or sorted(
+        range(ndim), key=lambda i: -shape[i])
+    for d in cand:
+        if d < ndim and d != model_dim and d not in skip \
+                and _divisible(shape[d], dsize):
+            assign[d] = daxes if len(daxes) > 1 else daxes[0]
+            break
+    return P(*[assign.get(i) for i in range(ndim)])
+
+
+# --------------------------------------------------------------------------
+# Parameter rules by tree-path pattern (order matters: first match wins)
+# --------------------------------------------------------------------------
+# Stacked layer params carry a leading n_layers dim (never sharded); the
+# rule's dim indices are *relative to the unstacked tensor*.
+
+_RULES = [
+    # attention projections (d_model, H, hd) — TP on heads, hd fallback
+    (re.compile(r"(attn|cross)/w[qkv]$"), dict(model=[1, 2], data=[0])),
+    (re.compile(r"(attn|cross)/wo$"), dict(model=[0, 1], data=[2])),
+    # MoE: experts first (EP), else expert-internal d_ff TP
+    (re.compile(r"moe/router$"), dict(model=[1], data=[0])),
+    (re.compile(r"moe/w_(gate|up)$"), dict(model=[0, 2], data=[1])),
+    (re.compile(r"moe/w_down$"), dict(model=[0, 1], data=[2])),
+    (re.compile(r"shared/w_(gate|up)$"), dict(model=[1], data=[0])),
+    (re.compile(r"shared/w_down$"), dict(model=[0], data=[1])),
+    # dense MLPs — TP on d_ff
+    (re.compile(r"mlp/w_(gate|up)$"), dict(model=[1], data=[0])),
+    (re.compile(r"mlp/w_down$"), dict(model=[0], data=[1])),
+    # SSM: TP on d_inner (projections) / heads
+    (re.compile(r"ssm/in_[xz]$"), dict(model=[1], data=[0])),
+    (re.compile(r"ssm/in_(B|C|dt)$"), dict(model=[], data=[0])),
+    (re.compile(r"ssm/out_proj$"), dict(model=[0], data=[1])),
+    (re.compile(r"ssm/x_proj$"), dict(model=[0], data=[1])),
+    (re.compile(r"ssm/dt_proj$"), dict(model=[1], data=[0])),
+    (re.compile(r"ssm/(conv_w|conv_b|A_log|D|dt_bias|norm)$"),
+     dict(model=[0], data=[])),
+    # embeddings / unembeddings — vocab first, d_model fallback
+    (re.compile(r"^embed$"), dict(model=[0, 1], data=[1, 0])),
+    (re.compile(r"^lm_head$"), dict(model=[1, 0], data=[0, 1])),
+    (re.compile(r"^mm_proj$"), dict(model=[1], data=[0])),
+    # norms and 1-D params: replicated
+    (re.compile(r"(ln\w*|norm|final_norm|enc_norm)$"), dict(model=[], data=[])),
+]
+
+
+def param_spec(mesh: Mesh, name: str, shape: Sequence[int],
+               stacked: bool) -> P:
+    """PartitionSpec for a (possibly layer-stacked) parameter."""
+    off = 1 if stacked else 0
+    inner = shape[off:]
+    for pat, rule in _RULES:
+        if pat.search(name):
+            spec = best_spec(mesh, inner, rule["model"], rule["data"])
+            return P(*([None] * off), *spec)
+    # default: FSDP on the largest divisible dim
+    spec = best_spec(mesh, inner, prefer_model=[])
+    return P(*([None] * off), *spec)
+
+
+def params_shardings(mesh: Mesh, abstract_params) -> Any:
+    """NamedShardings for a whole (possibly stacked) param tree."""
+    from repro.checkpoint.pytree_io import flatten_named
+    named, treedef = flatten_named(abstract_params)
+    out = []
+    for name, leaf in named:
+        stacked = name.startswith(("layers/", "enc_layers/"))
+        short = name.split("/", 1)[1] if stacked else name
+        spec = param_spec(mesh, short, leaf.shape, stacked)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# --------------------------------------------------------------------------
+# Activation / input / cache shardings
+# --------------------------------------------------------------------------
+
+def batch_spec(mesh: Mesh, ndim: int, batch_divisible: bool = True) -> P:
+    """Shard dim 0 on the data axes (the DP rule for tokens/labels)."""
+    daxes = data_axes(mesh)
+    ax = daxes if len(daxes) > 1 else daxes[0]
+    return P(*((ax,) + (None,) * (ndim - 1)))
+
+
+def input_shardings(mesh: Mesh, kind: str, cfg, shape_cfg) -> Dict[str, Any]:
+    """NamedShardings for the step inputs of a given cell kind."""
+    daxes = data_axes(mesh)
+    dsize = axis_size(mesh, daxes)
+    dax = daxes if len(daxes) > 1 else daxes[0]
+    msize = axis_size(mesh, MODEL_AXIS)
+    out: Dict[str, P] = {}
+    B = shape_cfg.global_batch
+    batch = dax if B % dsize == 0 else None
+
+    if kind == "train":
+        out["tokens"] = P(batch, None)
+        out["labels"] = P(batch, None)
+        if cfg.family == "vlm":
+            out["patch_embeds"] = P(batch, None, MODEL_AXIS
+                                    if cfg.d_model % msize == 0 else None)
+        if cfg.family == "encdec":
+            out["enc_embeds"] = P(batch, None, None)
+        return {k: NamedSharding(mesh, v) for k, v in out.items()}
+
+    # decode: cache shardings
+    out["tokens"] = P(batch, None)
+    hd, Hkv = cfg.head_dim_, cfg.n_kv_heads
+    # KV cache (L, B, S, Hkv, hd): batch on data when divisible, else
+    # sequence-parallel (SP) cache sharding on data; heads/head_dim on model
+    if Hkv and Hkv % msize == 0:
+        kv_model_dim = 3
+    elif hd % msize == 0:
+        kv_model_dim = 4
+    else:
+        kv_model_dim = None
+    kv = [None] * 5
+    if batch is not None:
+        kv[1] = dax
+    else:
+        kv[2] = dax          # SP: shard cache sequence dim (long_500k)
+    if kv_model_dim is not None:
+        kv[kv_model_dim] = MODEL_AXIS
+    out["cache_k"] = P(*kv)
+    out["cache_v"] = P(*kv)
+    # SSM state (L, B, ...): batch on data; d_inner/heads dim on model
+    if cfg.ssm_type == "mamba1":
+        # h: (L,B,di,N), conv: (L,B,K-1,di)
+        out["ssm_h"] = P(None, batch,
+                         MODEL_AXIS if cfg.d_inner % msize == 0 else None,
+                         None)
+        out["ssm_conv"] = P(None, batch, None,
+                            MODEL_AXIS if cfg.d_inner % msize == 0 else None)
+    elif cfg.ssm_type == "mamba2":
+        # h: (L,B,H,N,P), conv: (L,B,K-1,di)
+        out["ssm_h"] = P(None, batch,
+                         MODEL_AXIS if cfg.ssm_heads % msize == 0 else None,
+                         None, None)
+        out["ssm_conv"] = P(None, batch, None,
+                            MODEL_AXIS if cfg.d_inner % msize == 0 else None)
+    if cfg.family == "encdec":
+        out["enc_out"] = P(batch, None, None)
+    return {k: NamedSharding(mesh, v) for k, v in out.items()}
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

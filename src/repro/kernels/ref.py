@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose ground truth)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """Naive softmax attention; q: (B, H, Sq, D); k/v: (B, Hkv, Skv, D)."""
+    B, H, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    rep = H // Hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    q_pos = jnp.arange(Sq)[:, None]
+    kv_pos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kv_pos <= q_pos
+    if window > 0:
+        mask &= (q_pos - kv_pos) < window
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask, p, 0.0)  # rows with no valid key → all-zero output
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ssm_scan_ref(decay, inc, C):
+    """Sequential SSM recurrence; decay/inc: (B,S,d,N); C: (B,S,N)."""
+    decay = decay.astype(jnp.float32)
+    inc = inc.astype(jnp.float32)
+    C = C.astype(jnp.float32)
+    B, S, d, N = decay.shape
+
+    def step(h, xs):
+        dec, ic, c = xs
+        h = dec * h + ic
+        y = jnp.einsum("bdn,bn->bd", h, c)
+        return h, y
+
+    h0 = jnp.zeros((B, d, N), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, (jnp.moveaxis(decay, 1, 0),
+                                    jnp.moveaxis(inc, 1, 0),
+                                    jnp.moveaxis(C, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1)  # (B, S, d)

@@ -1,0 +1,241 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("SCDA_DRYRUN_XLA_FLAGS")
+                           or "--xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above run before ANY other import — jax locks the device
+count on first init.  Placeholder host devices let ``jax.make_mesh`` build
+the production meshes:
+
+    single-pod:  (16, 16)      axes (data, model)         = 256 chips
+    multi-pod:   (2, 16, 16)   axes (pod, data, model)    = 512 chips
+
+For each cell we AOT-compile the real train/serve step against
+ShapeDtypeStruct inputs (no allocation), print ``memory_analysis()`` (fits?)
+and ``cost_analysis()`` (flops/bytes), and extract the roofline terms from
+the post-SPMD HLO (collective bytes, while-trip-corrected; see
+``repro.analysis.hlo``).  Results append to a JSON file consumed by
+``benchmarks/`` and EXPERIMENTS.md.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k
+    python -m repro.launch.dryrun --all            # full sweep, both meshes
+    python -m repro.launch.dryrun --arch ... --multi-pod only
+"""
+import argparse      # noqa: E402
+import json          # noqa: E402
+import sys           # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.analysis import hlo as hlo_analysis          # noqa: E402
+from repro.configs import SHAPES, cells, get_config     # noqa: E402
+from repro.launch import specs as sp                    # noqa: E402
+from repro.launch.mesh import make_production_mesh      # noqa: E402
+from repro.optim.adamw import AdamWConfig               # noqa: E402
+from repro.train.step import (make_prefill_step, make_serve_step,  # noqa: E402
+                              make_train_step)
+
+RESULTS_DEFAULT = "benchmarks/results/dryrun.json"
+
+
+def compile_cell(arch: str, shape_name: str, multi_pod: bool,
+                 kv_chunk: int = 512, loss_chunk: int = 256,
+                 save_hlo: str = ""):
+    """Lower + compile one cell; returns the result record."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    from repro.distributed import sharding as sh
+    # long-context decode with batch < data axis: sequence-parallel cache +
+    # shard_map partial-softmax merge over the data axis
+    sp_axis = None
+    if shape.kind == "decode" and cfg.has_attention:
+        daxes = sh.data_axes(mesh)
+        if shape.global_batch % sh.axis_size(mesh, daxes) != 0:
+            sp_axis = "data"
+    sh.set_mesh(mesh, sp_decode_axis=sp_axis)
+    t0 = time.time()
+
+    with mesh:
+        params_abs = sp.abstract_params(cfg, mesh)
+        if shape.kind == "train":
+            opt_abs = sp.abstract_opt_state(cfg, mesh, params_abs)
+            batch_abs = sp.train_inputs(cfg, shape, mesh)
+            step = make_train_step(cfg, AdamWConfig(),
+                                   loss_chunk=loss_chunk)
+            jitted = jax.jit(step, donate_argnums=(0, 1))
+            lowered = jitted.lower(params_abs, opt_abs, batch_abs)
+        elif shape.kind == "prefill":
+            batch_abs = sp.train_inputs(cfg, shape, mesh)
+            batch_abs.pop("labels")
+            step = make_prefill_step(cfg)
+            jitted = jax.jit(step)
+            lowered = jitted.lower(params_abs, batch_abs)
+        else:
+            cache_abs, tokens_abs = sp.decode_inputs(cfg, shape, mesh)
+            step = make_serve_step(cfg)
+            jitted = jax.jit(step, donate_argnums=(1,))
+            lowered = jitted.lower(params_abs, cache_abs, tokens_abs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    hlo_text = compiled.as_text()
+    costs = hlo_analysis.analyze(hlo_text)
+    terms = hlo_analysis.roofline_terms(costs)
+    if save_hlo:
+        with open(save_hlo, "w") as fh:
+            fh.write(hlo_text)
+
+    D = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    n_active = cfg.active_param_count()
+    mult = {"train": 6, "prefill": 2, "decode": 2}[shape.kind]
+    model_flops = mult * n_active * D
+    model_flops_per_chip = model_flops / n_chips
+
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "kind": shape.kind,
+        "mesh": list(mesh.devices.shape),
+        "axes": list(mesh.axis_names),
+        "chips": int(n_chips),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes_per_device": getattr(
+                mem, "argument_size_in_bytes", None),
+            "output_bytes_per_device": getattr(
+                mem, "output_size_in_bytes", None),
+            "temp_bytes_per_device": getattr(
+                mem, "temp_size_in_bytes", None),
+            "alias_bytes_per_device": getattr(
+                mem, "alias_size_in_bytes", None),
+        },
+        "xla_cost_analysis": {   # while bodies counted once — see §Dry-run
+            "flops": cost.get("flops"),
+            "bytes_accessed": cost.get("bytes accessed"),
+        },
+        "hlo_per_chip": {
+            "flops": costs.flops,
+            "traffic_bytes": costs.traffic_bytes,
+            "collective_bytes": costs.collective_bytes,
+            "by_collective": costs.by_collective,
+        },
+        "roofline": terms,
+        "model_flops_total": model_flops,
+        "model_flops_per_chip": model_flops_per_chip,
+        "useful_flop_ratio": (model_flops_per_chip / costs.flops
+                              if costs.flops else None),
+        "hbm_state_bytes_per_device": _state_bytes_per_device(
+            params_abs, shape, locals()),
+    }
+    return record
+
+
+def _state_bytes_per_device(params_abs, shape, env) -> int:
+    """Persistent state (params [+opt] [+cache]) bytes per device."""
+    def tree_bytes(tree):
+        total = 0
+        for leaf in jax.tree_util.tree_leaves(tree):
+            n_shards = leaf.sharding.num_devices if leaf.sharding else 1
+            total += leaf.size * leaf.dtype.itemsize // max(1, n_shards) \
+                if hasattr(leaf, "size") else 0
+        return total
+    total = tree_bytes(params_abs)
+    if shape.kind == "train" and "opt_abs" in env:
+        total += tree_bytes(env["opt_abs"])
+    if shape.kind != "train" and "cache_abs" in env:
+        total += tree_bytes(env["cache_abs"])
+    return int(total)
+
+
+def run_cells(cell_list, out_path: str, kv_chunk: int, loss_chunk: int):
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    results = []
+    if os.path.exists(out_path):
+        with open(out_path) as fh:
+            results = json.load(fh)
+    done = {(r["arch"], r["shape"], tuple(r["mesh"])) for r in results}
+    failures = []
+    for arch, shape_name, multi_pod in cell_list:
+        mesh_shape = (2, 16, 16) if multi_pod else (16, 16)
+        if (arch, shape_name, mesh_shape) in done:
+            print(f"skip {arch} × {shape_name} × {mesh_shape} (done)")
+            continue
+        label = f"{arch} × {shape_name} × {'2x16x16' if multi_pod else '16x16'}"
+        print(f"=== {label}", flush=True)
+        try:
+            rec = compile_cell(arch, shape_name, multi_pod,
+                               kv_chunk=kv_chunk, loss_chunk=loss_chunk)
+            r = rec["roofline"]
+            print(f"    ok  lower {rec['lower_s']}s compile "
+                  f"{rec['compile_s']}s  dominant={r['dominant']} "
+                  f"compute={r['compute_s']:.4f}s "
+                  f"memory={r['memory_s']:.4f}s "
+                  f"collective={r['collective_s']:.4f}s", flush=True)
+            results.append(rec)
+            with open(out_path, "w") as fh:
+                json.dump(results, fh, indent=1)
+        except Exception as e:  # noqa: BLE001 — sweep must report, not die
+            print(f"    FAIL {e}", flush=True)
+            traceback.print_exc()
+            failures.append((label, str(e)))
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", choices=["no", "only", "both"],
+                    default="no")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=RESULTS_DEFAULT)
+    ap.add_argument("--kv-chunk", type=int, default=512)
+    ap.add_argument("--loss-chunk", type=int, default=256)
+    ap.add_argument("--save-hlo", default="")
+    args = ap.parse_args()
+
+    if args.all:
+        todo = []
+        for arch, shape_name in cells():
+            if args.multi_pod in ("no", "both"):
+                todo.append((arch, shape_name, False))
+            if args.multi_pod in ("only", "both"):
+                todo.append((arch, shape_name, True))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required without --all")
+        pods = {"no": [False], "only": [True], "both": [False, True]}
+        todo = [(args.arch, args.shape, mp) for mp in pods[args.multi_pod]]
+
+    if len(todo) == 1 and args.save_hlo:
+        rec = compile_cell(*todo[0][:2], todo[0][2],
+                           kv_chunk=args.kv_chunk,
+                           loss_chunk=args.loss_chunk,
+                           save_hlo=args.save_hlo)
+        print(json.dumps(rec, indent=1))
+        return 0
+
+    failures = run_cells(todo, args.out, args.kv_chunk, args.loss_chunk)
+    if failures:
+        print(f"\n{len(failures)} cell(s) FAILED:")
+        for label, err in failures:
+            print(f"  {label}: {err}")
+        return 1
+    print("\nall cells compiled OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,109 @@
+"""Abstract input construction per (arch × shape × mesh) cell.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (weak-type-correct,
+sharding-attached, zero allocation) for every input of the cell's step
+function — the pattern that lets ``jit(...).lower(...).compile()`` validate
+a 512-chip program on a laptop.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed import sharding as sh
+from repro.models import lm
+from repro.optim import adamw
+
+
+def _with_shardings(abstract, shardings):
+    return jax.tree_util.tree_map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        abstract, shardings)
+
+
+def abstract_params(cfg: ModelConfig, mesh: Mesh):
+    a = jax.eval_shape(lambda: lm.init_lm(cfg, jax.random.PRNGKey(0)))
+    return _with_shardings(a, sh.params_shardings(mesh, a))
+
+
+def abstract_opt_state(cfg: ModelConfig, mesh: Mesh, params_abs):
+    a = jax.eval_shape(lambda: adamw.init(
+        jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype), params_abs)))
+    mu = _with_shardings(a.mu, jax.tree_util.tree_map(
+        lambda s: s.sharding, params_abs))
+    nu = _with_shardings(a.nu, jax.tree_util.tree_map(
+        lambda s: s.sharding, params_abs))
+    count = jax.ShapeDtypeStruct((), jnp.int32,
+                                 sharding=sh.replicated(mesh))
+    return adamw.AdamWState(mu=mu, nu=nu, count=count)
+
+
+def train_inputs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) \
+        -> Dict[str, jax.ShapeDtypeStruct]:
+    B, S = shape.global_batch, shape.seq_len
+    shd = sh.input_shardings(mesh, "train", cfg, shape)
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32,
+                                       sharding=shd["tokens"]),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32,
+                                       sharding=shd["labels"]),
+    }
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_patches, cfg.d_model), jnp.float32,
+            sharding=shd["patch_embeds"])
+    if cfg.family == "encdec":
+        batch["enc_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.max_source_len, cfg.d_model), jnp.float32,
+            sharding=shd["enc_embeds"])
+    return batch
+
+
+def decode_inputs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) \
+        -> Tuple[Any, jax.ShapeDtypeStruct]:
+    """(abstract cache, abstract tokens) for a serve_step cell."""
+    B, S = shape.global_batch, shape.seq_len
+    shd = sh.input_shardings(mesh, "decode", cfg, shape)
+    cache_abs = jax.eval_shape(partial(lm.init_cache, cfg, B, S))
+    rep = sh.replicated(mesh)
+
+    def shard_of(path_name: str):
+        return shd.get(path_name, rep)
+
+    cache = {}
+    for key, leaf in cache_abs.items():
+        if key == "pos":
+            cache[key] = jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                              sharding=rep)
+        elif key in ("k", "v"):
+            cache[key] = jax.ShapeDtypeStruct(
+                leaf.shape, leaf.dtype, sharding=shd[f"cache_{key}"])
+        elif key == "ssm":
+            cache[key] = {
+                "h": jax.ShapeDtypeStruct(leaf["h"].shape, leaf["h"].dtype,
+                                          sharding=shd["ssm_h"]),
+                "conv": jax.ShapeDtypeStruct(leaf["conv"].shape,
+                                             leaf["conv"].dtype,
+                                             sharding=shd["ssm_conv"]),
+            }
+        elif key == "enc_out":
+            cache[key] = jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                              sharding=shd["enc_out"])
+        else:
+            cache[key] = jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                              sharding=rep)
+    tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32,
+                                  sharding=shd["tokens"])
+    return cache, tokens
+
+
+def hybrid_kv_shape_fix(cfg: ModelConfig, shd, cache_abs):
+    """zamba2's shared-attn cache has G (not L) leading entries — the
+    sharding specs are rank-aligned already (rank 5)."""
+    return shd

@@ -1,0 +1,7 @@
+"""Model definitions: layers, SSM blocks, and the composable LM core."""
+from repro.models.lm import (compute_dtype, forward, forward_hidden,
+                             init_cache, init_lm, lm_loss, serve_step,
+                             unembed)
+
+__all__ = ["compute_dtype", "forward", "forward_hidden", "init_cache",
+           "init_lm", "lm_loss", "serve_step", "unembed"]

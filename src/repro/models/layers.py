@@ -1,0 +1,418 @@
+"""Building-block layers: norms, RoPE, memory-efficient attention, MLPs, MoE.
+
+Everything is a pure function over explicit param pytrees (no flax/haiku —
+zero dependencies beyond jax), initialized by ``init_*`` helpers that return
+plain dicts.  Attention uses an online-softmax kv-chunked scan so activation
+memory stays O(S·chunk) rather than O(S²) — the same access pattern the
+Pallas flash kernel implements on TPU, keeping dry-run rooflines honest.
+"""
+from __future__ import annotations
+
+import math
+import os
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def _init(key, shape, scale=None, dtype=jnp.float32):
+    scale = scale if scale is not None else 1.0 / math.sqrt(shape[0])
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ------------------------------------------------------------------- norms --
+def rms_norm(x, weight, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + weight.astype(jnp.float32))).astype(x.dtype)
+
+
+def init_rms_norm(d: int, dtype=jnp.float32) -> jnp.ndarray:
+    return jnp.zeros((d,), dtype)   # stored as offset from 1 (gemma-style)
+
+
+# -------------------------------------------------------------------- rope --
+def rope(x, positions, base: float = 10_000.0):
+    """Rotary embedding; x: (..., S, H, D), positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angle = positions[..., :, None, None].astype(jnp.float32) * freq  # (...,S,1,half)
+    cos, sin = jnp.cos(angle), jnp.sin(angle)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- attention --
+# Projections are stored 3-D — (d_model, heads, head_dim) — so tensor
+# parallelism shards the *heads* dim directly (no flat-dim reshape for
+# GSPMD to lose).  When the head count does not divide the model axis,
+# phantom zero heads are padded in at forward time (sharding.padded_heads):
+# their wo rows are zero, so the output is exact and the overhead is
+# visible in the roofline, not hidden in a resharding.
+def init_attention(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+                   qk_norm: bool, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _init(ks[0], (d_model, n_heads, head_dim), dtype=dtype),
+        "wk": _init(ks[1], (d_model, n_kv, head_dim), dtype=dtype),
+        "wv": _init(ks[2], (d_model, n_kv, head_dim), dtype=dtype),
+        "wo": _init(ks[3], (n_heads, head_dim, d_model),
+                    scale=1.0 / math.sqrt(n_heads * head_dim), dtype=dtype),
+    }
+    if qk_norm:
+        p["q_norm"] = init_rms_norm(head_dim, dtype)
+        p["k_norm"] = init_rms_norm(head_dim, dtype)
+    return p
+
+
+def _pad_heads(w, axis: int, h_pad: int):
+    h = w.shape[axis]
+    if h == h_pad:
+        return w
+    pads = [(0, 0)] * w.ndim
+    pads[axis] = (0, h_pad - h)
+    return jnp.pad(w, pads)
+
+
+def _project_qkv(p, x, n_heads, n_kv, head_dim, positions, rope_base,
+                 eps=1e-6):
+    from repro.distributed import sharding as sh
+    h_pad = sh.padded_heads(n_heads)
+    kv_pad = n_kv if h_pad % n_kv == 0 else h_pad  # keep repeat integral
+    wq = _pad_heads(p["wq"], 1, h_pad)
+    wk = _pad_heads(p["wk"], 1, kv_pad)
+    wv = _pad_heads(p["wv"], 1, kv_pad)
+    q = jnp.einsum("bsd,dhk->bshk", x, wq)
+    k = jnp.einsum("bsd,dhk->bshk", x, wk)
+    v = jnp.einsum("bsd,dhk->bshk", x, wv)
+    q = sh.constrain(q, "batch", None, "model", None)
+    k = sh.constrain(k, "batch", None, None, None)
+    v = sh.constrain(v, "batch", None, None, None)
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], eps)
+        k = rms_norm(k, p["k_norm"], eps)
+    if positions is not None:
+        q = rope(q, positions, rope_base)
+        k = rope(k, positions, rope_base)
+    return q, k, v
+
+
+def _output_proj(p, out, n_heads, d_model):
+    """out: (B, S, H_pad, hd) → (B, S, d_model); phantom heads die here."""
+    from repro.distributed import sharding as sh
+    h_pad = out.shape[2]
+    wo = _pad_heads(p["wo"], 0, h_pad)
+    y = jnp.einsum("bshk,hkd->bsd", out, wo)
+    return sh.constrain(y, "batch", None, None)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window=None,
+                    kv_chunk: int = 512, q_offset=0):
+    """Online-softmax attention, scanned over kv chunks.
+
+    q: (B, Sq, H, D) head-parallel; k, v: (B, Skv, Hkv, D) with
+    H % Hkv == 0 (GQA) — kv heads are repeated to H chunk-by-chunk inside
+    the scan, which is the TP-friendly "replicate KV across the head
+    groups" layout.  ``window`` (static int or traced scalar) masks keys
+    older than ``window`` positions; None disables windowing.  ``q_offset``
+    is the absolute position of q[0] (decode).  Softmax statistics and
+    accumulation in f32.
+    """
+    B, Sq, H, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    assert H % Hkv == 0, (H, Hkv)
+    rep = H // Hkv
+    scale = 1.0 / math.sqrt(D)
+    kv_chunk = min(kv_chunk, Skv)
+    n_chunks = math.ceil(Skv / kv_chunk)
+    pad = n_chunks * kv_chunk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, n_chunks, kv_chunk, Hkv, D)
+    vc = v.reshape(B, n_chunks, kv_chunk, Hkv, D)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    from repro.distributed import sharding as sh
+
+    def body(carry, inp):
+        acc, m, l = carry
+        kj, vj, j = inp
+        kj = sh.constrain(kj, "batch", None, None, None)
+        vj = sh.constrain(vj, "batch", None, None, None)
+        if rep > 1:
+            kj = jnp.repeat(kj, rep, axis=2)
+            vj = jnp.repeat(vj, rep, axis=2)
+        s = jnp.einsum("bshd,bchd->bshc", q, kj,
+                       preferred_element_type=jnp.float32) * scale
+        s = sh.constrain(s, "batch", None, "model", None)
+        kv_pos = j * kv_chunk + jnp.arange(kv_chunk)
+        mask = kv_pos[None, :] <= q_pos[:, None] if causal else \
+            jnp.ones((Sq, kv_chunk), bool)
+        if window is not None:
+            mask &= (q_pos[:, None] - kv_pos[None, :]) < window
+        if pad:
+            mask &= (kv_pos < Skv)[None, :]
+        s = jnp.where(mask[None, :, None, :], s, -jnp.inf)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        # guard fully-masked rows (m_new == -inf)
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask[None, :, None, :], p, 0.0)
+        alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l = l * alpha + p.sum(axis=-1)
+        pv = jnp.einsum("bshc,bchd->bshd", p.astype(vj.dtype), vj,
+                        preferred_element_type=jnp.float32)
+        acc = acc * alpha[..., None] + pv
+        return (acc, m_new, l), None
+
+    acc0 = sh.constrain(jnp.zeros((B, Sq, H, D), jnp.float32),
+                        "batch", None, "model", None)
+    m0 = sh.constrain(jnp.full((B, Sq, H), -jnp.inf, jnp.float32),
+                      "batch", None, "model")
+    l0 = sh.constrain(jnp.zeros((B, Sq, H), jnp.float32),
+                      "batch", None, "model")
+    js = jnp.arange(n_chunks)
+    (acc, m, l), _ = jax.lax.scan(
+        body, (acc0, m0, l0),
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), js))
+    out = acc / jnp.maximum(l[..., None], 1e-37)
+    return out.astype(q.dtype)
+
+
+def attention_block(p: Params, x, *, n_heads, n_kv, head_dim, rope_base,
+                    causal=True, window=None, kv_chunk=512, positions=None,
+                    eps=1e-6):
+    """Full attention over a sequence (train / prefill)."""
+    B, S, d_model = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q, k, v = _project_qkv(p, x, n_heads, n_kv, head_dim, positions,
+                           rope_base, eps)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          kv_chunk=kv_chunk)
+    return _output_proj(p, out, n_heads, d_model)
+
+
+def attention_decode(p: Params, x, cache_k, cache_v, pos, *, n_heads, n_kv,
+                     head_dim, rope_base, window=None, eps=1e-6,
+                     kv_chunk=512):
+    """One-token decode against a KV cache.
+
+    x: (B, 1, d); cache_k/v: (B, S_max, Hkv, D); pos: scalar int32 —
+    number of tokens already in the cache.  Returns (out, new_k, new_v).
+    Reuses the chunked flash path so the (1, S_max) score row never
+    materializes at once; if the ambient policy declares a sequence-
+    parallel decode axis, partial softmax states are merged across shards
+    via shard_map + psum instead (long-context SP decode).
+    """
+    from repro.distributed import sharding as sh
+    B = x.shape[0]
+    d_model = x.shape[-1]
+    positions = jnp.broadcast_to(pos, (B, 1))
+    q, k, v = _project_qkv(p, x, n_heads, n_kv, head_dim, positions,
+                           rope_base, eps)
+    # drop phantom kv heads before touching the (unpadded) cache
+    k = k[:, :, :n_kv, :]
+    v = v[:, :, :n_kv, :]
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k.astype(cache_k.dtype), pos, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v.astype(cache_v.dtype), pos, axis=1)
+    sp_axis = sh.get_policy().sp_decode_axis
+    if sp_axis:
+        out = _sp_decode_attention(q, cache_k, cache_v, pos, window, sp_axis)
+    else:
+        out = flash_attention(q, cache_k, cache_v, causal=True,
+                              window=window, kv_chunk=kv_chunk,
+                              q_offset=pos)
+    return _output_proj(p, out, n_heads, d_model), cache_k, cache_v
+
+
+def _sp_decode_attention(q, cache_k, cache_v, pos, window, axis: str):
+    """Sequence-parallel decode attention (shard_map over the cache's
+    sequence shards; partial softmax merged with pmax/psum).
+
+    Per shard: local flash over its cache slice; merge:
+        m* = pmax(m);  l* = Σ l·e^{m−m*};  acc* = Σ acc·e^{m−m*};
+    out = acc*/l*.  Collective volume is O(B·H·D) — independent of S.
+    """
+    from functools import partial
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed import sharding as sh
+    mesh = sh.get_policy().mesh
+    B, _, H, D = q.shape
+    S = cache_k.shape[1]
+    n_shards = sh.axis_size(mesh, axis)
+    S_local = S // n_shards
+    Hkv = cache_k.shape[2]
+    kv_model = "model" if (axis != "model" and Hkv % sh.axis_size(
+        mesh, "model") == 0) else None
+
+    def local(qb, kb, vb, posb):
+        idx = jax.lax.axis_index(axis)
+        offset = idx * S_local
+        rep = qb.shape[2] // kb.shape[2]  # both are per-shard head counts
+        if rep > 1:
+            kb = jnp.repeat(kb, rep, axis=2)
+            vb = jnp.repeat(vb, rep, axis=2)
+        s = jnp.einsum("bshd,bchd->bshc", qb, kb,
+                       preferred_element_type=jnp.float32) / math.sqrt(D)
+        kv_pos = offset + jnp.arange(S_local)
+        mask = kv_pos <= posb
+        if window is not None:
+            mask &= (posb - kv_pos) < window
+        s = jnp.where(mask[None, None, None, :], s, -jnp.inf)
+        m = s.max(axis=-1)
+        m_star = jax.lax.pmax(m, axis)
+        m_safe = jnp.where(jnp.isfinite(m_star), m_star, 0.0)
+        p = jnp.where(jnp.isfinite(s), jnp.exp(s - m_safe[..., None]), 0.0)
+        l = jax.lax.psum(p.sum(axis=-1), axis)
+        acc = jnp.einsum("bshc,bchd->bshd", p.astype(vb.dtype), vb,
+                         preferred_element_type=jnp.float32)
+        acc = jax.lax.psum(acc, axis)
+        return (acc / jnp.maximum(l[..., None], 1e-37)).astype(qb.dtype)
+
+    qspec = P(None, None, "model" if H % sh.axis_size(mesh, "model") == 0
+              and axis != "model" else None, None)
+    kvspec = P(None, axis, kv_model, None)
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(qspec, kvspec, kvspec, P()),
+        out_specs=qspec, check_vma=False)(q, cache_k, cache_v, pos)
+
+
+# --------------------------------------------------------------------- mlp --
+def init_mlp(key, d_model: int, d_ff: int, mlp_type: str, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    p = {"w_down": _init(ks[2], (d_ff, d_model), dtype=dtype)}
+    if mlp_type in ("swiglu", "geglu"):
+        p["w_gate"] = _init(ks[0], (d_model, d_ff), dtype=dtype)
+        p["w_up"] = _init(ks[1], (d_model, d_ff), dtype=dtype)
+    else:
+        p["w_up"] = _init(ks[1], (d_model, d_ff), dtype=dtype)
+    return p
+
+
+def mlp_block(p: Params, x, mlp_type: str):
+    from repro.distributed import sharding as sh
+    ff = ("batch", None, "model") if x.ndim == 3 else ("batch", "model")
+    dm = ("batch", None, None) if x.ndim == 3 else ("batch", None)
+    if mlp_type in ("swiglu", "geglu"):
+        act = jax.nn.silu if mlp_type == "swiglu" else jax.nn.gelu
+        h = act(sh.constrain(x @ p["w_gate"], *ff)) \
+            * sh.constrain(x @ p["w_up"], *ff)
+    elif mlp_type == "relu2":  # nemotron squared-ReLU
+        h = jnp.square(jax.nn.relu(sh.constrain(x @ p["w_up"], *ff)))
+    elif mlp_type == "gelu":
+        h = jax.nn.gelu(sh.constrain(x @ p["w_up"], *ff))
+    else:
+        raise ValueError(mlp_type)
+    return sh.constrain(h @ p["w_down"], *dm)
+
+
+# --------------------------------------------------------------------- moe --
+def init_moe(key, d_model: int, d_ff: int, n_experts: int, mlp_type: str,
+             shared_expert: bool, dtype) -> Params:
+    ks = jax.random.split(key, 5)
+    gated = mlp_type in ("swiglu", "geglu")
+    p = {
+        "router": _init(ks[0], (d_model, n_experts), scale=0.02, dtype=dtype),
+        "w_up": _init(ks[2], (n_experts, d_model, d_ff), dtype=dtype),
+        "w_down": _init(ks[3], (n_experts, d_ff, d_model),
+                        scale=1.0 / math.sqrt(d_ff), dtype=dtype),
+    }
+    if gated:
+        p["w_gate"] = _init(ks[1], (n_experts, d_model, d_ff), dtype=dtype)
+    if shared_expert:
+        p["shared"] = init_mlp(ks[4], d_model, d_ff, mlp_type, dtype)
+    return p
+
+
+def moe_block(p: Params, x, *, n_experts: int, top_k: int, mlp_type: str,
+              capacity_factor: float = 1.25, shared_expert: bool = False):
+    """Token-choice top-k MoE with capacity buckets (GShard-style).
+
+    Sort-free dispatch: tokens are scattered into per-expert capacity
+    buffers (E, C, D); overflow tokens are dropped (their residual path
+    still flows).  Expert FFNs run as one batched einsum — MXU-shaped and
+    EP-shardable on the expert axis.  Returns (y, aux_loss).
+    """
+    from repro.distributed import sharding as sh
+    B, S, D = x.shape
+    T = B * S
+    xt = x.reshape(T, D)
+    # §Perf iteration H2: pad the expert count up to a model-axis multiple
+    # (like head padding) so expert parallelism applies even when E ∤ 16
+    # (granite's 40 experts).  Phantom experts are masked to -inf in the
+    # router, so results are exact; their weights are zero blocks.
+    msize = max(1, sh.model_axis_size())
+    e_pad = ((n_experts + msize - 1) // msize) * msize \
+        if n_experts % msize else n_experts
+    logits = (xt @ p["router"]).astype(jnp.float32)       # (T, E)
+    if e_pad != n_experts:
+        logits = jnp.pad(logits, ((0, 0), (0, e_pad - n_experts)),
+                         constant_values=-1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, ids = jax.lax.top_k(probs, top_k)              # (T, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    C = max(1, int(capacity_factor * T * top_k / n_experts))
+    flat_ids = ids.reshape(-1)                            # (T*k,)
+    # position of each assignment within its expert, in token order
+    onehot = jax.nn.one_hot(flat_ids, e_pad, dtype=jnp.int32)
+    pos = (jnp.cumsum(onehot, axis=0) - 1)
+    pos = jnp.take_along_axis(pos, flat_ids[:, None], axis=1)[:, 0]
+    keep = pos < C
+    safe_pos = jnp.where(keep, pos, 0)
+
+    ep = "model" if e_pad % msize == 0 and msize > 1 else None
+    # §Perf H3 (REFUTED in this form — see EXPERIMENTS.md): sharding the
+    # capacity dim over data cuts expert flops by the data-axis size, but
+    # scatter into a 2-D-sharded operand makes GSPMD emit all-gather
+    # storms; a shard_map all-to-all dispatch is the proper fix (future
+    # work).  Off by default.
+    cap = "batch" if os.environ.get("REPRO_MOE_2D") == "1" else None
+    buf = jnp.zeros((e_pad, C, D), x.dtype)
+    src = jnp.repeat(xt, top_k, axis=0) * keep[:, None].astype(x.dtype)
+    buf = buf.at[flat_ids, safe_pos].add(src)
+    buf = sh.constrain(buf, ep, cap, None)
+
+    w_up = _pad_heads(p["w_up"], 0, e_pad)
+    h_up = jnp.einsum("ecd,edf->ecf", buf, w_up,
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+    h_up = sh.constrain(h_up, ep, cap, None if ep else "model")
+    if mlp_type in ("swiglu", "geglu"):
+        act = jax.nn.silu if mlp_type == "swiglu" else jax.nn.gelu
+        w_gate = _pad_heads(p["w_gate"], 0, e_pad)
+        h_gate = jnp.einsum("ecd,edf->ecf", buf, w_gate,
+                            preferred_element_type=jnp.float32).astype(x.dtype)
+        h = act(h_gate) * h_up
+    elif mlp_type == "relu2":
+        h = jnp.square(jax.nn.relu(h_up))
+    else:
+        h = jax.nn.gelu(h_up)
+    w_down = _pad_heads(p["w_down"], 0, e_pad)
+    out = jnp.einsum("ecf,efd->ecd", h, w_down,
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    out = sh.constrain(out, ep, cap, None)
+
+    gathered = out[flat_ids, safe_pos]                    # (T*k, D)
+    gathered = gathered * (gates.reshape(-1)
+                           * keep.astype(jnp.float32)).astype(x.dtype)[:, None]
+    y = gathered.reshape(T, top_k, D).sum(axis=1)
+
+    # load-balance aux loss (Switch/GShard) — over real experts only
+    me = probs[:, :n_experts].mean(axis=0)
+    ce = jnp.zeros((e_pad,), jnp.float32).at[flat_ids].add(1.0) / (T * top_k)
+    aux = n_experts * jnp.sum(me * ce[:n_experts])
+
+    if shared_expert:
+        y = y + mlp_block(p["shared"], xt, mlp_type)
+    return y.reshape(B, S, D), aux

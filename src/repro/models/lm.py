@@ -1,0 +1,476 @@
+"""Composable language-model core covering all assigned families.
+
+Design points:
+  * Pure functions over explicit param pytrees; layer params are *stacked*
+    (leading dim = n_layers) and consumed by ``lax.scan`` — HLO size is
+    depth-independent (compile-time matters on 1-core CPU and at 512-way
+    SPMD) and XLA can overlap the per-layer collectives with compute.
+  * Hybrid archs (zamba2) scan over *groups* of (E mamba blocks + 1 shared
+    attention application) — no data-dependent control flow.
+  * Local/global attention patterns (gemma3) ride the same scan via a
+    per-layer traced window size.
+  * The loss head is chunked over the sequence (remat'd) so the (S, vocab)
+    logits tensor never materializes — decisive for 256k vocabularies.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import ssm as S
+
+Params = Dict[str, Any]
+
+
+def compute_dtype(cfg: ModelConfig):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+
+
+# --------------------------------------------------------------------------
+# Initialization
+# --------------------------------------------------------------------------
+
+def _init_dense_layer(cfg: ModelConfig, key) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.init_rms_norm(cfg.d_model),
+        "attn": L.init_attention(k1, cfg.d_model, cfg.n_heads,
+                                 cfg.n_kv_heads, cfg.head_dim_,
+                                 cfg.qk_norm, jnp.float32),
+        "ln2": L.init_rms_norm(cfg.d_model),
+        "mlp": L.init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.mlp_type,
+                          jnp.float32),
+    }
+
+
+def _init_moe_layer(cfg: ModelConfig, key) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.init_rms_norm(cfg.d_model),
+        "attn": L.init_attention(k1, cfg.d_model, cfg.n_heads,
+                                 cfg.n_kv_heads, cfg.head_dim_,
+                                 cfg.qk_norm, jnp.float32),
+        "ln2": L.init_rms_norm(cfg.d_model),
+        "moe": L.init_moe(k2, cfg.d_model, cfg.d_ff, cfg.n_experts,
+                          cfg.mlp_type, cfg.shared_expert, jnp.float32),
+    }
+
+
+def _init_ssm_layer(cfg: ModelConfig, key) -> Params:
+    return {
+        "ln1": L.init_rms_norm(cfg.d_model),
+        "ssm": S.init_ssm(key, cfg, jnp.float32),
+    }
+
+
+def _init_encdec_dec_layer(cfg: ModelConfig, key) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": L.init_rms_norm(cfg.d_model),
+        "attn": L.init_attention(k1, cfg.d_model, cfg.n_heads,
+                                 cfg.n_kv_heads, cfg.head_dim_,
+                                 cfg.qk_norm, jnp.float32),
+        "ln_x": L.init_rms_norm(cfg.d_model),
+        "cross": L.init_attention(k2, cfg.d_model, cfg.n_heads,
+                                  cfg.n_kv_heads, cfg.head_dim_,
+                                  cfg.qk_norm, jnp.float32),
+        "ln2": L.init_rms_norm(cfg.d_model),
+        "mlp": L.init_mlp(k3, cfg.d_model, cfg.d_ff, cfg.mlp_type,
+                          jnp.float32),
+    }
+
+
+def _stack_init(layer_fn, n: int, key) -> Params:
+    keys = jax.random.split(key, n)
+    return jax.vmap(layer_fn)(keys)
+
+
+def init_lm(cfg: ModelConfig, key) -> Params:
+    ks = jax.random.split(key, 8)
+    p: Params = {
+        "embed": (jax.random.normal(ks[0], (cfg.vocab, cfg.d_model),
+                                    jnp.float32) * 0.02),
+        "final_norm": L.init_rms_norm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = (jax.random.normal(ks[1], (cfg.d_model, cfg.vocab),
+                                          jnp.float32)
+                        / math.sqrt(cfg.d_model))
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        p["layers"] = _stack_init(partial(_init_dense_layer, cfg),
+                                  cfg.n_layers, ks[2])
+    elif fam == "moe":
+        p["layers"] = _stack_init(partial(_init_moe_layer, cfg),
+                                  cfg.n_layers, ks[2])
+    elif fam == "ssm":
+        p["layers"] = _stack_init(partial(_init_ssm_layer, cfg),
+                                  cfg.n_layers, ks[2])
+    elif fam == "hybrid":
+        assert cfg.n_layers % cfg.shared_attn_every == 0, \
+            "hybrid needs n_layers divisible by shared_attn_every"
+        p["layers"] = _stack_init(partial(_init_ssm_layer, cfg),
+                                  cfg.n_layers, ks[2])
+        p["shared_attn"] = {
+            "ln": L.init_rms_norm(cfg.d_model),
+            "attn": L.init_attention(ks[3], cfg.d_model, cfg.n_heads,
+                                     cfg.n_kv_heads, cfg.head_dim_,
+                                     cfg.qk_norm, jnp.float32),
+        }
+    elif fam == "encdec":
+        p["enc_layers"] = _stack_init(partial(_init_dense_layer, cfg),
+                                      cfg.encoder_layers, ks[2])
+        p["enc_norm"] = L.init_rms_norm(cfg.d_model)
+        p["layers"] = _stack_init(partial(_init_encdec_dec_layer, cfg),
+                                  cfg.n_layers, ks[3])
+    else:
+        raise ValueError(fam)
+    if fam == "vlm":
+        p["mm_proj"] = (jax.random.normal(ks[4], (cfg.d_model, cfg.d_model),
+                                          jnp.float32)
+                        / math.sqrt(cfg.d_model))
+    return p
+
+
+# --------------------------------------------------------------------------
+# Forward (train / prefill): hidden states
+# --------------------------------------------------------------------------
+
+def _windows_per_layer(cfg: ModelConfig, S_kv: int) -> Optional[jnp.ndarray]:
+    """Per-layer effective window (traced into the layer scan), or None."""
+    if cfg.attn_window == 0:
+        return None
+    w = [S_kv if cfg.layer_is_global(i) else cfg.attn_window
+         for i in range(cfg.n_layers)]
+    return jnp.asarray(w, jnp.int32)
+
+
+def _attn_kwargs(cfg: ModelConfig):
+    return dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                head_dim=cfg.head_dim_, rope_base=cfg.rope_base,
+                eps=cfg.norm_eps)
+
+
+def forward_hidden(cfg: ModelConfig, params: Params, tokens,
+                   patch_embeds=None, enc_embeds=None,
+                   kv_chunk: int = 512, remat: bool = True) \
+        -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Token ids → final hidden states (B, S, d). Returns (hidden, moe_aux).
+
+    ``remat=True`` checkpoints each layer-scan body: the backward pass
+    recomputes layer internals instead of saving per-layer attention/MLP
+    intermediates — the policy that makes 4k×256 batches fit HBM.
+    """
+    ckpt = jax.checkpoint if remat else (lambda f: f)
+    from repro.distributed import sharding as sh
+    dtype = compute_dtype(cfg)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+    x = sh.constrain(x, "batch", None, None)
+    if cfg.family == "vlm":
+        assert patch_embeds is not None, "vlm needs patch embeddings"
+        prefix = (patch_embeds.astype(dtype) @
+                  params["mm_proj"].astype(dtype))
+        x = jnp.concatenate([prefix, x], axis=1)
+    aux = jnp.zeros((), jnp.float32)
+    eps = cfg.norm_eps
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        windows = _windows_per_layer(cfg, x.shape[1])
+
+        def body(carry, xs):
+            x, aux = carry
+            x = sh.constrain(x, "batch", None, None)
+            lp = xs[0]
+            window = xs[1] if windows is not None else None
+            lp = jax.tree_util.tree_map(lambda w: w.astype(dtype), lp)
+            h = L.rms_norm(x, lp["ln1"], eps)
+            h = L.attention_block(lp["attn"], h, window=window,
+                                  kv_chunk=kv_chunk, **_attn_kwargs(cfg))
+            x = x + h
+            h = L.rms_norm(x, lp["ln2"], eps)
+            if cfg.family == "moe":
+                h, a = L.moe_block(lp["moe"], h, n_experts=cfg.n_experts,
+                                   top_k=cfg.experts_top_k,
+                                   mlp_type=cfg.mlp_type,
+                                   capacity_factor=cfg.capacity_factor,
+                                   shared_expert=cfg.shared_expert)
+                aux = aux + a
+            else:
+                h = L.mlp_block(lp["mlp"], h, cfg.mlp_type)
+            return (x + h, aux), None
+
+        xs = (params["layers"],) + ((windows,) if windows is not None else ())
+        (x, aux), _ = jax.lax.scan(ckpt(body), (x, aux), xs)
+
+    elif cfg.family == "ssm":
+        def body(x, lp):
+            x = sh.constrain(x, "batch", None, None)
+            lp = jax.tree_util.tree_map(lambda w: w.astype(dtype), lp)
+            return x + S.ssm_block(lp["ssm"],
+                                   L.rms_norm(x, lp["ln1"], eps), cfg), None
+        x, _ = jax.lax.scan(ckpt(body), x, params["layers"])
+
+    elif cfg.family == "hybrid":
+        E = cfg.shared_attn_every
+        G = cfg.n_layers // E
+        grouped = jax.tree_util.tree_map(
+            lambda w: w.reshape((G, E) + w.shape[1:]), params["layers"])
+        sa = jax.tree_util.tree_map(lambda w: w.astype(dtype),
+                                    params["shared_attn"])
+
+        def inner(x, lp):
+            x = sh.constrain(x, "batch", None, None)
+            lp = jax.tree_util.tree_map(lambda w: w.astype(dtype), lp)
+            return x + S.ssm_block(lp["ssm"],
+                                   L.rms_norm(x, lp["ln1"], eps), cfg), None
+
+        def group(x, gp):
+            x, _ = jax.lax.scan(inner, x, gp)
+            h = L.rms_norm(x, sa["ln"], eps)
+            h = L.attention_block(sa["attn"], h, kv_chunk=kv_chunk,
+                                  **_attn_kwargs(cfg))
+            return x + h, None
+
+        x, _ = jax.lax.scan(ckpt(group), x, grouped)
+
+    elif cfg.family == "encdec":
+        assert enc_embeds is not None, "encdec needs encoder embeddings"
+        e = enc_embeds.astype(dtype)
+
+        def enc_body(e, lp):
+            e = sh.constrain(e, "batch", None, None)
+            lp = jax.tree_util.tree_map(lambda w: w.astype(dtype), lp)
+            h = L.rms_norm(e, lp["ln1"], eps)
+            e = e + L.attention_block(lp["attn"], h, causal=False,
+                                      kv_chunk=kv_chunk, **_attn_kwargs(cfg))
+            h = L.rms_norm(e, lp["ln2"], eps)
+            return e + L.mlp_block(lp["mlp"], h, cfg.mlp_type), None
+
+        e, _ = jax.lax.scan(ckpt(enc_body), e, params["enc_layers"])
+        e = L.rms_norm(e, params["enc_norm"].astype(dtype), eps)
+
+        def dec_body(x, lp):
+            x = sh.constrain(x, "batch", None, None)
+            lp = jax.tree_util.tree_map(lambda w: w.astype(dtype), lp)
+            h = L.rms_norm(x, lp["ln1"], eps)
+            x = x + L.attention_block(lp["attn"], h, kv_chunk=kv_chunk,
+                                      **_attn_kwargs(cfg))
+            h = L.rms_norm(x, lp["ln_x"], eps)
+            x = x + _cross_attention(cfg, lp["cross"], h, e)
+            h = L.rms_norm(x, lp["ln2"], eps)
+            return x + L.mlp_block(lp["mlp"], h, cfg.mlp_type), None
+
+        x, _ = jax.lax.scan(ckpt(dec_body), x, params["layers"])
+    else:
+        raise ValueError(cfg.family)
+
+    x = L.rms_norm(x, params["final_norm"].astype(dtype), eps)
+    return x, aux
+
+
+def _cross_attention(cfg: ModelConfig, p, x, enc_out):
+    """Decoder→encoder attention (no causal mask, no rope on keys)."""
+    from repro.distributed import sharding as sh
+    B, S, d_model = x.shape
+    h_pad = sh.padded_heads(cfg.n_heads)
+    kv_pad = cfg.n_kv_heads if h_pad % cfg.n_kv_heads == 0 else h_pad
+    wq = L._pad_heads(p["wq"], 1, h_pad)
+    wk = L._pad_heads(p["wk"], 1, kv_pad)
+    wv = L._pad_heads(p["wv"], 1, kv_pad)
+    q = jnp.einsum("bsd,dhk->bshk", x, wq)
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, wk)
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, wv)
+    q = sh.constrain(q, "batch", None, "model", None)
+    out = L.flash_attention(q, k, v, causal=False)
+    return L._output_proj(p, out, cfg.n_heads, d_model)
+
+
+def unembed(cfg: ModelConfig, params: Params, hidden):
+    w = (params["embed"].T if cfg.tie_embeddings
+         else params["lm_head"]).astype(hidden.dtype)
+    return hidden @ w
+
+
+def forward(cfg: ModelConfig, params: Params, tokens, **kw):
+    """Full logits (small-model / test path; loss uses the chunked head)."""
+    hidden, aux = forward_hidden(cfg, params, tokens, **kw)
+    return unembed(cfg, params, hidden).astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# Loss with a sequence-chunked, remat'd softmax head
+# --------------------------------------------------------------------------
+
+def lm_loss(cfg: ModelConfig, params: Params, tokens, labels,
+            loss_chunk: int = 256, aux_weight: float = 0.01, **kw):
+    hidden, aux = forward_hidden(cfg, params, tokens, **kw)
+    if cfg.family == "vlm":   # image prefix carries no LM loss
+        hidden = hidden[:, -tokens.shape[1]:, :]
+    B, Stot, D = hidden.shape
+    n = max(1, Stot // loss_chunk)
+    chunk = Stot // n
+    assert n * chunk == Stot, f"seq {Stot} not divisible into {n} loss chunks"
+    hc = hidden.reshape(B, n, chunk, D)
+    lc = labels.reshape(B, n, chunk)
+
+    from repro.distributed import sharding as sh
+
+    @jax.checkpoint
+    def chunk_loss(h, y):
+        h = sh.constrain(h, "batch", None, None)
+        logits = unembed(cfg, params, h).astype(jnp.float32)
+        logits = sh.constrain(logits, "batch", None, "model")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y[..., None],
+                                   axis=-1)[..., 0]
+        return jnp.sum(lse - gold)
+
+    def body(tot, xs):
+        h, y = xs
+        return tot + chunk_loss(h, y), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32),
+                            (jnp.moveaxis(hc, 1, 0), jnp.moveaxis(lc, 1, 0)))
+    loss = total / (B * Stot)
+    return loss + aux_weight * aux
+
+
+# --------------------------------------------------------------------------
+# Decode (serve) path with layer-stacked caches
+# --------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    dtype = compute_dtype(cfg)
+    hd, Hkv = cfg.head_dim_, cfg.n_kv_heads
+    cache: Params = {"pos": jnp.zeros((), jnp.int32)}
+    if cfg.family in ("dense", "vlm", "moe"):
+        cache["k"] = jnp.zeros((cfg.n_layers, batch, max_len, Hkv, hd), dtype)
+        cache["v"] = jnp.zeros((cfg.n_layers, batch, max_len, Hkv, hd), dtype)
+    elif cfg.family == "ssm":
+        st = S.init_ssm_state(cfg, batch, dtype)
+        cache["ssm"] = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape), st)
+    elif cfg.family == "hybrid":
+        st = S.init_ssm_state(cfg, batch, dtype)
+        cache["ssm"] = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape), st)
+        G = cfg.n_layers // cfg.shared_attn_every
+        cache["k"] = jnp.zeros((G, batch, max_len, Hkv, hd), dtype)
+        cache["v"] = jnp.zeros((G, batch, max_len, Hkv, hd), dtype)
+    elif cfg.family == "encdec":
+        cache["k"] = jnp.zeros((cfg.n_layers, batch, max_len, Hkv, hd), dtype)
+        cache["v"] = jnp.zeros((cfg.n_layers, batch, max_len, Hkv, hd), dtype)
+        cache["enc_out"] = jnp.zeros((batch, cfg.max_source_len, cfg.d_model),
+                                     dtype)
+    return cache
+
+
+def serve_step(cfg: ModelConfig, params: Params, cache: Params, tokens):
+    """One decode step: tokens (B, 1) → (logits (B, vocab), new cache)."""
+    dtype = compute_dtype(cfg)
+    eps = cfg.norm_eps
+    pos = cache["pos"]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+    new_cache = dict(cache)
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        windows = _windows_per_layer(cfg, cache["k"].shape[2])
+
+        def body(x, xs):
+            lp, kc, vc = xs[0], xs[1], xs[2]
+            window = xs[3] if windows is not None else None
+            lp = jax.tree_util.tree_map(lambda w: w.astype(dtype), lp)
+            h = L.rms_norm(x, lp["ln1"], eps)
+            h, kc, vc = L.attention_decode(lp["attn"], h, kc, vc, pos,
+                                           window=window,
+                                           **_attn_kwargs(cfg))
+            x = x + h
+            h = L.rms_norm(x, lp["ln2"], eps)
+            if cfg.family == "moe":
+                h, _ = L.moe_block(lp["moe"], h, n_experts=cfg.n_experts,
+                                   top_k=cfg.experts_top_k,
+                                   mlp_type=cfg.mlp_type,
+                                   capacity_factor=cfg.capacity_factor,
+                                   shared_expert=cfg.shared_expert)
+            else:
+                h = L.mlp_block(lp["mlp"], h, cfg.mlp_type)
+            return x + h, (kc, vc)
+
+        xs = (params["layers"], cache["k"], cache["v"])
+        xs += (windows,) if windows is not None else ()
+        x, (k_new, v_new) = jax.lax.scan(body, x, xs)
+        new_cache.update(k=k_new, v=v_new)
+
+    elif cfg.family == "ssm":
+        def body(x, xs):
+            lp, st = xs
+            lp = jax.tree_util.tree_map(lambda w: w.astype(dtype), lp)
+            h, st = S.ssm_decode(lp["ssm"], L.rms_norm(x, lp["ln1"], eps),
+                                 st, cfg)
+            return x + h, st
+        x, ssm_new = jax.lax.scan(body, x, (params["layers"], cache["ssm"]))
+        new_cache.update(ssm=ssm_new)
+
+    elif cfg.family == "hybrid":
+        E = cfg.shared_attn_every
+        G = cfg.n_layers // E
+        grouped = jax.tree_util.tree_map(
+            lambda w: w.reshape((G, E) + w.shape[1:]), params["layers"])
+        ssm_grouped = jax.tree_util.tree_map(
+            lambda a: a.reshape((G, E) + a.shape[1:]), cache["ssm"])
+        sa = jax.tree_util.tree_map(lambda w: w.astype(dtype),
+                                    params["shared_attn"])
+
+        def inner(x, xs):
+            lp, st = xs
+            lp = jax.tree_util.tree_map(lambda w: w.astype(dtype), lp)
+            h, st = S.ssm_decode(lp["ssm"], L.rms_norm(x, lp["ln1"], eps),
+                                 st, cfg)
+            return x + h, st
+
+        def group(x, xs):
+            gp, gst, kc, vc = xs
+            x, gst = jax.lax.scan(inner, x, (gp, gst))
+            h = L.rms_norm(x, sa["ln"], eps)
+            h, kc, vc = L.attention_decode(sa["attn"], h, kc, vc, pos,
+                                           **_attn_kwargs(cfg))
+            return x + h, (gst, kc, vc)
+
+        x, (ssm_new, k_new, v_new) = jax.lax.scan(
+            group, x, (grouped, ssm_grouped, cache["k"], cache["v"]))
+        new_cache.update(
+            ssm=jax.tree_util.tree_map(
+                lambda a: a.reshape((cfg.n_layers,) + a.shape[2:]), ssm_new),
+            k=k_new, v=v_new)
+
+    elif cfg.family == "encdec":
+        e = cache["enc_out"]
+
+        def body(x, xs):
+            lp, kc, vc = xs
+            lp = jax.tree_util.tree_map(lambda w: w.astype(dtype), lp)
+            h = L.rms_norm(x, lp["ln1"], eps)
+            h, kc, vc = L.attention_decode(lp["attn"], h, kc, vc, pos,
+                                           **_attn_kwargs(cfg))
+            x = x + h
+            h = L.rms_norm(x, lp["ln_x"], eps)
+            x = x + _cross_attention(cfg, lp["cross"], h, e)
+            h = L.rms_norm(x, lp["ln2"], eps)
+            return x + L.mlp_block(lp["mlp"], h, cfg.mlp_type), (kc, vc)
+
+        x, (k_new, v_new) = jax.lax.scan(
+            body, x, (params["layers"], cache["k"], cache["v"]))
+        new_cache.update(k=k_new, v=v_new)
+    else:
+        raise ValueError(cfg.family)
+
+    x = L.rms_norm(x, params["final_norm"].astype(dtype), eps)
+    logits = unembed(cfg, params, x)[:, 0, :].astype(jnp.float32)
+    new_cache["pos"] = pos + 1
+    return logits, new_cache

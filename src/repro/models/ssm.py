@@ -1,0 +1,353 @@
+"""Mamba1 (selective scan) and Mamba2 (SSD) blocks, TPU-adapted.
+
+Hardware adaptation (DESIGN.md §3): instead of the CUDA selective-scan
+kernel's thread-parallel recurrence, we use chunked formulations that map
+onto TPU strengths —
+
+  * Mamba1: per-(channel, state) diagonal recurrence evaluated as a scan
+    over sequence chunks with a log-depth ``associative_scan`` inside each
+    chunk (VPU-friendly, O(chunk) live memory, numerically safe because all
+    decay products are ≤ 1).
+  * Mamba2: the SSD block decomposition — intra-chunk attention-like
+    matmuls + inter-chunk state recurrence — which is MXU-shaped matmul
+    work, exactly the insight that makes Mamba2 TPU-native.
+
+Decode steps are closed-form single-token state updates (O(1) in sequence
+length — why the ``long_500k`` cell is cheap for SSM archs).
+"""
+from __future__ import annotations
+
+import math
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _init, init_rms_norm, rms_norm
+
+Params = Dict[str, Any]
+
+
+# ----------------------------------------------------------------- conv1d --
+def causal_conv1d(x, w, b):
+    """Depthwise causal conv; x: (B, S, C), w: (C, K), b: (C,)."""
+    K = w.shape[1]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, j:j + x.shape[1], :] * w[None, None, :, K - 1 - j]
+              for j in range(K))
+    return out + b
+
+
+def conv_decode(x, conv_state, w, b):
+    """Single-token conv; x: (B, C); conv_state: (B, K-1, C)."""
+    window = jnp.concatenate([conv_state, x[:, None, :]], axis=1)  # (B,K,C)
+    out = jnp.einsum("bkc,ck->bc", window, w[:, ::-1]) + b
+    return out, window[:, 1:, :]
+
+
+# ----------------------------------------------------------------- mamba 1 --
+def init_mamba1(key, d_model: int, d_state: int, d_conv: int, expand: int,
+                dtype) -> Params:
+    di = expand * d_model
+    dt_rank = max(1, d_model // 16)
+    ks = jax.random.split(key, 7)
+    return {
+        "in_x": _init(ks[0], (d_model, di), dtype=dtype),
+        "in_z": _init(ks[5], (d_model, di), dtype=dtype),
+        "conv_w": _init(ks[1], (di, d_conv), scale=1.0 / math.sqrt(d_conv),
+                        dtype=dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": _init(ks[2], (di, dt_rank + 2 * d_state), dtype=dtype),
+        "dt_proj": _init(ks[3], (dt_rank, di), scale=1.0, dtype=dtype),
+        "dt_bias": jnp.zeros((di,), dtype),
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, d_state + 1, dtype=jnp.float32), (di, d_state))
+        ).astype(dtype),
+        "D": jnp.ones((di,), dtype),
+        "out_proj": _init(ks[4], (di, d_model), dtype=dtype),
+    }
+
+
+def _m1_gates(p, u, dt_rank, d_state):
+    """Shared projections: returns x(conv'd), z, dt, B, C."""
+    from repro.distributed import sharding as sh
+    x = sh.constrain(u @ p["in_x"], "batch", None, "model")
+    z = sh.constrain(u @ p["in_z"], "batch", None, "model")
+    x = causal_conv1d(x, p["conv_w"], p["conv_b"])
+    x = jax.nn.silu(x)
+    dbc = x @ p["x_proj"]
+    dt = dbc[..., :dt_rank]
+    Bs = dbc[..., dt_rank:dt_rank + d_state]
+    Cs = dbc[..., dt_rank + d_state:]
+    dt = jax.nn.softplus(dt @ p["dt_proj"] + p["dt_bias"])
+    return x, z, dt, Bs, Cs
+
+
+def _chunked_diag_scan(decay, inc, h0, chunk: int):
+    """h_t = decay_t ⊙ h_{t-1} + inc_t over axis 1, O(chunk) live memory.
+
+    decay/inc: (B, S, ...); h0: (B, ...).  Returns (all h_t, h_final).
+    """
+    B, S = decay.shape[:2]
+    nc = S // chunk
+    assert nc * chunk == S, f"S={S} not divisible by chunk={chunk}"
+    d_c = decay.reshape((B, nc, chunk) + decay.shape[2:])
+    i_c = inc.reshape((B, nc, chunk) + inc.shape[2:])
+
+    def combine(a, b):
+        (da, ia), (db, ib) = a, b
+        return da * db, db * ia + ib
+
+    def body(h, xs):
+        d, i = xs  # (B, chunk, ...)
+        D_cum, I_cum = jax.lax.associative_scan(combine, (d, i), axis=1)
+        h_t = D_cum * h[:, None] + I_cum
+        return h_t[:, -1], h_t
+
+    h_end, hs = jax.lax.scan(body, h0, (jnp.moveaxis(d_c, 1, 0),
+                                        jnp.moveaxis(i_c, 1, 0)))
+    hs = jnp.moveaxis(hs, 0, 1).reshape((B, S) + decay.shape[2:])
+    return hs, h_end
+
+
+#: §Perf iteration H1 (EXPERIMENTS.md): fuse gate→decay/inc construction and
+#: the y-projection into the chunk scan so the (B,S,d_inner,N) state tensors
+#: never round-trip HBM.  REPRO_MAMBA1_FUSED=0 restores the baseline.
+FUSED_DEFAULT = os.environ.get("REPRO_MAMBA1_FUSED", "1") == "1"
+
+
+def _mamba1_core_fused(x, dt, Bs, Cs, A, h0, chunk: int):
+    """y_t = C_t·h_t with h materialized only chunk-locally (VMEM-sized)."""
+    B, S, di = x.shape
+    nc = S // chunk
+    assert nc * chunk == S
+
+    def to_chunks(a):
+        return jnp.moveaxis(a.reshape((B, nc, chunk) + a.shape[2:]), 1, 0)
+
+    def combine(a, b):
+        (da, ia), (db, ib) = a, b
+        return da * db, db * ia + ib
+
+    def body(h, xs):
+        xc, dtc, bc, cc = xs                          # (B,c,di) / (B,c,N)
+        dtf = dtc.astype(jnp.float32)
+        decay = jnp.exp(dtf[..., None] * A)           # (B,c,di,N) temp
+        inc = (dtf * xc.astype(jnp.float32))[..., None] \
+            * bc.astype(jnp.float32)[:, :, None, :]
+        D_cum, I_cum = jax.lax.associative_scan(combine, (decay, inc),
+                                                axis=1)
+        h_t = D_cum * h[:, None] + I_cum
+        y = jnp.einsum("bcdn,bcn->bcd", h_t, cc.astype(jnp.float32))
+        return h_t[:, -1], y
+
+    _, ys = jax.lax.scan(body, h0,
+                         (to_chunks(x), to_chunks(dt), to_chunks(Bs),
+                          to_chunks(Cs)))
+    return jnp.moveaxis(ys, 0, 1).reshape(B, S, di)
+
+
+def mamba1_block(p: Params, u, *, d_state: int, chunk: int = 256,
+                 fused: Optional[bool] = None):
+    """Training/prefill forward; u: (B, S, d_model) → (B, S, d_model)."""
+    fused = FUSED_DEFAULT if fused is None else fused
+    dt_rank = p["dt_proj"].shape[0]
+    x, z, dt, Bs, Cs = _m1_gates(p, u, dt_rank, d_state)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))            # (di, N)
+    h0 = jnp.zeros((u.shape[0], x.shape[-1], d_state), jnp.float32)
+    if fused:
+        y = _mamba1_core_fused(x, dt, Bs, Cs, A, h0,
+                               min(chunk, u.shape[1]))
+    else:
+        dtf = dt.astype(jnp.float32)
+        decay = jnp.exp(dtf[..., None] * A)                  # (B,S,di,N)
+        inc = (dtf * x.astype(jnp.float32))[..., None] \
+            * Bs.astype(jnp.float32)[..., None, :]           # (B,S,di,N)
+        hs, _ = _chunked_diag_scan(decay, inc, h0,
+                                   min(chunk, u.shape[1]))
+        y = jnp.einsum("bsdn,bsn->bsd", hs, Cs.astype(jnp.float32))
+    y = y.astype(u.dtype) + p["D"] * x
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"]
+
+
+def mamba1_decode(p: Params, u, state, *, d_state: int):
+    """Single token; u: (B, 1, d); state = {"h": (B,di,N), "conv": (B,K-1,di)}."""
+    dt_rank = p["dt_proj"].shape[0]
+    x = u[:, 0] @ p["in_x"]
+    z = u[:, 0] @ p["in_z"]
+    x, conv = conv_decode(x, state["conv"].astype(x.dtype),
+                          p["conv_w"], p["conv_b"])
+    x = jax.nn.silu(x).astype(u.dtype)
+    dbc = x @ p["x_proj"]
+    dt = jax.nn.softplus(dbc[..., :dt_rank] @ p["dt_proj"] + p["dt_bias"])
+    Bs = dbc[..., dt_rank:dt_rank + d_state]
+    Cs = dbc[..., dt_rank + d_state:]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dtf = dt.astype(jnp.float32)
+    decay = jnp.exp(dtf[..., None] * A)                      # (B,di,N)
+    inc = (dtf * x.astype(jnp.float32))[..., None] \
+        * Bs.astype(jnp.float32)[..., None, :]
+    h = decay * state["h"] + inc
+    y = jnp.einsum("bdn,bn->bd", h, Cs.astype(jnp.float32)).astype(u.dtype)
+    y = y + p["D"] * x
+    y = y * jax.nn.silu(z)
+    out = (y @ p["out_proj"])[:, None, :].astype(u.dtype)
+    return out, {"h": h, "conv": conv.astype(state["conv"].dtype)}
+
+
+# ----------------------------------------------------------------- mamba 2 --
+def init_mamba2(key, d_model: int, d_state: int, d_conv: int, expand: int,
+                head_dim: int, dtype) -> Params:
+    di = expand * d_model
+    H = di // head_dim
+    ks = jax.random.split(key, 5)
+    return {
+        "in_z": _init(ks[0], (d_model, di), dtype=dtype),
+        "in_x": _init(ks[3], (d_model, di), dtype=dtype),
+        "in_B": _init(ks[4], (d_model, d_state), dtype=dtype),
+        "in_C": _init(jax.random.fold_in(ks[4], 1), (d_model, d_state),
+                      dtype=dtype),
+        "in_dt": _init(jax.random.fold_in(ks[4], 2), (d_model, H),
+                       dtype=dtype),
+        "conv_w": _init(ks[1], (di, d_conv), scale=1.0 / math.sqrt(d_conv),
+                        dtype=dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "A_log": jnp.zeros((H,), dtype),
+        "dt_bias": jnp.zeros((H,), dtype),
+        "D": jnp.ones((H,), dtype),
+        "norm": init_rms_norm(di, dtype),
+        "out_proj": _init(ks[2], (di, d_model), dtype=dtype),
+    }
+
+
+def _m2_split(p, u, di, d_state, H):
+    from repro.distributed import sharding as sh
+    z = sh.constrain(u @ p["in_z"], *(("batch", None, "model")
+                                      if u.ndim == 3 else ("batch", "model")))
+    x = sh.constrain(u @ p["in_x"], *(("batch", None, "model")
+                                      if u.ndim == 3 else ("batch", "model")))
+    Bs = u @ p["in_B"]
+    Cs = u @ p["in_C"]
+    dt = jax.nn.softplus(u @ p["in_dt"] + p["dt_bias"])
+    return z, x, Bs, Cs, dt
+
+
+def mamba2_block(p: Params, u, *, d_state: int, head_dim: int,
+                 chunk: int = 128, eps: float = 1e-6):
+    """SSD chunked forward; u: (B, S, d) → (B, S, d).
+
+    Y_t = C_t · (exp(ΣL) R_chunk + Σ_{j≤t} exp(L_t − L_j) B_j (dt_j x_j))
+          + D ⊙ x_t — all chunk-local terms are plain matmuls (MXU).
+    """
+    B, S, _ = u.shape
+    di = p["out_proj"].shape[0]
+    H = di // head_dim
+    chunk = min(chunk, S)
+    nc = S // chunk
+    assert nc * chunk == S
+    z, x, Bs, Cs, dt = _m2_split(p, u, di, d_state, H)
+    x = jax.nn.silu(causal_conv1d(x, p["conv_w"], p["conv_b"]))
+    from repro.distributed import sharding as sh
+    xh = x.reshape(B, nc, chunk, H, head_dim).astype(jnp.float32)
+    xh = sh.constrain(xh, "batch", None, None, "model", None)
+    Bc = Bs.reshape(B, nc, chunk, d_state).astype(jnp.float32)
+    Cc = Cs.reshape(B, nc, chunk, d_state).astype(jnp.float32)
+    dtc = dt.reshape(B, nc, chunk, H).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))             # (H,)
+    logdec = dtc * A                                          # (B,nc,c,H) ≤ 0
+    cumL = jnp.cumsum(logdec, axis=2)                         # inclusive
+    xdt = xh * dtc[..., None]                                 # (B,nc,c,H,P)
+
+    # intra-chunk: masked decay-weighted attention-like matmul
+    scores = jnp.einsum("bnik,bnjk->bnij", Cc, Bc)            # (B,nc,c,c)
+    gap = cumL[:, :, :, None, :] - cumL[:, :, None, :, :]     # (B,nc,i,j,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    M = jnp.where(tri[None, None, :, :, None], jnp.exp(gap), 0.0)
+    y_intra = jnp.einsum("bnij,bnijh,bnjhp->bnihp", scores, M, xdt)
+
+    # chunk summaries and inter-chunk recurrence
+    decay_to_end = jnp.exp(cumL[:, :, -1:, :] - cumL)         # (B,nc,c,H)
+    S_n = jnp.einsum("bnjh,bnjk,bnjhp->bnhkp", decay_to_end, Bc, xdt)
+    a_tot = jnp.exp(cumL[:, :, -1, :])                        # (B,nc,H)
+
+    def body(R, xs):
+        s_n, a_n = xs
+        R_next = a_n[..., None, None] * R + s_n
+        return R_next, R                                      # emit pre-state
+
+    R0 = jnp.zeros((B, H, d_state, head_dim), jnp.float32)
+    _, R_stack = jax.lax.scan(body, R0, (jnp.moveaxis(S_n, 1, 0),
+                                         jnp.moveaxis(a_tot, 1, 0)))
+    R_stack = jnp.moveaxis(R_stack, 0, 1)                     # (B,nc,H,N,P)
+    y_inter = jnp.einsum("bnik,bnih,bnhkp->bnihp",
+                         Cc, jnp.exp(cumL), R_stack)
+
+    y = (y_intra + y_inter).reshape(B, S, H, head_dim)
+    y = y + xh.reshape(B, S, H, head_dim) * p["D"].astype(jnp.float32)[..., None]
+    y = y.reshape(B, S, di).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], eps)
+    return y @ p["out_proj"]
+
+
+def mamba2_decode(p: Params, u, state, *, d_state: int, head_dim: int,
+                  eps: float = 1e-6):
+    """Single token; state = {"h": (B,H,N,P), "conv": (B,K-1,di)}."""
+    B = u.shape[0]
+    di = p["out_proj"].shape[0]
+    H = di // head_dim
+    z, x, Bs, Cs, dt = _m2_split(p, u[:, 0], di, d_state, H)
+    x, conv = conv_decode(x, state["conv"].astype(x.dtype),
+                          p["conv_w"], p["conv_b"])
+    x = jax.nn.silu(x)
+    xh = x.reshape(B, H, head_dim).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt.astype(jnp.float32) * A)                   # (B,H)
+    inc = jnp.einsum("bk,bhp->bhkp", Bs.astype(jnp.float32),
+                     xh * dt.astype(jnp.float32)[..., None])
+    h = a[..., None, None] * state["h"] + inc
+    y = jnp.einsum("bk,bhkp->bhp", Cs.astype(jnp.float32), h)
+    y = y + xh * p["D"].astype(jnp.float32)[..., None]
+    y = y.reshape(B, di).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], eps)
+    return ((y @ p["out_proj"])[:, None, :].astype(u.dtype),
+            {"h": h, "conv": conv.astype(state["conv"].dtype)})
+
+
+def init_ssm(key, cfg, dtype) -> Params:
+    if cfg.ssm_type == "mamba1":
+        return init_mamba1(key, cfg.d_model, cfg.ssm_state, cfg.ssm_conv,
+                           cfg.ssm_expand, dtype)
+    return init_mamba2(key, cfg.d_model, cfg.ssm_state, cfg.ssm_conv,
+                       cfg.ssm_expand, cfg.ssm_head_dim, dtype)
+
+
+def ssm_block(p: Params, u, cfg, chunk: int = 0):
+    # chunk=1024 from §Perf H1 iterations 3-4: larger chunks amortize the
+    # per-iteration scan traffic (smaller chunks were measured WORSE).
+    chunk = chunk or int(os.environ.get(
+        "REPRO_SSM_CHUNK", 1024 if cfg.ssm_type == "mamba1" else 128))
+    if cfg.ssm_type == "mamba1":
+        return mamba1_block(p, u, d_state=cfg.ssm_state, chunk=chunk)
+    return mamba2_block(p, u, d_state=cfg.ssm_state,
+                        head_dim=cfg.ssm_head_dim, chunk=chunk,
+                        eps=cfg.norm_eps)
+
+
+def ssm_decode(p: Params, u, state, cfg):
+    if cfg.ssm_type == "mamba1":
+        return mamba1_decode(p, u, state, d_state=cfg.ssm_state)
+    return mamba2_decode(p, u, state, d_state=cfg.ssm_state,
+                         head_dim=cfg.ssm_head_dim, eps=cfg.norm_eps)
+
+
+def init_ssm_state(cfg, batch: int, dtype=jnp.float32) -> Params:
+    di = cfg.d_inner
+    conv = jnp.zeros((batch, cfg.ssm_conv - 1, di), dtype)
+    if cfg.ssm_type == "mamba1":
+        h = jnp.zeros((batch, di, cfg.ssm_state), jnp.float32)
+    else:
+        h = jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_state,
+                       cfg.ssm_head_dim), jnp.float32)
+    return {"h": h, "conv": conv}

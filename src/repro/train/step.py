@@ -1,0 +1,74 @@
+"""Train / serve step builders — the jitted units the launcher lowers.
+
+``make_train_step(cfg, opt)`` returns a pure function
+    (params, opt_state, batch) → (params, opt_state, metrics)
+with the sequence-chunked loss head, and ``make_serve_step(cfg)`` the
+decode step (cache-functional).  Gradient compression for the cross-pod
+reduction is a wrapper from ``repro.distributed.grad_compress``.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+from repro.optim import adamw
+
+
+def make_train_step(cfg: ModelConfig, opt: adamw.AdamWConfig,
+                    loss_chunk: int = 256,
+                    grad_transform: Optional[Callable] = None):
+    """Build the fused loss+grad+update step."""
+
+    def loss_fn(params, batch):
+        kw = {}
+        if "patch_embeds" in batch:
+            kw["patch_embeds"] = batch["patch_embeds"]
+        if "enc_embeds" in batch:
+            kw["enc_embeds"] = batch["enc_embeds"]
+        return lm.lm_loss(cfg, params, batch["tokens"], batch["labels"],
+                          loss_chunk=loss_chunk, **kw)
+
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        params, opt_state, stats = adamw.update(opt, grads, opt_state,
+                                                params)
+        metrics = {"loss": loss, **stats}
+        return params, opt_state, metrics
+
+    return step
+
+
+def make_eval_step(cfg: ModelConfig, loss_chunk: int = 256):
+    def step(params, batch):
+        kw = {k: batch[k] for k in ("patch_embeds", "enc_embeds")
+              if k in batch}
+        return lm.lm_loss(cfg, params, batch["tokens"], batch["labels"],
+                          loss_chunk=loss_chunk, **kw)
+    return step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    """Full-sequence forward (prompt ingestion): tokens → last-token logits.
+
+    This is the compute shape of serving prefill; see EXPERIMENTS.md
+    §Dry-run for the cache-write accounting.
+    """
+    def step(params, batch):
+        kw = {k: batch[k] for k in ("patch_embeds", "enc_embeds")
+              if k in batch}
+        hidden, _ = lm.forward_hidden(cfg, params, batch["tokens"], **kw)
+        return lm.unembed(cfg, params, hidden[:, -1:, :])[:, 0, :]
+    return step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def step(params, cache, tokens):
+        return lm.serve_step(cfg, params, cache, tokens)
+    return step

@@ -1,0 +1,272 @@
+"""Checkpoint layer: shard-run decomposition, pytree round-trips,
+compressed chunking, manager semantics (async/atomic/retention/fallback)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import (CheckpointManager, chunk_sizes, leaf_name,
+                              read_manifest, restore, runs_cover_exactly,
+                              save, shard_runs)
+from repro.core import ScdaError, scan_sections
+
+
+# ------------------------------------------------------------------ layout --
+class TestShardRuns:
+    def test_whole_tensor_is_one_run(self):
+        runs = shard_runs((4, 6), (slice(0, 4), slice(0, 6)), 4)
+        assert runs == [(0, 0, 96)]
+
+    def test_leading_axis_shard_is_one_run(self):
+        runs = shard_runs((8, 6), (slice(2, 4), slice(0, 6)), 4)
+        assert runs == [(2 * 6 * 4, 0, 2 * 6 * 4)]
+
+    def test_trailing_axis_shard_is_strided(self):
+        runs = shard_runs((4, 6), (slice(0, 4), slice(3, 6)), 1)
+        assert runs == [(3, 0, 3), (9, 3, 3), (15, 6, 3), (21, 9, 3)]
+
+    def test_2d_block(self):
+        runs = shard_runs((4, 6), (slice(2, 4), slice(0, 3)), 1)
+        assert runs == [(12, 0, 3), (18, 3, 3)]
+
+    def test_scalar(self):
+        assert shard_runs((), (), 8) == [(0, 0, 8)]
+
+    def test_empty_shard(self):
+        assert shard_runs((4, 6), (slice(2, 2), slice(0, 6)), 4) == []
+
+    @given(st.integers(1, 12), st.integers(1, 12), st.integers(1, 4),
+           st.data())
+    @settings(max_examples=50, deadline=None)
+    def test_runs_reassemble_correctly(self, d0, d1, itemsize, data):
+        """Property: runs copy exactly the shard's bytes at the right spots."""
+        a0 = data.draw(st.integers(0, d0 - 1))
+        b0 = data.draw(st.integers(a0 + 1, d0))
+        a1 = data.draw(st.integers(0, d1 - 1))
+        b1 = data.draw(st.integers(a1 + 1, d1))
+        global_ = np.arange(d0 * d1 * itemsize, dtype=np.uint8) % 251
+        global_ = global_.reshape(d0, d1 * itemsize)
+        elem = global_.reshape(d0, d1, itemsize)
+        shard = elem[a0:b0, a1:b1]
+        flat_shard = shard.tobytes()
+        flat_global = global_.tobytes()
+        runs = shard_runs((d0, d1), (slice(a0, b0), slice(a1, b1)), itemsize)
+        assert sum(n for _, _, n in runs) == len(flat_shard)
+        for goff, loff, n in runs:
+            assert flat_global[goff:goff + n] == flat_shard[loff:loff + n]
+
+    def test_cover_exactly(self):
+        r1 = shard_runs((4, 4), (slice(0, 2), slice(0, 4)), 1)
+        r2 = shard_runs((4, 4), (slice(2, 4), slice(0, 4)), 1)
+        assert runs_cover_exactly([r1, r2], 16)
+        assert not runs_cover_exactly([r1, r1], 16)
+        assert not runs_cover_exactly([r1], 16)
+
+    def test_chunk_sizes(self):
+        assert chunk_sizes(0, 10) == []
+        assert chunk_sizes(10, 10) == [10]
+        assert chunk_sizes(25, 10) == [10, 10, 5]
+
+
+# ---------------------------------------------------------------- round-trip --
+def make_state():
+    k = jax.random.PRNGKey(0)
+    return {
+        "params": {
+            "embed": jax.random.normal(k, (32, 16), jnp.float32),
+            "layers": {
+                "w": jax.random.normal(k, (4, 16, 16), jnp.bfloat16),
+                "b": jnp.zeros((4, 16), jnp.float32),
+            },
+        },
+        "opt": {
+            "mu": jnp.ones((32, 16), jnp.float32) * 0.5,
+            "count": jnp.array(7, jnp.int32),
+        },
+        "step": 123,             # aux (non-array) leaf
+        "run_name": "test-run",  # aux string leaf
+    }
+
+
+def assert_tree_equal(a, b):
+    fa, _ = jax.tree_util.tree_flatten(a)
+    fb, _ = jax.tree_util.tree_flatten(b)
+    assert len(fa) == len(fb)
+    for x, y in zip(fa, fb):
+        if isinstance(x, (jax.Array, np.ndarray)):
+            assert np.asarray(x).dtype == np.asarray(y).dtype
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        else:
+            assert x == y
+
+
+class TestPytreeRoundTrip:
+    def test_raw(self, tmp_path):
+        state = make_state()
+        p = str(tmp_path / "c.scda")
+        save(p, state, step=123)
+        like = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(np.shape(x), np.asarray(x).dtype)
+            if isinstance(x, (jax.Array, np.ndarray)) else x, state)
+        out, step = restore(p, like)
+        assert step == 123
+        assert_tree_equal(out, state)
+
+    def test_compressed(self, tmp_path):
+        state = make_state()
+        p = str(tmp_path / "c.scda")
+        save(p, state, step=5, compressed=True, chunk_bytes=256)
+        out, step = restore(p, state)
+        assert step == 5
+        assert_tree_equal(out, state)
+
+    def test_restore_without_like(self, tmp_path):
+        state = {"a": jnp.arange(10, dtype=jnp.int32),
+                 "nested": {"b": jnp.ones((3, 3))}}
+        p = str(tmp_path / "c.scda")
+        save(p, state, step=1)
+        out, _ = restore(p)
+        np.testing.assert_array_equal(out["a"], np.arange(10))
+        np.testing.assert_array_equal(out["nested"]["b"], np.ones((3, 3)))
+
+    def test_manifest_probe(self, tmp_path):
+        state = make_state()
+        p = str(tmp_path / "c.scda")
+        save(p, state, step=42)
+        doc = read_manifest(p)
+        assert doc["step"] == 42
+        names = {l["name"] for l in doc["leaves"]}
+        assert "params/embed" in names
+        assert doc["aux"]["step"] == 123
+
+    def test_bytes_deterministic(self, tmp_path):
+        """Same logical state → identical checkpoint bytes (archival)."""
+        state = make_state()
+        p1, p2 = str(tmp_path / "a.scda"), str(tmp_path / "b.scda")
+        save(p1, state, step=9)
+        save(p2, jax.tree_util.tree_map(lambda x: x, state), step=9)
+        assert open(p1, "rb").read() == open(p2, "rb").read()
+
+    def test_file_is_valid_scda(self, tmp_path):
+        """The checkpoint must be an ordinary scda file, inspectable by any
+        conforming reader with no knowledge of the checkpoint layer."""
+        p = str(tmp_path / "c.scda")
+        save(p, make_state(), step=3)
+        headers = scan_sections(p)
+        assert headers[0].type == "I"
+        assert headers[1].type == "B"
+        assert all(h.type == "A" for h in headers[2:])
+
+    def test_compressed_file_sections(self, tmp_path):
+        p = str(tmp_path / "c.scda")
+        save(p, make_state(), step=3, compressed=True, chunk_bytes=128)
+        decoded = scan_sections(p, decode=True)
+        assert all(h.type == "V" and h.decoded for h in decoded[2:])
+
+    def test_shape_mismatch_rejected(self, tmp_path):
+        p = str(tmp_path / "c.scda")
+        save(p, {"w": jnp.zeros((4, 4))})
+        with pytest.raises(ScdaError):
+            restore(p, {"w": jax.ShapeDtypeStruct((4, 5), jnp.float32)})
+
+    def test_missing_leaf_rejected(self, tmp_path):
+        p = str(tmp_path / "c.scda")
+        save(p, {"w": jnp.zeros((4, 4))})
+        with pytest.raises(ScdaError) as e:
+            restore(p, {"w": jnp.zeros((4, 4)), "extra": jnp.zeros(3)})
+        assert "extra" in str(e.value)
+
+    def test_subset_restore_skips_unwanted(self, tmp_path):
+        """Selective restore: only requested leaves are materialized."""
+        p = str(tmp_path / "c.scda")
+        state = make_state()
+        save(p, state, step=1)
+        like = {"params": {"embed": jax.ShapeDtypeStruct(
+            (32, 16), jnp.float32)}}
+        out, _ = restore(p, like)
+        np.testing.assert_array_equal(out["params"]["embed"],
+                                      np.asarray(state["params"]["embed"]))
+
+
+class TestLeafNames:
+    def test_dict_and_list_paths(self):
+        from repro.checkpoint import flatten_named
+        named, _ = flatten_named({"a": [jnp.zeros(1), {"b": 2}]})
+        assert [n for n, _ in named] == ["a/0", "a/1/b"]
+
+
+# ------------------------------------------------------------------ manager --
+class TestCheckpointManager:
+    def test_save_restore_latest(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path / "ckpts"), keep=2)
+        state = make_state()
+        mgr.save(10, state, blocking=True)
+        mgr.save(20, state, blocking=True)
+        assert mgr.latest_step() == 20
+        out, step = mgr.restore_latest(state)
+        assert step == 20
+        assert_tree_equal(out, state)
+
+    def test_async_save(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path / "ckpts"))
+        state = make_state()
+        mgr.save(1, state)     # async
+        mgr.wait()
+        assert mgr.latest_step() == 1
+
+    def test_retention(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path / "ckpts"), keep=2)
+        state = {"x": jnp.zeros(4)}
+        for s in (1, 2, 3, 4):
+            mgr.save(s, state, blocking=True)
+        assert mgr.all_steps() == [3, 4]
+
+    def test_crash_before_commit_leaves_no_partial(self, tmp_path):
+        d = str(tmp_path / "ckpts")
+        mgr = CheckpointManager(d, keep=3)
+        state = {"x": jnp.arange(100, dtype=jnp.float32)}
+        mgr.save(1, state, blocking=True)
+        mgr._crash_before_commit = True
+        with pytest.raises(RuntimeError):
+            mgr.save(2, state, blocking=True)
+        # step 2 must not be visible; step 1 must still restore
+        assert mgr.all_steps() == [1]
+        out, step = mgr.restore_latest(state)
+        assert step == 1
+
+    def test_corrupt_latest_falls_back(self, tmp_path):
+        d = str(tmp_path / "ckpts")
+        mgr = CheckpointManager(d, keep=3)
+        state = {"x": jnp.arange(10, dtype=jnp.float32)}
+        mgr.save(1, state, blocking=True)
+        mgr.save(2, state, blocking=True)
+        # corrupt the newest file
+        with open(mgr.path_for(2), "r+b") as fh:
+            fh.seek(0)
+            fh.write(b"garbage!")
+        out, step = mgr.restore_latest(state)
+        assert step == 1
+
+    def test_restore_or_init(self, tmp_path):
+        d = str(tmp_path / "ckpts")
+        mgr = CheckpointManager(d)
+        state = {"x": jnp.ones(3)}
+        tree, step = mgr.restore_or_init(lambda: state, like=state)
+        assert step == -1
+        mgr.save(7, state, blocking=True)
+        tree, step = mgr.restore_or_init(lambda: state, like=state)
+        assert step == 7
+
+    def test_async_error_surfaces_on_next_call(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path / "ckpts"))
+        mgr._crash_before_commit = True
+        mgr.save(1, {"x": jnp.zeros(2)})  # async; fails in background
+        with pytest.raises(RuntimeError):
+            mgr.wait()
+        # manager stays usable (training never crashed)
+        mgr._crash_before_commit = False
+        mgr.save(2, {"x": jnp.zeros(2)}, blocking=True)
+        assert mgr.all_steps() == [2]

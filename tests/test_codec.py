@@ -1,0 +1,109 @@
+"""§3 compression convention tests: stage-1/stage-2 algorithm + checks."""
+import base64
+import struct
+import zlib
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import codec, spec
+from repro.core.errors import ScdaError, ScdaErrorCode
+
+
+class TestStage1Stage2:
+    def test_structure(self):
+        data = b"hello world" * 10
+        stream = codec.compress(data)
+        # every line is ≤76 code bytes + 2 break bytes
+        i = 0
+        while i < len(stream):
+            chunk = stream[i:i + 78]
+            assert len(chunk) >= 3
+            i += len(chunk)
+        # stage 1: 8-byte BE size + 'z' + zlib stream
+        code = b"".join(stream[j:j + 78][:-2]
+                        for j in range(0, len(stream), 78))
+        stage1 = base64.b64decode(code, validate=True)
+        assert struct.unpack(">Q", stage1[:8])[0] == len(data)
+        assert stage1[8:9] == b"z"
+        assert zlib.decompress(stage1[9:]) == data
+
+    def test_unix_break_bytes(self):
+        import os
+        stream = codec.compress(os.urandom(300), spec.UNIX)
+        assert len(stream) > 78 and stream[76:78] == b"=\n"
+
+    def test_mime_break_bytes(self):
+        import os
+        stream = codec.compress(os.urandom(300), spec.MIME)
+        assert len(stream) > 78 and stream[76:78] == b"\r\n"
+
+    def test_ascii_output(self):
+        # §1: compressed data re-encoded to ASCII keeps the file ASCII
+        stream = codec.compress(bytes(range(256)))
+        assert all(b < 128 for b in stream)
+
+    def test_level_zero_legal(self):
+        data = b"some incompressible-ish data 123"
+        assert codec.decompress(codec.compress(data, level=0)) == data
+
+    @given(st.binary(max_size=5000),
+           st.sampled_from([spec.UNIX, spec.MIME]),
+           st.sampled_from([0, 1, 9]))
+    @settings(max_examples=60, deadline=None)
+    def test_roundtrip(self, data, style, level):
+        assert codec.decompress(codec.compress(data, style, level)) == data
+
+    def test_exact_76_multiple_gets_single_break(self):
+        # find data whose encoding is an exact multiple of 76 → stream ends
+        # with exactly one break after the full final line
+        for n in range(200):
+            data = bytes((i * 7) % 256 for i in range(n))
+            stream = codec.compress(data)
+            stage1_len = len(base64.b64encode(
+                struct.pack(">Q", n) + b"z" + zlib.compress(data, 9)))
+            if stage1_len % 76 == 0:
+                assert len(stream) == stage1_len + (stage1_len // 76) * 2
+                assert codec.decompress(stream) == data
+                return
+        pytest.skip("no exact-multiple case found in sweep")
+
+
+class TestChecks:
+    """The three redundant checks of §3.1 must all be enforced."""
+
+    def test_size_mismatch_detected(self):
+        data = b"payload bytes"
+        stage1 = struct.pack(">Q", len(data) + 1) + b"z" + zlib.compress(data)
+        stream = codec.compress(b"")  # get valid framing, then rebuild
+        enc = base64.b64encode(stage1)
+        lines = [enc[i:i + 76] + b"=\n" for i in range(0, len(enc), 76)]
+        with pytest.raises(ScdaError) as e:
+            codec.decompress(b"".join(lines))
+        assert e.value.code == ScdaErrorCode.CORRUPT_CHECKSUM
+
+    def test_missing_z_marker(self):
+        stage1 = struct.pack(">Q", 3) + b"q" + zlib.compress(b"abc")
+        enc = base64.b64encode(stage1)
+        lines = [enc[i:i + 76] + b"=\n" for i in range(0, len(enc), 76)]
+        with pytest.raises(ScdaError) as e:
+            codec.decompress(b"".join(lines))
+        assert e.value.code == ScdaErrorCode.CORRUPT_ENCODING
+
+    def test_adler32_corruption_detected(self):
+        import os
+        stream = bytearray(codec.compress(os.urandom(500)))
+        # flip a code byte mid-stream (avoid break bytes at 76..77)
+        stream[40] = (stream[40] + 1) % 128 or 65
+        with pytest.raises(ScdaError):
+            codec.decompress(bytes(stream))
+
+    def test_truncated_stream(self):
+        with pytest.raises(ScdaError) as e:
+            codec.decompress(b"")
+        assert e.value.code == ScdaErrorCode.CORRUPT_ENCODING
+
+    def test_bad_base64(self):
+        with pytest.raises(ScdaError) as e:
+            codec.decompress(b"!!!!=\n")
+        assert e.value.code == ScdaErrorCode.CORRUPT_ENCODING

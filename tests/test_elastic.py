@@ -1,0 +1,19 @@
+"""Mesh-elastic checkpoint/restore across device topologies (subprocess:
+needs its own XLA device count, which must not leak into other tests)."""
+import os
+import subprocess
+import sys
+
+HELPER = os.path.join(os.path.dirname(__file__), "helpers",
+                      "elastic_roundtrip.py")
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_elastic_mesh_roundtrip(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(SRC)
+    out = subprocess.run(
+        [sys.executable, HELPER, str(tmp_path)],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "OK elastic" in out.stdout

@@ -1,0 +1,332 @@
+"""Writer/reader behaviour: round-trips, serial oracle equality, decode
+semantics (Table 2), sequencing errors, selective access."""
+import os
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ScdaError, ScdaErrorCode, SerialComm, codec, encode,
+                        fopen_read, fopen_write, partition, scan_sections,
+                        spec)
+
+
+@pytest.fixture
+def path(tmp_path):
+    return str(tmp_path / "test.scda")
+
+
+def serial_write(path, sections, user=b"u", vendor=b"vendor"):
+    """Write a file through the parallel writer with one rank."""
+    with fopen_write(SerialComm(), path, user, vendor) as f:
+        for kind, args in sections:
+            getattr(f, f"write_{kind}")(*args)
+
+
+class TestSerialEquivalenceToOracle:
+    """The parallel writer (P=1) must equal the in-memory oracle encoder."""
+
+    def test_header_only(self, path):
+        serial_write(path, [])
+        with open(path, "rb") as fh:
+            assert fh.read() == encode.encode_file(b"vendor", b"u", [])
+
+    def test_all_section_types(self, path):
+        inline = b"0123456789abcdef0123456789abcdef"
+        block = b"global simulation context\n"
+        arr = bytes(range(160))          # N=10, E=16
+        elements = [b"a", b"bb" * 30, b"", b"ccc"]
+        serial_write(path, [
+            ("inline", (b"i", inline)),
+            ("block", (b"b", block)),
+            ("array", (b"a", arr, [10], 16)),
+            ("varray", (b"v", elements, [4], [len(e) for e in elements])),
+        ])
+        expect = encode.encode_file(b"vendor", b"u", [
+            encode.encode_inline(b"i", inline),
+            encode.encode_block(b"b", block),
+            encode.encode_array(b"a", arr, 10, 16),
+            encode.encode_varray(b"v", elements),
+        ])
+        with open(path, "rb") as fh:
+            assert fh.read() == expect
+
+    def test_mime_style(self, path):
+        with fopen_write(SerialComm(), path, b"u", b"v",
+                         style=spec.MIME) as f:
+            f.write_block(b"b", b"data")
+        expect = (spec.file_header(b"v", b"u", spec.MIME)
+                  + encode.encode_block(b"b", b"data", spec.MIME))
+        with open(path, "rb") as fh:
+            assert fh.read() == expect
+
+    def test_ascii_payload_keeps_file_ascii(self, path):
+        """§1: pure ASCII data → the entire file stays ASCII."""
+        serial_write(path, [
+            ("inline", (b"note", b"x = 42; y = 3.14159; z = ok!\n###")),
+            ("block", (b"cfg", b"alpha = 1\nbeta = 2\n")),
+            ("array", (b"tbl", b"0123" * 8, [8], 4)),
+        ])
+        with open(path, "rb") as fh:
+            content = fh.read()
+        assert all(b < 128 for b in content)
+
+    def test_encoded_binary_file_stays_ascii_after_headers(self, path):
+        """§3: compressed+base64 payloads keep sections ASCII."""
+        binary = bytes(range(256)) * 4
+        serial_write(path, [("block", (b"blob", binary, None, 0, True))])
+        with open(path, "rb") as fh:
+            content = fh.read()
+        assert all(b < 128 for b in content)
+
+
+class TestRoundTrip:
+    def test_inline(self, path):
+        data = b"#" * 32
+        serial_write(path, [("inline", (b"i", data))])
+        with fopen_read(None, path) as r:
+            hdr = r.read_section_header()
+            assert (hdr.type, hdr.N, hdr.E) == ("I", 0, 0)
+            assert r.read_inline_data() == data
+            assert r.at_eof
+
+    def test_block(self, path):
+        data = os.urandom(1000)
+        serial_write(path, [("block", (b"blk", data))])
+        with fopen_read(None, path) as r:
+            hdr = r.read_section_header()
+            assert hdr.type == "B" and hdr.E == 1000
+            assert r.read_block_data() == data
+
+    def test_empty_block(self, path):
+        serial_write(path, [("block", (b"empty", b""))])
+        with fopen_read(None, path) as r:
+            hdr = r.read_section_header()
+            assert hdr.E == 0
+            assert r.read_block_data() == b""
+
+    def test_array(self, path):
+        data = os.urandom(7 * 24)
+        serial_write(path, [("array", (b"arr", data, [7], 24))])
+        with fopen_read(None, path) as r:
+            hdr = r.read_section_header()
+            assert (hdr.type, hdr.N, hdr.E) == ("A", 7, 24)
+            elems = r.read_array_data([7])
+            assert b"".join(elems) == data
+
+    def test_varray(self, path):
+        elements = [os.urandom(n) for n in (5, 0, 300, 1, 77)]
+        serial_write(path, [("varray", (b"v", elements, [5],
+                                        [len(e) for e in elements]))])
+        with fopen_read(None, path) as r:
+            hdr = r.read_section_header()
+            assert hdr.type == "V" and hdr.N == 5
+            sizes = r.read_varray_sizes([5])
+            assert sizes == [5, 0, 300, 1, 77]
+            out = r.read_varray_data([5], sizes)
+            assert out == elements
+
+    def test_multi_section_file_and_scan(self, path):
+        serial_write(path, [
+            ("inline", (b"one", b"1" * 32)),
+            ("array", (b"two", b"xy" * 10, [10], 2)),
+            ("block", (b"three", b"z")),
+        ])
+        headers = scan_sections(path)
+        assert [h.type for h in headers] == ["I", "A", "B"]
+        assert [h.user_string for h in headers] == [b"one", b"two", b"three"]
+
+    def test_zero_element_array(self, path):
+        serial_write(path, [("array", (b"none", b"", [0], 8))])
+        with fopen_read(None, path) as r:
+            hdr = r.read_section_header()
+            assert hdr.N == 0
+            assert r.read_array_data([0]) == []
+
+
+class TestCompressionConvention:
+    def test_block_encoded_roundtrip(self, path):
+        data = b"compressible " * 500
+        serial_write(path, [("block", (b"blk", data, None, 0, True))])
+        # decode=True → transparent
+        with fopen_read(None, path) as r:
+            hdr = r.read_section_header(decode=True)
+            assert hdr.type == "B" and hdr.decoded and hdr.E == len(data)
+            assert hdr.user_string == b"blk"
+            assert r.read_block_data() == data
+        # decode=False → the two raw sections (Table 2)
+        with fopen_read(None, path) as r:
+            h1 = r.read_section_header(decode=False)
+            assert h1.type == "I" and h1.user_string == codec.MAGIC_BLOCK
+            u = codec.parse_uncompressed_size_entry(r.read_inline_data())
+            assert u == len(data)
+            h2 = r.read_section_header(decode=False)
+            assert h2.type == "B" and h2.user_string == b"blk"
+            compressed = r.read_block_data()
+            assert codec.decompress(compressed) == data
+
+    def test_array_encoded_roundtrip(self, path):
+        E, N = 48, 12
+        data = bytes((i * 13) % 251 for i in range(N * E))
+        serial_write(path, [("array", (b"arr", data, [N], E, False, True))])
+        with fopen_read(None, path) as r:
+            hdr = r.read_section_header(decode=True)
+            assert hdr.type == "A" and hdr.decoded
+            assert hdr.N == N and hdr.E == E
+            elems = r.read_array_data([N])
+            assert b"".join(elems) == data
+
+    def test_varray_encoded_roundtrip(self, path):
+        elements = [b"q" * n for n in (100, 0, 3, 1000, 8)]
+        serial_write(path, [("varray", (b"v", elements, [5],
+                                        [len(e) for e in elements],
+                                        None, False, True))])
+        with fopen_read(None, path) as r:
+            hdr = r.read_section_header(decode=True)
+            assert hdr.type == "V" and hdr.decoded and hdr.N == 5
+            sizes = r.read_varray_sizes([5])
+            assert sizes == [100, 0, 3, 1000, 8]
+            out = r.read_varray_data([5], sizes)
+            assert out == elements
+
+    def test_decode_true_on_uncompressed_reads_raw(self, path):
+        """Table 2: input true + non-compression header → output false."""
+        serial_write(path, [("block", (b"plain", b"payload"))])
+        with fopen_read(None, path) as r:
+            hdr = r.read_section_header(decode=True)
+            assert hdr.type == "B" and not hdr.decoded
+            assert r.read_block_data() == b"payload"
+
+    def test_encoded_sections_skippable(self, path):
+        serial_write(path, [
+            ("block", (b"b1", b"x" * 100, None, 0, True)),
+            ("array", (b"a1", b"y" * 64, [8], 8, False, True)),
+            ("inline", (b"after", b"?" * 32)),
+        ])
+        with fopen_read(None, path) as r:
+            assert r.read_section_header().decoded
+            r.skip_data()
+            assert r.read_section_header().decoded
+            r.skip_data()
+            hdr = r.read_section_header()
+            assert hdr.type == "I" and hdr.user_string == b"after"
+
+
+class TestSelectiveAccess:
+    def test_windowed_reads(self, path):
+        """§1: selective random data access on array sections."""
+        N, E = 100, 16
+        data = b"".join(bytes([i] * E) for i in range(N))
+        serial_write(path, [("array", (b"arr", data, [N], E))])
+        with fopen_read(None, path) as r:
+            r.read_section_header()
+            w = r.read_array_windows([(10, 2), (99, 1), (0, 1)], E)
+            assert w[0] == bytes([10] * E) + bytes([11] * E)
+            assert w[1] == bytes([99] * E)
+            assert w[2] == bytes([0] * E)
+            r.skip_data()
+            assert r.at_eof
+
+
+class TestErrorsAndSequencing:
+    def test_reading_missing_file(self, tmp_path):
+        with pytest.raises(ScdaError) as e:
+            fopen_read(None, str(tmp_path / "nope.scda"))
+        assert e.value.code == ScdaErrorCode.FS_OPEN
+        assert e.value.group == 2
+
+    def test_not_an_scda_file(self, path):
+        with open(path, "wb") as fh:
+            fh.write(b"PK\x03\x04" + b"\0" * 124)
+        with pytest.raises(ScdaError) as e:
+            fopen_read(None, path)
+        assert e.value.group == 1
+
+    def test_truncated_header(self, path):
+        with open(path, "wb") as fh:
+            fh.write(b"scdata0 short")
+        with pytest.raises(ScdaError) as e:
+            fopen_read(None, path)
+        assert e.value.code == ScdaErrorCode.CORRUPT_TRUNCATED
+
+    def test_data_read_before_header(self, path):
+        serial_write(path, [("block", (b"b", b"d"))])
+        with fopen_read(None, path) as r:
+            with pytest.raises(ScdaError) as e:
+                r.read_block_data()
+            assert e.value.code == ScdaErrorCode.ARG_SEQUENCE
+
+    def test_varray_data_before_sizes(self, path):
+        serial_write(path, [("varray", (b"v", [b"ab"], [1], [2]))])
+        with fopen_read(None, path) as r:
+            r.read_section_header()
+            with pytest.raises(ScdaError) as e:
+                r.read_varray_data([1], [2])
+            assert e.value.code == ScdaErrorCode.ARG_SEQUENCE
+
+    def test_wrong_partition_sum_rejected(self, path):
+        serial_write(path, [("array", (b"a", b"x" * 10, [10], 1))])
+        with fopen_read(None, path) as r:
+            r.read_section_header()
+            with pytest.raises(ScdaError) as e:
+                r.read_array_data([9])
+            assert e.value.code == ScdaErrorCode.ARG_PARTITION
+
+    def test_inline_wrong_size_rejected(self, path):
+        with fopen_write(None, path) as f:
+            with pytest.raises(ScdaError) as e:
+                f.write_inline(b"i", b"only 20 bytes.......")
+            assert e.value.code == ScdaErrorCode.ARG_INLINE_SIZE
+
+    def test_overlong_user_string_rejected(self, path):
+        with fopen_write(None, path) as f:
+            with pytest.raises(ScdaError) as e:
+                f.write_block(b"u" * 59, b"d")
+            assert e.value.code == ScdaErrorCode.ARG_USER_STRING
+
+    def test_write_after_close(self, path):
+        f = fopen_write(None, path)
+        f.close()
+        with pytest.raises(ScdaError) as e:
+            f.write_block(b"b", b"d")
+        assert e.value.code == ScdaErrorCode.ARG_SEQUENCE
+
+    def test_truncated_section_detected(self, path):
+        serial_write(path, [("block", (b"b", b"x" * 100))])
+        size = os.path.getsize(path)
+        with open(path, "r+b") as fh:
+            fh.truncate(size - 40)
+        with fopen_read(None, path) as r:
+            r.read_section_header()
+            with pytest.raises(ScdaError) as e:
+                r.read_block_data()
+            assert e.value.group == 1
+
+
+class TestPropertyRoundTrips:
+    @given(st.binary(max_size=2000), st.booleans())
+    @settings(max_examples=30, deadline=None)
+    def test_block_any_bytes(self, data, enc):
+        import tempfile
+        with tempfile.TemporaryDirectory() as d:
+            p = os.path.join(d, "f.scda")
+            serial_write(p, [("block", (b"b", data, None, 0, enc))])
+            with fopen_read(None, p) as r:
+                hdr = r.read_section_header()
+                assert hdr.E == len(data)
+                assert r.read_block_data() == data
+
+    @given(st.lists(st.binary(max_size=200), max_size=12), st.booleans())
+    @settings(max_examples=30, deadline=None)
+    def test_varray_any_elements(self, elements, enc):
+        import tempfile
+        with tempfile.TemporaryDirectory() as d:
+            p = os.path.join(d, "f.scda")
+            serial_write(p, [("varray", (b"v", elements, [len(elements)],
+                                         [len(e) for e in elements],
+                                         None, False, enc))])
+            with fopen_read(None, p) as r:
+                hdr = r.read_section_header()
+                assert hdr.N == len(elements)
+                sizes = r.read_varray_sizes([hdr.N])
+                assert sizes == [len(e) for e in elements]
+                assert r.read_varray_data([hdr.N], sizes) == elements

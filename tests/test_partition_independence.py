@@ -1,0 +1,208 @@
+"""The paper's core claim: file contents are invariant under linear parallel
+repartition of the data prior to writing, and indistinguishable from writing
+in serial; files can be read under any partition that agrees on N.
+
+These tests run P genuine concurrent ranks (threads against one shared file,
+positioned writes — the MPI-IO pattern) and compare bytes across partitions.
+"""
+import os
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (SerialComm, ThreadComm, encode, fopen_read,
+                        fopen_write, partition, run_ranks)
+
+
+def split(data, counts, E=1):
+    """Slice global data into per-rank contiguous pieces."""
+    offs = partition.offsets(counts)
+    return [data[offs[p] * E:offs[p + 1] * E] for p in range(len(counts))]
+
+
+def parallel_write(path, P, build):
+    """Run the collective write workload ``build(f, rank)`` on P ranks."""
+    comms = ThreadComm.group(P)
+
+    def workload(comm):
+        with fopen_write(comm, path, b"user", b"vendor") as f:
+            build(f, comm.rank)
+
+    run_ranks(comms, workload)
+
+
+class TestWriteInvariance:
+    """Identical bytes for every partition, equal to the serial oracle."""
+
+    def test_array_all_partitions(self, tmp_path):
+        N, E = 24, 10
+        data = os.urandom(N * E)
+        oracle = encode.encode_file(b"vendor", b"user", [
+            encode.encode_array(b"arr", data, N, E)])
+
+        for counts in ([24], [12, 12], [24, 0], [0, 24], [1, 2, 3, 18],
+                       [5, 5, 5, 5, 4], [0, 0, 24, 0]):
+            path = str(tmp_path / f"arr_{len(counts)}_{counts[0]}.scda")
+            pieces = split(data, counts, E)
+            parallel_write(
+                path, len(counts),
+                lambda f, r: f.write_array(b"arr", pieces[r], counts, E))
+            with open(path, "rb") as fh:
+                assert fh.read() == oracle, f"partition {counts} differs"
+
+    def test_varray_all_partitions(self, tmp_path):
+        sizes = [3, 0, 47, 1, 12, 0, 200, 5]
+        elements = [os.urandom(s) for s in sizes]
+        oracle = encode.encode_file(b"vendor", b"user", [
+            encode.encode_varray(b"v", elements)])
+
+        for counts in ([8], [4, 4], [1, 1, 1, 1, 1, 1, 1, 1], [0, 8],
+                       [3, 0, 5]):
+            path = str(tmp_path / f"v_{len(counts)}_{counts[0]}.scda")
+            offs = partition.offsets(counts)
+            parallel_write(
+                path, len(counts),
+                lambda f, r: f.write_varray(
+                    b"v", elements[offs[r]:offs[r + 1]], counts,
+                    sizes[offs[r]:offs[r + 1]]))
+            with open(path, "rb") as fh:
+                assert fh.read() == oracle, f"partition {counts} differs"
+
+    def test_mixed_file_parallel_equals_serial(self, tmp_path):
+        """A realistic multi-section file written on 1 vs 4 ranks."""
+        N, E = 40, 8
+        arr = os.urandom(N * E)
+        blk = os.urandom(500)
+        inline = b"step 000041 time 1.5e-3 ok....!!"
+        vsizes = [7, 0, 13, 100, 2, 9, 1, 0, 55, 21]
+        velems = [os.urandom(s) for s in vsizes]
+
+        def build(counts):
+            def _b(f, r):
+                voffs = partition.offsets(counts2)
+                f.write_inline(b"status", inline if r == 0 else None)
+                f.write_block(b"ctx", blk if r == 0 else None, len(blk))
+                f.write_array(b"mesh", split(arr, counts, E)[r], counts, E)
+                f.write_varray(b"vdat", velems[voffs[r]:voffs[r + 1]],
+                               counts2, vsizes[voffs[r]:voffs[r + 1]])
+            return _b
+
+        counts2 = None
+        files = []
+        for counts, c2 in (([40], [10]), ([10, 10, 10, 10], [1, 3, 0, 6]),
+                           ([0, 40, 0, 0], [4, 4, 1, 1])):
+            counts2 = c2
+            path = str(tmp_path / f"mix_{len(counts)}_{counts[0]}.scda")
+            parallel_write(path, len(counts), build(counts))
+            with open(path, "rb") as fh:
+                files.append(fh.read())
+        assert files[0] == files[1] == files[2]
+
+    def test_encoded_array_partition_invariant(self, tmp_path):
+        """§3 per-element compression must also be partition-independent."""
+        N, E = 16, 64
+        data = (os.urandom(E // 2) + b"\0" * (E // 2)) * N
+        outs = []
+        for counts in ([16], [7, 9], [4, 4, 4, 4]):
+            path = str(tmp_path / f"enc_{len(counts)}.scda")
+            pieces = split(data, counts, E)
+            parallel_write(
+                path, len(counts),
+                lambda f, r: f.write_array(b"z", pieces[r], counts, E,
+                                           encode=True))
+            with open(path, "rb") as fh:
+                outs.append(fh.read())
+        assert outs[0] == outs[1] == outs[2]
+
+    @given(st.integers(1, 6), st.binary(min_size=0, max_size=400),
+           st.integers(1, 16), st.randoms(use_true_random=False))
+    @settings(max_examples=25, deadline=None)
+    def test_property_random_partitions(self, P, payload, E, rng):
+        """Hypothesis: any (data, E, random partition) → serial-equal bytes."""
+        import tempfile
+        n_extra = (-len(payload)) % E
+        data = payload + b"\0" * n_extra
+        N = len(data) // E
+        # random composition of N into P parts
+        counts = [0] * P
+        for _ in range(N):
+            counts[rng.randrange(P)] += 1
+        oracle = encode.encode_file(b"vendor", b"user", [
+            encode.encode_array(b"a", data, N, E)])
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "f.scda")
+            pieces = split(data, counts, E)
+            parallel_write(
+                path, P,
+                lambda f, r: f.write_array(b"a", pieces[r], counts, E))
+            with open(path, "rb") as fh:
+                assert fh.read() == oracle
+
+
+class TestReadAnyPartition:
+    """Write under one partition, read under others (paper §A.5)."""
+
+    def test_array_cross_partition(self, tmp_path):
+        N, E = 30, 12
+        data = os.urandom(N * E)
+        path = str(tmp_path / "a.scda")
+        wcounts = [13, 17]
+        parallel_write(path, 2,
+                       lambda f, r: f.write_array(
+                           b"a", split(data, wcounts, E)[r], wcounts, E))
+
+        for rcounts in ([30], [10, 10, 10], [0, 30], [1, 1, 28], [6] * 5):
+            comms = ThreadComm.group(len(rcounts))
+
+            def read(comm):
+                with fopen_read(comm, path) as r:
+                    hdr = r.read_section_header()
+                    assert (hdr.N, hdr.E) == (N, E)
+                    return b"".join(r.read_array_data(rcounts))
+
+            parts = run_ranks(comms, read)
+            assert b"".join(parts) == data
+
+    def test_varray_cross_partition_with_decode(self, tmp_path):
+        sizes = [100, 3, 0, 512, 77, 1]
+        elements = [os.urandom(s) for s in sizes]
+        path = str(tmp_path / "v.scda")
+        # write compressed on 3 ranks
+        wcounts = [2, 2, 2]
+        offs = partition.offsets(wcounts)
+        parallel_write(path, 3,
+                       lambda f, r: f.write_varray(
+                           b"v", elements[offs[r]:offs[r + 1]], wcounts,
+                           sizes[offs[r]:offs[r + 1]], encode=True))
+        # read decoded on 2 ranks with a different partition
+        rcounts = [5, 1]
+        roffs = partition.offsets(rcounts)
+        comms = ThreadComm.group(2)
+
+        def read(comm):
+            with fopen_read(comm, path) as r:
+                hdr = r.read_section_header(decode=True)
+                assert hdr.type == "V" and hdr.decoded and hdr.N == 6
+                ls = r.read_varray_sizes(rcounts)
+                assert ls == sizes[roffs[comm.rank]:roffs[comm.rank + 1]]
+                return r.read_varray_data(rcounts, ls)
+
+        parts = run_ranks(comms, read)
+        assert parts[0] + parts[1] == elements
+
+    def test_serial_write_parallel_read(self, tmp_path):
+        """Serial-equivalence in the other direction."""
+        N, E = 64, 4
+        data = os.urandom(N * E)
+        path = str(tmp_path / "s.scda")
+        with fopen_write(SerialComm(), path, b"user", b"vendor") as f:
+            f.write_array(b"a", data, [N], E)
+        comms = ThreadComm.group(4)
+        rcounts = [16, 16, 16, 16]
+
+        def read(comm):
+            with fopen_read(comm, path) as r:
+                r.read_section_header()
+                return b"".join(r.read_array_data(rcounts))
+
+        assert b"".join(run_ranks(comms, read)) == data

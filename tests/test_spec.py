@@ -1,0 +1,179 @@
+"""Byte-exact conformance tests for the scda format primitives (paper §2)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import spec
+from repro.core.errors import ScdaError, ScdaErrorCode
+
+
+# ---------------------------------------------------------------- padding --
+class TestFixedPadding:
+    def test_unix_layout(self):
+        # d=24, n=5 → p=19: ' ' + 16×'-' + "-\n"
+        out = spec.pad_fixed(b"hello", 24)
+        assert out == b"hello" + b" " + b"-" * 16 + b"-\n"
+        assert len(out) == 24
+
+    def test_mime_layout(self):
+        out = spec.pad_fixed(b"hello", 24, spec.MIME)
+        assert out == b"hello" + b" " + b"-" * 16 + b"\r\n"
+
+    def test_minimum_padding_is_four(self):
+        # n = d-4 → p = 4: ' ' + 1×'-' + 2 terminal bytes
+        out = spec.pad_fixed(b"x" * 20, 24)
+        assert out == b"x" * 20 + b" -" + b"-\n"
+
+    def test_empty_input(self):
+        out = spec.pad_fixed(b"", 8)
+        assert out == b" " + b"-" * 5 + b"-\n"
+
+    def test_overlong_rejected(self):
+        with pytest.raises(ScdaError) as e:
+            spec.pad_fixed(b"x" * 21, 24)
+        assert e.value.code == ScdaErrorCode.ARG_USER_STRING
+
+    @given(st.binary(max_size=58), st.sampled_from([spec.UNIX, spec.MIME]))
+    def test_roundtrip(self, data, style):
+        assert spec.unpad_fixed(spec.pad_fixed(data, 62, style), 62) == data
+
+    def test_unpad_rejects_bad_terminal(self):
+        with pytest.raises(ScdaError) as e:
+            spec.unpad_fixed(b"ab" + b" " + b"-" * 3 + b"xy", 8)
+        assert e.value.code == ScdaErrorCode.CORRUPT_PADDING
+
+    def test_unpad_rejects_missing_space(self):
+        with pytest.raises(ScdaError):
+            spec.unpad_fixed(b"abc" + b"-" * 3 + b"-\n", 8)
+
+
+class TestDataPadding:
+    @pytest.mark.parametrize("n,expect_p", [
+        (0, 32), (1, 31), (25, 7), (26, 38), (31, 33), (32, 32), (33, 31),
+        (57, 7), (58, 38), (64, 32),
+    ])
+    def test_length_rule(self, n, expect_p):
+        # p is the unique integer in [7, 38] with (n+p) % 32 == 0 (§2.1.2)
+        p = spec.data_pad_length(n)
+        assert p == expect_p
+        assert 7 <= p <= 38 and (n + p) % 32 == 0
+
+    def test_unix_not_ending_in_newline(self):
+        pad = spec.pad_data(1, ord("x"))
+        assert pad.startswith(b"\n=") and pad.endswith(b"\n\n")
+        assert len(pad) == 31
+
+    def test_unix_ending_in_newline(self):
+        pad = spec.pad_data(1, 0x0A)
+        assert pad.startswith(b"==") and pad.endswith(b"\n\n")
+
+    def test_mime_variants(self):
+        assert spec.pad_data(1, ord("x"), spec.MIME).startswith(b"\r\n")
+        assert spec.pad_data(1, 0x0A, spec.MIME).startswith(b"==")
+        assert spec.pad_data(1, ord("x"), spec.MIME).endswith(b"\r\n\r\n")
+
+    def test_zero_bytes(self):
+        pad = spec.pad_data(0, None)
+        assert len(pad) == 32 and pad.startswith(b"\n=")
+
+    @given(st.integers(0, 10_000), st.one_of(st.none(), st.integers(0, 255)),
+           st.sampled_from([spec.UNIX, spec.MIME]))
+    def test_always_correct_length_and_blank_line(self, n, last, style):
+        if n == 0:
+            last = None
+        elif last is None:
+            last = 0
+        pad = spec.pad_data(n, last, style)
+        assert len(pad) == spec.data_pad_length(n)
+        # §2.1: padding concludes with a blank line
+        assert pad.endswith(b"\n\n") or pad.endswith(b"\r\n\r\n")
+
+
+# ----------------------------------------------------------------- counts --
+class TestCountEntries:
+    def test_entry_is_32_bytes(self):
+        e = spec.count_entry(b"E", 12345)
+        assert len(e) == 32 and e.startswith(b"E 12345 ")
+
+    def test_roundtrip_extremes(self):
+        for v in (0, 1, 10**26 - 1):
+            assert spec.parse_count_entry(spec.count_entry(b"N", v), b"N") == v
+
+    def test_rejects_negative_and_overflow(self):
+        for v in (-1, 10**26):
+            with pytest.raises(ScdaError) as e:
+                spec.count_entry(b"E", v)
+            assert e.value.code == ScdaErrorCode.ARG_COUNT_RANGE
+
+    def test_rejects_leading_zeros(self):
+        bad = b"E " + spec.pad_fixed(b"007", 30)
+        with pytest.raises(ScdaError) as e:
+            spec.parse_count_entry(bad, b"E")
+        assert e.value.code == ScdaErrorCode.CORRUPT_COUNT
+
+    def test_rejects_wrong_letter(self):
+        with pytest.raises(ScdaError):
+            spec.parse_count_entry(spec.count_entry(b"E", 5), b"N")
+
+    @given(st.integers(0, 10**26 - 1))
+    def test_roundtrip(self, v):
+        assert spec.parse_count_entry(spec.count_entry(b"E", v), b"E") == v
+
+
+# ------------------------------------------------------------ file header --
+class TestFileHeader:
+    def test_magic_is_scdata0(self):
+        assert spec.MAGIC == b"scdata0"
+
+    def test_golden_128_bytes(self):
+        hdr = spec.file_header(b"libsc 2.8.5", b"hello scda")
+        assert len(hdr) == 128
+        assert hdr[:7] == b"scdata0"
+        assert hdr[7:8] == b" "
+        # vendor field: 'libsc 2.8.5' (11) + ' ' + 10×'-' + "-\n" (total 24)
+        assert hdr[8:32] == b"libsc 2.8.5 " + b"-" * 10 + b"-\n"
+        assert hdr[32:34] == b"F "
+        assert hdr[96:128] == spec.pad_data(0, None)
+
+    def test_roundtrip(self):
+        hdr = spec.file_header(b"vendor", b"user-string", version=0xA0)
+        parsed = spec.parse_file_header(hdr)
+        assert parsed.version == 0xA0
+        assert parsed.vendor == b"vendor"
+        assert parsed.user_string == b"user-string"
+
+    def test_version_range(self):
+        spec.file_header(b"", b"", version=0xFF)  # max version ok
+        with pytest.raises(ScdaError):
+            spec.file_header(b"", b"", version=0x9F)
+
+    def test_rejects_wrong_identifier(self):
+        hdr = bytearray(spec.file_header(b"v", b"u"))
+        hdr[2:4] = b"00"  # identifier (da)16 → (00)16
+        with pytest.raises(ScdaError) as e:
+            spec.parse_file_header(bytes(hdr))
+        assert e.value.code == ScdaErrorCode.CORRUPT_MAGIC
+
+    def test_rejects_overlong_vendor(self):
+        with pytest.raises(ScdaError) as e:
+            spec.file_header(b"x" * 21, b"")
+        assert e.value.code == ScdaErrorCode.ARG_VENDOR_STRING
+
+
+# --------------------------------------------------------- size arithmetic --
+class TestSectionSizes:
+    def test_inline_96(self):
+        assert spec.inline_section_bytes() == 96
+
+    @given(st.integers(0, 10**6))
+    def test_block(self, E):
+        assert spec.block_section_bytes(E) == 96 + spec.padded_data_bytes(E)
+        assert spec.block_section_bytes(E) % 32 == 0
+
+    @given(st.integers(0, 1000), st.integers(0, 1000))
+    def test_array_divisible_by_32(self, N, E):
+        assert spec.array_section_bytes(N, E) % 32 == 0
+
+    @given(st.lists(st.integers(0, 100), max_size=20))
+    def test_varray(self, sizes):
+        N, total = len(sizes), sum(sizes)
+        assert spec.varray_section_bytes(N, total) % 32 == 0
