@@ -32,7 +32,8 @@ def run(quick=False):
         mono = len(zlib.compress(data, 9))
         rows.append((f"compression.per_element_{esize_kb}KB", dt * 1e6,
                      f"ratio={len(data) / csize:.2f}x;"
-                     f"vs_monolithic={csize / (mono * 4 / 3):.2f}x"))
+                     f"vs_monolithic={csize / (mono * 4 / 3):.2f}x;"
+                     f"{total / dt / 1e6:.0f}MB/s"))
         t0 = time.perf_counter()
         for s in streams:
             codec.decompress(s)

@@ -1,6 +1,7 @@
 """§2 claim: the format is minimal — measure per-section byte overhead and
 header encode/decode cost."""
 import os
+import statistics
 import tempfile
 import time
 
@@ -8,10 +9,15 @@ from repro.core import SerialComm, encode, fopen_read, fopen_write, spec
 
 
 def _time(fn, n=200):
-    t0 = time.perf_counter()
+    """Median of n individually-timed calls — robust to GC/scheduler noise
+    that a plain mean-of-n absorbs."""
+    fn()  # warmup
+    samples = []
     for _ in range(n):
+        t0 = time.perf_counter()
         fn()
-    return (time.perf_counter() - t0) / n * 1e6
+        samples.append(time.perf_counter() - t0)
+    return statistics.median(samples) * 1e6
 
 
 def run(quick=False):
@@ -33,7 +39,7 @@ def run(quick=False):
     elements = [os.urandom(100) for _ in range(100)]
     enc = encode.encode_varray(b"u", elements)
     rows.append(("format.varray_overhead_100x100",
-                 _time(lambda: encode.encode_varray(b"u", elements), 20),
+                 _time(lambda: encode.encode_varray(b"u", elements), 100),
                  f"overhead={len(enc) - 100 * 100}B"))
     # header parse speed (the metadata-scan path)
     with tempfile.TemporaryDirectory() as d:

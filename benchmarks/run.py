@@ -6,12 +6,60 @@ the roofline summary from the dry-run artifacts.
 
 Prints ``name,us_per_call,derived`` CSV per the harness contract.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--json BENCH_io.json]
+
+``--json`` additionally distills the I/O-path trajectory (write/read MB/s
+per rank count, varray encode µs, codec MB/s, iovec coalescing speedup)
+into a machine-readable file so future PRs can regress against it.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import re
 import sys
+
+
+def _mbps(derived: str) -> float:
+    m = re.search(r"(\d+(?:\.\d+)?)MB/s", derived)
+    return float(m.group(1)) if m else 0.0
+
+
+def _distill(rows, quick: bool) -> dict:
+    """Map benchmark rows into the BENCH_io.json trajectory schema."""
+    out = {
+        "schema": "BENCH_io/1",
+        "quick": quick,
+        "write_MBps": {},
+        "read_MBps": {},
+        "varray_encode_100x100_us": None,
+        "scan_50_sections_us": None,
+        "codec_MBps": {},
+        "iovec": {},
+    }
+    for name, us, derived in rows:
+        m = re.match(r"parallel_io\.(write|read|write_sync)_p(\d+)", name)
+        if m:
+            out.setdefault(f"{m.group(1)}_MBps", {})[m.group(2)] = \
+                _mbps(derived)
+            continue
+        if name == "format.varray_overhead_100x100":
+            out["varray_encode_100x100_us"] = round(us, 1)
+        elif name == "format.scan_50_sections":
+            out["scan_50_sections_us"] = round(us, 1)
+        elif name.startswith("compression.per_element_"):
+            out["codec_MBps"]["deflate_" + name.rsplit("_", 1)[-1]] = \
+                _mbps(derived)
+        elif name.startswith("compression.inflate_"):
+            out["codec_MBps"]["inflate_" + name.rsplit("_", 1)[-1]] = \
+                _mbps(derived)
+        elif name.startswith("iovec."):
+            key = name.split(".", 1)[1].rsplit("_", 1)[0]
+            out["iovec"][key + "_us"] = round(us, 1)
+            m2 = re.search(r"speedup=(\d+(?:\.\d+)?)x", derived)
+            if m2:
+                out["iovec"]["speedup_x"] = float(m2.group(1))
+    return out
 
 
 def main() -> None:
@@ -20,26 +68,39 @@ def main() -> None:
                     help="smaller sizes (CI-speed)")
     ap.add_argument("--only", default="",
                     help="comma-separated benchmark prefixes to run")
+    ap.add_argument("--json", default="", metavar="PATH",
+                    help="also write the I/O trajectory (BENCH_io schema)")
     args = ap.parse_args()
 
     from benchmarks import (bench_checkpoint, bench_compression,
-                            bench_format, bench_parallel_io, bench_roofline)
+                            bench_format, bench_iovec, bench_parallel_io,
+                            bench_roofline)
     suites = [
         ("format", bench_format.run),
         ("parallel_io", bench_parallel_io.run),
+        ("iovec", bench_iovec.run),
         ("compression", bench_compression.run),
         ("checkpoint", bench_checkpoint.run),
         ("roofline", bench_roofline.run),
     ]
     only = [s for s in args.only.split(",") if s]
+    rows = []
     print("name,us_per_call,derived")
     for name, fn in suites:
         if only and not any(name.startswith(o) for o in only):
             continue
         for row in fn(quick=args.quick):
             bench, us, derived = row
+            rows.append(row)
             print(f"{bench},{us:.1f},{derived}")
             sys.stdout.flush()
+
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(_distill(rows, args.quick), fh, indent=2,
+                      sort_keys=True)
+            fh.write("\n")
+        print(f"# wrote {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -86,6 +86,10 @@ def _owned_windows(arr, nbytes: int) -> List[Tuple[int, memoryview]]:
     here; across all processes that tiles the canonical stream exactly once.
     numpy arrays are treated as fully owned (callers pass them on rank 0 or
     rely on identical replicated writes, which are byte-identical anyway).
+
+    A 2-D-sharded tensor's shards interleave in the canonical stream;
+    ``ScdaWriter.write_array_windows`` sorts the windows and coalesces runs
+    that are contiguous *across shards* into single vectored writes.
     """
     windows: List[Tuple[int, memoryview]] = []
     if isinstance(arr, jax.Array):
@@ -127,7 +131,10 @@ def save(path: str, tree, *, comm: Optional[Communicator] = None,
                         "compressed checkpoints require chunk-aligned "
                         "partitions; use comm.size == 1 (async snapshot)")
 
-    with fopen_write(comm, path, user_string=b"repro checkpoint") as f:
+    # sync=True: checkpoints must be durable before the manager's atomic
+    # rename commits them (every rank fsyncs at close).
+    with fopen_write(comm, path, user_string=b"repro checkpoint",
+                     sync=True) as f:
         f.write_inline(mf.STATUS_USER_STRING, mf.status_inline(step),
                        root=0)
         f.write_block(mf.MANIFEST_USER_STRING,

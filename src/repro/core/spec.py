@@ -26,7 +26,13 @@ Two padding disciplines (§2.1):
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+import functools as _functools
+from typing import List, Optional, Sequence, Tuple
+
+try:  # numpy powers the vectorized count-entry fast paths; optional.
+    import numpy as _np
+except ImportError:  # pragma: no cover - numpy is a hard dep elsewhere
+    _np = None
 
 from repro.core.errors import ScdaError, ScdaErrorCode
 
@@ -126,8 +132,15 @@ def pad_data(n: int, last_byte: Optional[int], style: str = UNIX) -> bytes:
     P = "==" if the input ends in a line feed, else "\\n=" (Unix) / "\\r\\n"
     (MIME); then Q '=' bytes and R = "\\n\\n" (Unix) / "\\r\\n\\r\\n" (MIME).
     """
+    # The padding depends only on (n mod 32, ends-in-LF, style) — memoize.
+    return _pad_data_cached(n % DATA_PAD_DIV,
+                            n > 0 and last_byte == 0x0A, style)
+
+
+@_functools.lru_cache(maxsize=None)  # 32 × 2 × 2 keys
+def _pad_data_cached(n: int, ends_lf: bool, style: str) -> bytes:
     p = data_pad_length(n)
-    if n > 0 and last_byte == 0x0A:
+    if ends_lf:
         head = b"=="
     elif style == MIME:
         head = b"\r\n"
@@ -167,8 +180,183 @@ def format_count(value: int) -> bytes:
 
 def count_entry(letter: bytes, value: int, style: str = UNIX) -> bytes:
     """A 32-byte count entry: letter, ' ', decimal padded('-' to 30)."""
+    if type(value) is int:  # excludes bool / np integers: uncached strict path
+        return _count_entry_cached(letter, value, style)
+    return _count_entry_impl(letter, value, style)
+
+
+def _count_entry_impl(letter: bytes, value: int, style: str) -> bytes:
     assert len(letter) == 1
     return letter + b" " + pad_fixed(format_count(value), COUNT_FIELD, style)
+
+
+_count_entry_cached = _functools.lru_cache(maxsize=4096)(_count_entry_impl)
+
+
+# -- vectorized batch codec for count entries --------------------------------
+# Varrays carry one 32-byte 'E' entry per element; generating/parsing them
+# one Python call at a time is the O(N) hot loop the §A.4.4/§A.5.5 paths hit
+# hardest.  These batch versions are byte-identical to count_entry /
+# parse_count_entry (the scalar functions remain the oracle and the
+# fallback for exotic inputs: values beyond int64, malformed entries).
+
+#: Smallest batch worth the numpy fixed overhead.
+_VEC_MIN = 4
+#: 10^1 .. 10^18 — decimal-length table covering the whole int64 range.
+_P10 = None if _np is None else 10 ** _np.arange(1, 19, dtype=_np.int64)
+#: 10^0 .. 10^18 — positional-weight lookup for the batch parser.
+_P10_W = None if _np is None else 10 ** _np.arange(0, 19, dtype=_np.int64)
+_P10_DESC: dict = {}
+_ENTRY_TEMPLATE: dict = {}
+
+
+def _is_plain_int(v) -> bool:
+    return type(v) is int
+
+
+def _entry_template(letter: int, style: str):
+    key = (letter, style)
+    t = _ENTRY_TEMPLATE.get(key)
+    if t is None:
+        q = _FIXED_Q[style]
+        t = _np.full(COUNT_ENTRY_BYTES, ord("-"), _np.uint8)
+        t[0], t[1] = letter, 0x20
+        t[30], t[31] = q[0], q[1]
+        _ENTRY_TEMPLATE[key] = t
+    return t
+
+
+def _p10_desc(L: int):
+    p = _P10_DESC.get(L)
+    if p is None:
+        p = 10 ** _np.arange(L - 1, -1, -1, dtype=_np.int64)
+        _P10_DESC[L] = p
+    return p
+
+
+def count_entries(letter: bytes, values: Sequence[int],
+                  style: str = UNIX, trusted_ints: bool = False) -> bytes:
+    """``b"".join(count_entry(letter, v, style) for v in values)``, fast.
+
+    Vectorized with numpy for int64-representable values; falls back to the
+    scalar oracle otherwise (including for range/type errors, so error
+    behavior is identical).  ``trusted_ints`` skips the per-element plain-int
+    pre-screen — pass it ONLY for lists built from ``len()`` (a float/bool
+    smuggled into a trusted list could be coerced instead of rejected).
+    """
+    n = len(values)
+    if n == 0:
+        return b""
+    is_int_list = (type(values) in (list, tuple)
+                   and (trusted_ints or all(map(_is_plain_int, values))))
+    if is_int_list and n >= _VEC_MIN:
+        first = values[0]
+        if first >= 0 and values.count(first) == n:
+            # Uniform Python-int values: replicate one oracle entry with
+            # no numpy round-trip at all.
+            return count_entry(letter, first, style) * n
+    vals = None
+    if _np is not None and n >= _VEC_MIN and (
+            is_int_list or isinstance(values, _np.ndarray)):
+        # Lists are pre-screened for plain ints above so np.asarray can
+        # never silently coerce a float/bool the scalar oracle rejects.
+        arr = _np.asarray(values)
+        if (arr.ndim == 1 and arr.dtype.kind in "iu"
+                and not (arr.dtype.kind == "u" and arr.dtype.itemsize == 8
+                         and int(arr.max()) > 2 ** 63 - 1)):
+            vals = arr.astype(_np.int64, copy=False)
+            first = int(vals[0])
+            if first >= 0 and bool((vals == first).all()):
+                # Uniform values — the dominant real shape (fixed-size
+                # chunks, U-entry arrays): one oracle entry, replicated.
+                return count_entry(letter, first, style) * n
+            if int(vals.min()) < 0:
+                vals = None  # scalar path raises ARG_COUNT_RANGE
+    if vals is None:
+        # numpy integer scalars are not Python ints; unwrap them so the
+        # scalar oracle's type validation stays strict for everything else.
+        return b"".join(
+            count_entry(letter,
+                        int(v) if _np is not None
+                        and isinstance(v, _np.integer) else v, style)
+            for v in values)
+
+    lens = _np.searchsorted(_P10, vals, side="right") + 1
+    min_l, max_l = int(lens.min()), int(lens.max())
+    buf = _np.empty((n, COUNT_ENTRY_BYTES), _np.uint8)
+    buf[:] = _entry_template(letter[0], style)
+    digs = vals[:, None] // _p10_desc(max_l)
+    digs %= 10
+    digs += ord("0")
+    if min_l == max_l:  # uniform digit count — direct placement
+        buf[:, 2:2 + max_l] = digs
+        buf[:, 2 + max_l] = 0x20
+    else:
+        # ``digs`` is right-aligned (leading zeros); build a wide row of
+        # [digits | ' ' | dashes] and gather each row's 28-byte tail
+        # (digits + ' ' + dashes always total 28) with one shifted take.
+        src = _np.full((n, max_l + COUNT_FIELD - 2), ord("-"), _np.uint8)
+        src[:, :max_l] = digs
+        src[:, max_l] = 0x20
+        idx = _np.arange(COUNT_FIELD - 2)[None, :] + (max_l - lens)[:, None]
+        buf[:, 2:COUNT_FIELD] = _np.take_along_axis(src, idx, 1)
+    return buf.tobytes()
+
+
+def parse_count_entries(raw: bytes, letter: Optional[bytes],
+                        n: int) -> List[int]:
+    """Parse ``n`` consecutive 32-byte count entries from ``raw``.
+
+    ``letter=None`` accepts any entry letter (the §A.5.1 skip path).  Any
+    malformed entry routes through the scalar parser so the error code and
+    message match :func:`parse_count_entry` exactly.
+    """
+    if n == 0:
+        return []
+    if len(raw) != n * COUNT_ENTRY_BYTES:
+        raise ScdaError(ScdaErrorCode.CORRUPT_TRUNCATED,
+                        f"entry batch is {len(raw)} bytes, expected "
+                        f"{n * COUNT_ENTRY_BYTES}")
+    if _np is None or n < _VEC_MIN:
+        return _parse_count_entries_scalar(raw, letter, n)
+    a = _np.frombuffer(raw, _np.uint8).reshape(n, COUNT_ENTRY_BYTES)
+    ok = a[:, 1] == 0x20
+    if letter is not None:
+        ok &= a[:, 0] == letter[0]
+    q0, q1 = a[:, 30], a[:, 31]
+    ok &= ((q0 == 0x2D) & (q1 == 0x0A)) | ((q0 == 0x0D) & (q1 == 0x0A))
+    body = a[:, 2:COUNT_FIELD]
+    isdig = (body >= 0x30) & (body <= 0x39)
+    lens = isdig.argmin(1)  # first non-digit column == digit count
+    ok &= (lens >= 1) & (lens <= COUNT_MAX_DIGITS)
+    j = _np.arange(COUNT_FIELD - 2)
+    after = j[None, :] - lens[:, None]  # <0 digit, ==0 space, >0 dash
+    ok &= _np.where(after < 0, isdig,
+                    _np.where(after == 0, body == 0x20,
+                              body == 0x2D)).all(1)
+    ok &= (a[:, 2] != 0x30) | (lens == 1)  # no leading zeros
+    # Values with >18 digits overflow int64 — punt those to the scalar
+    # parser too (legal up to 26 digits, just astronomically rare).
+    max_l = int(lens.max())
+    if not bool(ok.all()) or max_l > 18:
+        return _parse_count_entries_scalar(raw, letter, n)
+    exp = lens[:, None] - 1 - j[:max_l]
+    weights = _P10_W[_np.clip(exp, 0, 18)]
+    weights[exp < 0] = 0
+    digits = body[:, :max_l].astype(_np.int64)
+    digits -= 0x30
+    vals = (digits * weights).sum(1)
+    return vals.tolist()
+
+
+def _parse_count_entries_scalar(raw: bytes, letter: Optional[bytes],
+                                n: int) -> List[int]:
+    out = []
+    for i in range(n):
+        entry = raw[i * COUNT_ENTRY_BYTES:(i + 1) * COUNT_ENTRY_BYTES]
+        out.append(parse_count_entry(
+            entry, entry[0:1] if letter is None else letter))
+    return out
 
 
 def parse_count_entry(entry: bytes, letter: bytes) -> int:
@@ -199,6 +387,13 @@ def parse_count_entry(entry: bytes, letter: bytes) -> int:
 def section_header(type_letter: bytes, user_string: bytes,
                    style: str = UNIX) -> bytes:
     """The 64-byte 'section type and user string' entry."""
+    return _section_header_cached(bytes(type_letter), bytes(user_string),
+                                  style)
+
+
+@_functools.lru_cache(maxsize=1024)
+def _section_header_cached(type_letter: bytes, user_string: bytes,
+                           style: str) -> bytes:
     assert len(type_letter) == 1
     if len(user_string) > USER_MAX:
         raise ScdaError(ScdaErrorCode.ARG_USER_STRING,

@@ -11,26 +11,47 @@ final data byte writes the '='-padding (its value depends on that byte).
 This mirrors MPI_File_write_at usage in the reference libsc implementation
 and keeps the file bytes invariant under the writing partition — the
 serial-equivalence property at the heart of the paper.
+
+Fast path: every section write assembles a scatter-gather list of
+``(offset, buffer)`` fragments — header entries, count entries, payload
+*views*, padding — and hands it to :meth:`FileBackend.write_gather`, which
+coalesces adjacent fragments into single ``pwritev`` calls.  Payload bytes
+are never concatenated or copied in user space; on one rank a whole
+section is one syscall.  Varray count entries are generated vectorized
+(:func:`repro.core.spec.count_entries`).
+
+Durability: like MPI-IO (``MPI_File_sync`` is a separate, explicit call),
+closing a file does *not* imply fsync.  Pass ``sync=True`` to
+:func:`fopen_write`/:meth:`ScdaWriter.close` (or set ``REPRO_SCDA_FSYNC=1``)
+for a collective close where every rank fsyncs after the final barrier —
+the checkpoint layer does this before its atomic rename.
 """
 from __future__ import annotations
 
+import os
 from typing import List, Optional, Sequence, Tuple, Union
 
 from repro.core import codec, partition, spec
+from repro.core import encode as _encode
 from repro.core.comm import Communicator, SerialComm
 from repro.core.errors import ScdaError, ScdaErrorCode
-from repro.core.io_backend import BytesLike, FileBackend
+from repro.core.io_backend import BytesLike, FileBackend, as_byte_view
 
 DEFAULT_VENDOR = b"repro scda-jax 0.1"
 assert len(DEFAULT_VENDOR) <= spec.VENDOR_MAX
+
+#: Close-time fsync default (overridable per file / per close).
+DEFAULT_SYNC = os.environ.get("REPRO_SCDA_FSYNC", "0") not in ("0", "", "no")
 
 #: A window is (element_start, buffer): ``buffer`` covers elements
 #: [element_start, element_start + len/E) of the section's global data.
 Window = Tuple[int, BytesLike]
 
+#: A write fragment: (absolute file offset, buffer view).
+Frag = Tuple[int, BytesLike]
 
-def _as_bytes(data: BytesLike) -> memoryview:
-    return memoryview(data).cast("B")
+
+_as_bytes = as_byte_view
 
 
 class ScdaWriter:
@@ -39,9 +60,11 @@ class ScdaWriter:
     def __init__(self, comm: Communicator, path: str,
                  user_string: bytes = b"",
                  vendor: bytes = DEFAULT_VENDOR,
-                 style: str = spec.UNIX) -> None:
+                 style: str = spec.UNIX,
+                 sync: Optional[bool] = None) -> None:
         self.comm = comm
         self.style = style
+        self.sync = DEFAULT_SYNC if sync is None else sync
         self._closed = False
         self._backend = FileBackend(path, "w", create=(comm.rank == 0))
         self.cursor = 0
@@ -71,9 +94,9 @@ class ScdaWriter:
             if data is None or len(_as_bytes(data)) != spec.INLINE_DATA_BYTES:
                 raise ScdaError(ScdaErrorCode.ARG_INLINE_SIZE,
                                 f"got {0 if data is None else len(data)}")
-            buf = (spec.section_header(b"I", user_string, self.style)
-                   + bytes(_as_bytes(data)))
-            self._backend.pwrite(self.cursor, buf)
+            self._backend.pwritev(
+                self.cursor,
+                _encode.iov_inline(user_string, _as_bytes(data), self.style))
         else:
             spec.section_header(b"I", user_string, self.style)  # arg check
         self.cursor += spec.INLINE_SECTION_BYTES
@@ -95,12 +118,8 @@ class ScdaWriter:
             if len(view) != E:
                 raise ScdaError(ScdaErrorCode.ARG_DATA_SIZE,
                                 f"block data {len(view)} != E {E}")
-            last = view[-1] if E else None
-            buf = (spec.section_header(b"B", user_string, self.style)
-                   + spec.count_entry(b"E", E, self.style)
-                   + bytes(view)
-                   + spec.pad_data(E, last, self.style))
-            self._backend.pwrite(self.cursor, buf)
+            self._backend.pwritev(
+                self.cursor, _encode.iov_block(user_string, view, self.style))
         self.cursor += spec.block_section_bytes(E)
 
     def _write_block_encoded(self, user_string: bytes,
@@ -109,7 +128,7 @@ class ScdaWriter:
         if self.comm.rank == root:
             view = _as_bytes(data)
             u = len(view)
-            compressed = codec.compress(bytes(view), self.style)
+            compressed = codec.compress(view, self.style)
             meta = codec.uncompressed_size_entry(u, self.style)
             self.write_inline(codec.MAGIC_BLOCK, meta, root)
             # Compressed size must reach all ranks for cursor bookkeeping.
@@ -146,21 +165,21 @@ class ScdaWriter:
             compressed = codec.compress_elements(elements, self.style)
             self._write_varray_raw(user_string, compressed, counts, N)
             return
-        local = self._flatten(local_data, counts, E, indirect)
-        header = (spec.section_header(b"A", user_string, self.style)
-                  + spec.count_entry(b"N", N, self.style)
-                  + spec.count_entry(b"E", E, self.style))
-        data_start = self.cursor + len(header)
-        if self.comm.rank == 0:
-            self._backend.pwrite(self.cursor, header)
+        views, nbytes, last_byte = self._local_views(
+            local_data, counts, E, indirect)
+        frags: List[Frag] = []
+        data_start = self._array_header_frags(frags, b"A", user_string, N, E)
         off, length = partition.byte_range(counts, E, self.comm.rank)
-        if len(local) != length:
+        if nbytes != length:
             raise ScdaError(ScdaErrorCode.ARG_DATA_SIZE,
-                            f"local data {len(local)} != N_p*E {length}")
-        if length:
-            self._backend.pwrite(data_start + off, local)
-        self._write_array_padding(data_start, N * E,
-                                  [c * E for c in counts], local)
+                            f"local data {nbytes} != N_p*E {length}")
+        pos = data_start + off
+        for v in views:
+            frags.append((pos, v))
+            pos += len(v)
+        self._append_padding(frags, data_start, N * E,
+                             [c * E for c in counts], last_byte)
+        self._backend.write_gather(frags)
         self.cursor = data_start + spec.padded_data_bytes(N * E)
 
     def write_array_windows(self, user_string: bytes,
@@ -177,16 +196,15 @@ class ScdaWriter:
         rank writes the padding); pass None elsewhere.  This is a strict
         superset of :meth:`write_array` (which is the paper's contiguous
         case) and writes byte-identical files.
+
+        Windows are written in ascending element order; adjacent windows
+        coalesce into single vectored writes.
         """
         self._check_open()
-        header = (spec.section_header(b"A", user_string, self.style)
-                  + spec.count_entry(b"N", N, self.style)
-                  + spec.count_entry(b"E", E, self.style))
-        data_start = self.cursor + len(header)
-        if self.comm.rank == 0:
-            self._backend.pwrite(self.cursor, header)
+        frags: List[Frag] = []
+        data_start = self._array_header_frags(frags, b"A", user_string, N, E)
         owns_last = False
-        for start, buf in windows:
+        for start, buf in sorted(windows, key=lambda w: w[0]):
             view = _as_bytes(buf)
             if len(view) % E:
                 raise ScdaError(ScdaErrorCode.ARG_DATA_SIZE,
@@ -195,17 +213,18 @@ class ScdaWriter:
                 raise ScdaError(ScdaErrorCode.ARG_DATA_SIZE,
                                 "window exceeds array extent")
             if len(view):
-                self._backend.pwrite(data_start + start * E, view)
+                frags.append((data_start + start * E, view))
                 if start * E + len(view) == N * E:
                     owns_last = True
                     if pad_last_byte is None:
                         pad_last_byte = view[-1]
         n = N * E
         if owns_last:
-            self._backend.pwrite(data_start + n,
-                                 spec.pad_data(n, pad_last_byte, self.style))
+            frags.append((data_start + n,
+                          spec.pad_data(n, pad_last_byte, self.style)))
         elif n == 0 and self.comm.rank == 0:
-            self._backend.pwrite(data_start, spec.pad_data(0, None, self.style))
+            frags.append((data_start, spec.pad_data(0, None, self.style)))
+        self._backend.write_gather(frags)
         self.cursor = data_start + spec.padded_data_bytes(n)
 
     # ------------------------------------------------------------------ V --
@@ -251,89 +270,138 @@ class ScdaWriter:
                           per_rank_bytes: Optional[Sequence[int]] = None) \
             -> None:
         """Shared raw-V writer (also the §3.3/§3.4 compressed-data carrier)."""
-        local_sizes = [len(_as_bytes(e)) for e in local_elements]
+        local_views = [_as_bytes(e) for e in local_elements]
+        local_sizes = [len(v) for v in local_views]
         if per_rank_bytes is None:
             per_rank_bytes = self.comm.allgather(sum(local_sizes))
         partition.validate(counts, N)
         offs = partition.offsets(counts)
         rank = self.comm.rank
-        header = (spec.section_header(b"V", user_string, self.style)
-                  + spec.count_entry(b"N", N, self.style))
-        entries_start = self.cursor + len(header)
+        frags: List[Frag] = []
+        entries_start = (self.cursor + spec.SECTION_HEADER_BYTES
+                         + spec.COUNT_ENTRY_BYTES)
         data_start = entries_start + N * spec.COUNT_ENTRY_BYTES
+        # Header built on every rank (collective argument validation),
+        # enqueued only on rank 0.
+        header = (spec.section_header(b"V", user_string, self.style),
+                  spec.count_entry(b"N", N, self.style))
         if rank == 0:
-            self._backend.pwrite(self.cursor, header)
-        # Each rank writes its own E_i entries …
+            frags.append((self.cursor, header[0]))
+            frags.append((self.cursor + spec.SECTION_HEADER_BYTES,
+                          header[1]))
+        # Each rank writes its own E_i entries (one vectorized buffer) …
         if counts[rank]:
-            entries = b"".join(spec.count_entry(b"E", s, self.style)
-                               for s in local_sizes)
-            self._backend.pwrite(
-                entries_start + offs[rank] * spec.COUNT_ENTRY_BYTES, entries)
-        # … and its own data window.
+            frags.append(
+                (entries_start + offs[rank] * spec.COUNT_ENTRY_BYTES,
+                 spec.count_entries(b"E", local_sizes, self.style,
+                                    trusted_ints=True)))
+        # … and its own data window, element views passed through untouched.
         my_off, my_len = partition.var_byte_ranges(
             counts, local_sizes, per_rank_bytes, rank)
         if my_len:
-            flat = b"".join(bytes(_as_bytes(e)) for e in local_elements)
-            self._backend.pwrite(data_start + my_off, flat)
-            last_local = flat[-1]
+            pos = data_start + my_off
+            last_local: Optional[int] = None
+            for v in local_views:
+                if len(v):
+                    frags.append((pos, v))
+                    pos += len(v)
+                    last_local = v[-1]
         else:
             last_local = None
         total = sum(per_rank_bytes)
-        self._write_varray_padding(data_start, total, per_rank_bytes,
-                                   last_local)
+        self._append_varray_padding(frags, data_start, total, per_rank_bytes,
+                                    last_local)
+        self._backend.write_gather(frags)
         self.cursor = data_start + spec.padded_data_bytes(total)
 
     def _write_u_entry_array(self, counts: Sequence[int],
                              local_sizes: Sequence[int], N: int) -> None:
         """The A("V compressed scda 00", N, 32, U-entries) metadata section."""
-        entries = [codec.uncompressed_size_entry(s, self.style)
-                   for s in local_sizes]
-        self.write_array(codec.MAGIC_VARRAY, entries, counts,
-                         spec.COUNT_ENTRY_BYTES, indirect=True)
+        entries = spec.count_entries(b"U", local_sizes, self.style)
+        view = memoryview(entries)
+        self.write_array(
+            codec.MAGIC_VARRAY,
+            [view[i * spec.COUNT_ENTRY_BYTES:(i + 1) * spec.COUNT_ENTRY_BYTES]
+             for i in range(len(local_sizes))],
+            counts, spec.COUNT_ENTRY_BYTES, indirect=True)
 
     # -- shared helpers -------------------------------------------------------
-    def _write_array_padding(self, data_start: int, n: int,
-                             rank_bytes: Sequence[int],
-                             local: memoryview) -> None:
+    def _array_header_frags(self, frags: List[Frag], letter: bytes,
+                            user_string: bytes, N: int, E: int) -> int:
+        """Build the A-section header entries and return data_start.
+
+        The entries are constructed on *every* rank so argument validation
+        stays collective (all ranks raise together, none runs ahead into a
+        diverged file state); only rank 0 enqueues them for writing.
+        """
+        header = (spec.section_header(letter, user_string, self.style),
+                  spec.count_entry(b"N", N, self.style),
+                  spec.count_entry(b"E", E, self.style))
+        if self.comm.rank == 0:
+            frags.append((self.cursor, header[0]))
+            frags.append((self.cursor + spec.SECTION_HEADER_BYTES, header[1]))
+            frags.append((self.cursor + spec.SECTION_HEADER_BYTES
+                          + spec.COUNT_ENTRY_BYTES, header[2]))
+        return (self.cursor + spec.SECTION_HEADER_BYTES
+                + 2 * spec.COUNT_ENTRY_BYTES)
+
+    def _append_padding(self, frags: List[Frag], data_start: int, n: int,
+                        rank_bytes: Sequence[int],
+                        last_byte: Optional[int]) -> None:
         last_rank = partition.last_nonempty_rank(rank_bytes)
         if last_rank < 0:
             if self.comm.rank == 0:
-                self._backend.pwrite(data_start,
-                                     spec.pad_data(0, None, self.style))
+                frags.append((data_start,
+                              spec.pad_data(0, None, self.style)))
         elif self.comm.rank == last_rank:
-            self._backend.pwrite(data_start + n,
-                                 spec.pad_data(n, local[-1], self.style))
+            frags.append((data_start + n,
+                          spec.pad_data(n, last_byte, self.style)))
 
-    def _write_varray_padding(self, data_start: int, total: int,
-                              per_rank_bytes: Sequence[int],
-                              last_local: Optional[int]) -> None:
+    def _append_varray_padding(self, frags: List[Frag], data_start: int,
+                               total: int, per_rank_bytes: Sequence[int],
+                               last_local: Optional[int]) -> None:
         last_rank = partition.last_nonempty_rank(per_rank_bytes)
         if last_rank < 0:
             if self.comm.rank == 0:
-                self._backend.pwrite(data_start,
-                                     spec.pad_data(0, None, self.style))
+                frags.append((data_start,
+                              spec.pad_data(0, None, self.style)))
         elif self.comm.rank == last_rank:
-            self._backend.pwrite(data_start + total,
-                                 spec.pad_data(total, last_local, self.style))
+            frags.append((data_start + total,
+                          spec.pad_data(total, last_local, self.style)))
 
-    def _flatten(self, local_data, counts, E, indirect) -> memoryview:
+    def _local_views(self, local_data, counts, E, indirect) \
+            -> Tuple[List[memoryview], int, Optional[int]]:
+        """This rank's data as a list of views: (views, nbytes, last_byte).
+
+        Zero-copy: indirect element buffers stay separate fragments of one
+        gathered write instead of being joined.
+        """
         if indirect:
-            elems = list(local_data or [])
+            elems = [_as_bytes(e) for e in (local_data or [])]
             if len(elems) != counts[self.comm.rank]:
                 raise ScdaError(ScdaErrorCode.ARG_PARTITION,
                                 f"{len(elems)} buffers != N_p")
             for e in elems:
-                if len(_as_bytes(e)) != E:
+                if len(e) != E:
                     raise ScdaError(ScdaErrorCode.ARG_DATA_SIZE,
                                     f"element is {len(e)} bytes, E={E}")
-            return memoryview(b"".join(bytes(_as_bytes(e)) for e in elems))
-        if local_data is None:
-            local_data = b""
-        return _as_bytes(local_data)
+            nbytes = E * len(elems)
+            last = elems[-1][-1] if elems and E else None
+            return elems, nbytes, last
+        view = _as_bytes(local_data if local_data is not None else b"")
+        if len(view) == 0:
+            return [], 0, None
+        return [view], len(view), view[-1]
 
     def _local_elements(self, local_data, counts, E, indirect) -> List[bytes]:
-        flat = self._flatten(local_data, counts, E, indirect)
+        views, nbytes, _ = self._local_views(local_data, counts, E, indirect)
         np_ = counts[self.comm.rank]
+        if nbytes != np_ * E:
+            raise ScdaError(ScdaErrorCode.ARG_DATA_SIZE,
+                            f"local data {nbytes} != N_p*E {np_ * E}")
+        if indirect:
+            return [bytes(v) for v in views]
+        flat = views[0] if views else memoryview(b"")
         return [bytes(flat[i * E:(i + 1) * E]) for i in range(np_)]
 
     def _split(self, local_data, local_sizes, indirect) -> List[memoryview]:
@@ -358,18 +426,27 @@ class ScdaWriter:
         if self._closed:
             raise ScdaError(ScdaErrorCode.ARG_SEQUENCE, "writer is closed")
 
-    def close(self) -> None:
-        """Collective close (§A.3.2); fsync before releasing."""
+    def close(self, sync: Optional[bool] = None) -> None:
+        """Collective close (§A.3.2).
+
+        With ``sync`` (argument > constructor default > REPRO_SCDA_FSYNC)
+        every rank fsyncs its descriptor after the final barrier — on a
+        parallel file system each client must flush its own cache, so a
+        single-rank fsync would not be durable multi-host.
+        """
         if self._closed:
             return
+        sync = self.sync if sync is None else sync
         self.comm.barrier()
-        self._backend.close(sync=True)
+        self._backend.close(sync=sync)
         self._closed = True
         self.comm.barrier()
 
 
 def fopen_write(comm: Optional[Communicator], path: str,
                 user_string: bytes = b"", vendor: bytes = DEFAULT_VENDOR,
-                style: str = spec.UNIX) -> ScdaWriter:
+                style: str = spec.UNIX,
+                sync: Optional[bool] = None) -> ScdaWriter:
     """``scda_fopen(..., 'w')`` — collective create/overwrite."""
-    return ScdaWriter(comm or SerialComm(), path, user_string, vendor, style)
+    return ScdaWriter(comm or SerialComm(), path, user_string, vendor, style,
+                      sync=sync)

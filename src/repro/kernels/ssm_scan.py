@@ -22,6 +22,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams; support both.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+
 
 def _ssm_kernel(decay_ref, inc_ref, c_ref, y_ref, h_ref, *, chunk: int):
     c = pl.program_id(2)
@@ -67,7 +71,7 @@ def ssm_scan_kernel(decay, inc, C, *, chunk: int = 128,
                                lambda b, dblk, c: (b, c, dblk)),
         out_shape=jax.ShapeDtypeStruct((B, S, d), jnp.float32),
         scratch_shapes=[pltpu.VMEM((d_block, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(decay.astype(jnp.float32), inc.astype(jnp.float32),

@@ -1,0 +1,202 @@
+"""Codec edge cases the fast path must preserve (§3.1 rules).
+
+These pin the corners the vectorized/streaming implementation could get
+wrong: extreme zlib levels, both line-break styles, zero-length varray
+elements, and the exact-multiple-of-76 single-trailing-break rule.  All
+example-based — they run with or without hypothesis.
+"""
+import base64
+import os
+import struct
+import zlib
+
+import pytest
+
+from repro.core import (SerialComm, ThreadComm, codec, encode, fopen_read,
+                        fopen_write, partition, run_ranks, spec)
+
+
+class TestZlibLevels:
+    """REPRO_ZLIB_LEVEL=0 (stored blocks) and 9 (best) are both legal."""
+
+    @pytest.mark.parametrize("level", [0, 1, 6, 9])
+    @pytest.mark.parametrize("style", [spec.UNIX, spec.MIME])
+    def test_roundtrip_all_levels(self, level, style):
+        payloads = [b"", b"x", b"a" * 1000, os.urandom(5000),
+                    bytes(range(256)) * 16]
+        for data in payloads:
+            stream = codec.compress(data, style, level)
+            assert codec.decompress(stream) == data
+
+    def test_level_zero_is_stored(self):
+        # level 0 emits stored (uncompressed) deflate blocks — bigger than
+        # the input, but a legal stream any inflater accepts.
+        data = os.urandom(4096)
+        stream = codec.compress(data, level=0)
+        assert codec.decompress(stream) == data
+        assert len(stream) > len(data)
+
+    def test_levels_interoperate(self):
+        # a reader never knows the writer's level; streams at every level
+        # carry identical logical content
+        data = b"mixed " * 500 + os.urandom(100)
+        for level in (0, 9):
+            assert codec.decompress(codec.compress(data, level=level)) == data
+
+    def test_env_level_round_trips(self, monkeypatch):
+        # REPRO_ZLIB_LEVEL is read at import into DEFAULT_LEVEL; reload the
+        # module under each extreme and roundtrip with the default path.
+        import importlib
+        try:
+            for level in ("0", "9"):
+                monkeypatch.setenv("REPRO_ZLIB_LEVEL", level)
+                importlib.reload(codec)
+                assert codec.DEFAULT_LEVEL == int(level)
+                data = os.urandom(2048)
+                assert codec.decompress(codec.compress(data)) == data
+        finally:
+            monkeypatch.delenv("REPRO_ZLIB_LEVEL", raising=False)
+            importlib.reload(codec)
+
+
+class TestLineBreakStyles:
+    """MIME vs UNIX §2.1 break bytes on the stage-2 framing."""
+
+    @pytest.mark.parametrize("nbytes", [0, 1, 56, 57, 58, 500, 4096])
+    def test_break_geometry_both_styles(self, nbytes):
+        data = os.urandom(nbytes)
+        for style, brk in ((spec.UNIX, b"=\n"), (spec.MIME, b"\r\n")):
+            stream = codec.compress(data, style)
+            # every 78-byte chunk ends with the style's break bytes; the
+            # final (possibly short) chunk does too
+            i = 0
+            while i < len(stream):
+                chunk = stream[i:i + 78]
+                assert chunk[-2:] == brk, (style, nbytes, i)
+                i += len(chunk)
+            assert codec.decompress(stream) == data
+
+    def test_styles_decode_identically(self):
+        # §2.1: the writer's style choice has no effect on reading
+        data = os.urandom(1000)
+        assert (codec.decompress(codec.compress(data, spec.UNIX))
+                == codec.decompress(codec.compress(data, spec.MIME))
+                == data)
+
+    def test_break_bytes_are_not_validated(self):
+        # §3.1: the 2 break bytes are arbitrary on read — only geometry;
+        # decode with clobbered break bytes must equal the original decode
+        data = os.urandom(300)
+        bad = bytearray(codec.compress(data))
+        assert len(bad) > 78
+        bad[76:78] = b"!!"
+        assert codec.decompress(bytes(bad)) == data
+
+
+class TestZeroLengthVarrayElements:
+    """Zero-byte elements: compressed streams exist for them, and raw
+    varrays must carry them partition-independently."""
+
+    def test_empty_element_compresses_and_inflates(self):
+        stream = codec.compress(b"")
+        stage1 = base64.b64decode(
+            b"".join(stream[i:i + 78][:-2]
+                     for i in range(0, len(stream), 78)), validate=True)
+        assert struct.unpack(">Q", stage1[:8])[0] == 0
+        assert codec.decompress(stream) == b""
+
+    def test_encoded_varray_with_empty_elements_roundtrip(self, tmp_path):
+        sizes = [0, 5, 0, 0, 123, 0]
+        elements = [os.urandom(s) for s in sizes]
+        path = str(tmp_path / "v0.scda")
+        with fopen_write(SerialComm(), path) as f:
+            f.write_varray(b"v", elements, [len(sizes)], sizes, encode=True)
+        with fopen_read(SerialComm(), path) as r:
+            hdr = r.read_section_header(decode=True)
+            assert hdr.type == "V" and hdr.decoded and hdr.N == len(sizes)
+            got_sizes = r.read_varray_sizes([len(sizes)])
+            assert got_sizes == sizes
+            assert r.read_varray_data([len(sizes)], got_sizes) == elements
+
+    def test_all_empty_elements_parallel_equals_serial(self, tmp_path):
+        elements = [b""] * 7
+        oracle = encode.encode_file(b"vendor", b"user", [
+            encode.encode_varray(b"v", elements)])
+        path = str(tmp_path / "allempty.scda")
+        counts = [3, 0, 4]
+        offs = partition.offsets(counts)
+
+        def workload(comm):
+            with fopen_write(comm, path, b"user", b"vendor") as f:
+                f.write_varray(b"v",
+                               elements[offs[comm.rank]:offs[comm.rank + 1]],
+                               counts, [0] * counts[comm.rank])
+
+        run_ranks(ThreadComm.group(len(counts)), workload)
+        with open(path, "rb") as fh:
+            assert fh.read() == oracle
+
+
+class TestExact76Multiple:
+    """§3.1: an encoded payload that is an exact multiple of 76 code bytes
+    gets exactly ONE trailing break (the full final line's own)."""
+
+    @staticmethod
+    def _stage1_len(data, level):
+        return len(base64.b64encode(
+            struct.pack(">Q", len(data)) + b"z" + zlib.compress(data, level)))
+
+    def _find_exact_multiple(self, level):
+        # deterministic sweep for a payload whose stage-2 encoding is an
+        # exact multiple of 76
+        for n in range(400):
+            data = bytes((i * 13 + n) % 256 for i in range(n))
+            if self._stage1_len(data, level) % 76 == 0:
+                return data
+        raise AssertionError("no exact-76-multiple payload in sweep")
+
+    @pytest.mark.parametrize("style", [spec.UNIX, spec.MIME])
+    def test_single_trailing_break(self, style):
+        level = 6
+        data = self._find_exact_multiple(level)
+        stream = codec.compress(data, style, level)
+        enc_len = self._stage1_len(data, level)
+        assert enc_len % 76 == 0
+        # exactly one break per full line, none extra
+        assert len(stream) == enc_len + (enc_len // 76) * 2
+        assert stream.endswith(codec._LINE_BREAK[style])
+        assert not stream.endswith(codec._LINE_BREAK[style] * 2)
+        assert codec.decompress(stream) == data
+
+    def test_one_past_multiple_gets_short_line(self):
+        # the neighboring case: 76k+1 code bytes → short final line + break
+        level = 6
+        for n in range(400):
+            data = bytes((i * 11 + n) % 256 for i in range(n))
+            enc_len = self._stage1_len(data, level)
+            if enc_len % 76 == 1:
+                stream = codec.compress(data, level=level)
+                assert len(stream) == enc_len + (enc_len // 76 + 1) * 2
+                assert codec.decompress(stream) == data
+                return
+        pytest.skip("no 76k+1 case found in sweep")
+
+
+class TestCompressElementsParity:
+    """The (possibly thread-pooled) batch compressor must be byte-identical
+    to element-wise compress at every size mix."""
+
+    def test_batch_equals_scalar(self):
+        elements = [os.urandom(s) for s in
+                    (0, 1, 100, 0, 65536, 7, 0, 300000, 12, 300000)]
+        for style in (spec.UNIX, spec.MIME):
+            batch = codec.compress_elements(elements, style)
+            scalar = [codec.compress(e, style) for e in elements]
+            assert batch == scalar
+
+    def test_batch_accepts_memoryviews(self):
+        data = os.urandom(1 << 16)
+        views = [memoryview(data)[i:i + 4096]
+                 for i in range(0, len(data), 4096)]
+        assert codec.compress_elements(views) == \
+            [codec.compress(bytes(v)) for v in views]
