@@ -1,0 +1,81 @@
+"""Random-access claim: with a section index, reaching any one section of
+a large archive is O(1)-ish instead of a forward walk over all of its
+predecessors (cf. "Parallel Data Object Creation", 2025: metadata scans
+must not scale with archive size).
+
+Builds a 1k-section file (200 quick) and measures
+
+  * the forward header-only scan (the pre-index baseline for ANY query),
+  * the one-time index build and ``.scdax`` sidecar write/load,
+  * reading the LAST section: forward walk + read  vs  sidecar + seek + read.
+"""
+import os
+import statistics
+import tempfile
+import time
+
+from repro.core import ScdaIndex, fopen_read, fopen_write, scan_sections
+
+
+def _time(fn, n=10):
+    fn()  # warmup
+    samples = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        samples.append(time.perf_counter() - t0)
+    return statistics.median(samples) * 1e6
+
+
+def _build_archive(path, nsec):
+    payload = b"payload." * 64  # 512 B per section
+    with fopen_write(None, path, user_string=b"bench index") as f:
+        for i in range(nsec):
+            f.write_block(b"sec %06d" % i, payload)
+    return payload
+
+
+def run(quick=False):
+    rows = []
+    nsec = 200 if quick else 1000
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "big.scda")
+        payload = _build_archive(path, nsec)
+
+        rows.append((f"index.forward_scan_{nsec}",
+                     _time(lambda: scan_sections(path)),
+                     f"sections={nsec}"))
+        rows.append((f"index.build_{nsec}",
+                     _time(lambda: ScdaIndex.build(path)),
+                     "one header-only scan"))
+
+        idx = ScdaIndex.build(path)
+        idx.write_sidecar()
+        rows.append(("index.sidecar_load",
+                     _time(lambda: ScdaIndex.load_sidecar(path)),
+                     f"bytes={os.path.getsize(path + '.scdax')}"))
+
+        target = nsec - 1
+
+        def walk_last():
+            with fopen_read(None, path) as r:
+                for _ in range(target):
+                    r.read_section_header()
+                    r.skip_data()
+                r.read_section_header()
+                return r.read_block_data()
+
+        def seek_last():
+            with fopen_read(None, path) as r:
+                r.set_index(idx)
+                r.seek_section(target)
+                return r.read_block_data()
+
+        assert walk_last() == seek_last() == payload
+        walk_us = _time(walk_last)
+        seek_us = _time(seek_last)
+        rows.append((f"index.read_last_forward_{nsec}", walk_us,
+                     "walk+read"))
+        rows.append(("index.read_last_seek", seek_us,
+                     f"speedup={walk_us / max(seek_us, 1e-9):.1f}x"))
+    return rows

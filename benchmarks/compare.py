@@ -1,0 +1,159 @@
+"""Regression gate over BENCH_io.json trajectory files (CI smoke stage).
+
+    python -m benchmarks.compare BASELINE.json CURRENT.json... [--threshold 0.30]
+
+Every numeric metric present in BOTH files is compared: throughputs
+(``*MBps*``, ``*speedup_x`` — higher is better) must not drop by more
+than the threshold; latencies (``*_us`` — lower is better) must not grow
+by more than it.  Exit status 1 on any regression.
+
+Benchmark noise on shared runners is one-sided (interference only ever
+makes you slower), so the gate is designed around that: pass SEVERAL
+current files (repeated runs) and each metric's most favorable value is
+compared, while the committed baseline should be the element-wise WORST
+of several runs — build it with::
+
+    python -m benchmarks.compare --merge worst --out BENCH_io_quick.json r1.json r2.json r3.json
+
+A real regression still trips the gate (it shows up in every repeat);
+a scheduler hiccup in one repeat does not.
+
+Quick-mode runs use smaller problem sizes, so absolute numbers are only
+comparable quick-vs-quick / full-vs-full; comparing across modes is
+refused unless ``--force`` is given (CI keeps a quick-mode baseline
+checked in for exactly this reason).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List
+
+
+def _flatten(doc: dict, prefix: str = "") -> Dict[str, float]:
+    out: Dict[str, float] = {}
+    for k, v in doc.items():
+        key = f"{prefix}{k}"
+        if isinstance(v, dict):
+            out.update(_flatten(v, key + "."))
+        elif isinstance(v, (int, float)) and not isinstance(v, bool):
+            out[key] = float(v)
+    return out
+
+
+def _higher_better(key: str) -> bool:
+    return "MBps" in key or key.endswith("speedup_x")
+
+
+def _gated(key: str) -> bool:
+    return _higher_better(key) or key.endswith("_us")
+
+
+def compare(baseline: dict, currents: List[dict], threshold: float):
+    """Returns (regressions, compared): rows of (key, base, best, ratio)."""
+    fb = _flatten(baseline)
+    fcs = [_flatten(c) for c in currents]
+    regressions, compared = [], []
+    for key in sorted(fb):
+        vals = [fc[key] for fc in fcs if key in fc]
+        if not vals or fb[key] <= 0 or not _gated(key):
+            continue
+        b = fb[key]
+        c = max(vals) if _higher_better(key) else min(vals)
+        ratio = c / b
+        bad = (ratio < 1 - threshold) if _higher_better(key) \
+            else (ratio > 1 + threshold)
+        compared.append((key, b, c, ratio))
+        if bad:
+            regressions.append((key, b, c, ratio))
+    return regressions, compared
+
+
+def merge(docs: List[dict], mode: str):
+    """Element-wise best/worst across runs; non-metric fields from docs[0]."""
+    def pick(key: str, vals: List[float]) -> float:
+        favorable = max(vals) if _higher_better(key) else min(vals)
+        unfavorable = min(vals) if _higher_better(key) else max(vals)
+        return favorable if mode == "best" else unfavorable
+
+    def walk(nodes: List[dict], prefix: str) -> dict:
+        out = {}
+        for k, v in nodes[0].items():
+            key = f"{prefix}{k}"
+            others = [n[k] for n in nodes[1:] if k in n]
+            if isinstance(v, dict):
+                out[k] = walk([v] + others, key + ".")
+            elif isinstance(v, (int, float)) and not isinstance(v, bool) \
+                    and _gated(key):
+                out[k] = round(pick(key, [v] + others), 1)
+            else:
+                out[k] = v
+        return out
+
+    return walk(docs, "")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fail on >threshold regression between BENCH_io "
+                    "trajectory files")
+    ap.add_argument("files", nargs="+",
+                    help="BASELINE CURRENT... (or inputs for --merge)")
+    ap.add_argument("--threshold", type=float, default=0.30,
+                    help="allowed fractional regression (default 0.30)")
+    ap.add_argument("--force", action="store_true",
+                    help="compare even across quick/full modes")
+    ap.add_argument("--merge", choices=["best", "worst"], default=None,
+                    help="merge the input files element-wise instead of "
+                         "comparing")
+    ap.add_argument("--out", default=None,
+                    help="output path for --merge")
+    args = ap.parse_args(argv)
+
+    docs = []
+    for path in args.files:
+        with open(path) as fh:
+            docs.append(json.load(fh))
+
+    if args.merge:
+        if not args.out:
+            print("compare: --merge requires --out", file=sys.stderr)
+            return 2
+        with open(args.out, "w") as fh:
+            json.dump(merge(docs, args.merge), fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        print(f"# wrote {args.out} ({args.merge} of {len(docs)} runs)")
+        return 0
+
+    if len(docs) < 2:
+        print("compare: need BASELINE and at least one CURRENT file",
+              file=sys.stderr)
+        return 2
+    base, currents = docs[0], docs[1:]
+    for cur in currents:
+        if base.get("quick") != cur.get("quick") and not args.force:
+            print(f"compare: baseline quick={base.get('quick')} vs current "
+                  f"quick={cur.get('quick')}: sizes differ, refusing "
+                  f"(--force to override)", file=sys.stderr)
+            return 2
+
+    regressions, compared = compare(base, currents, args.threshold)
+    for row in compared:
+        key, b, c, ratio = row
+        flag = "REGRESSION" if row in regressions else "ok"
+        print(f"{key:45s} {b:12.1f} -> {c:12.1f}  ({ratio:5.2f}x)  {flag}")
+    if not compared:
+        print("compare: no overlapping metrics", file=sys.stderr)
+        return 2
+    if regressions:
+        print(f"compare: {len(regressions)} metric(s) regressed beyond "
+              f"{args.threshold:.0%} (best of {len(currents)} runs)",
+              file=sys.stderr)
+        return 1
+    print(f"compare: {len(compared)} metrics within {args.threshold:.0%}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

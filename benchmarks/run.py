@@ -36,6 +36,7 @@ def _distill(rows, quick: bool) -> dict:
         "scan_50_sections_us": None,
         "codec_MBps": {},
         "iovec": {},
+        "index": {},
     }
     for name, us, derived in rows:
         m = re.match(r"parallel_io\.(write|read|write_sync)_p(\d+)", name)
@@ -59,6 +60,13 @@ def _distill(rows, quick: bool) -> dict:
             m2 = re.search(r"speedup=(\d+(?:\.\d+)?)x", derived)
             if m2:
                 out["iovec"]["speedup_x"] = float(m2.group(1))
+        elif name.startswith("index."):
+            # strip the section-count suffix so quick/full keys align
+            key = re.sub(r"_\d+$", "", name.split(".", 1)[1])
+            out["index"][key + "_us"] = round(us, 1)
+            m2 = re.search(r"speedup=(\d+(?:\.\d+)?)x", derived)
+            if m2:
+                out["index"]["seek_speedup_x"] = float(m2.group(1))
     return out
 
 
@@ -73,11 +81,12 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_checkpoint, bench_compression,
-                            bench_format, bench_iovec, bench_parallel_io,
-                            bench_roofline)
+                            bench_format, bench_index, bench_iovec,
+                            bench_parallel_io, bench_roofline)
     suites = [
         ("format", bench_format.run),
         ("parallel_io", bench_parallel_io.run),
+        ("index", bench_index.run),
         ("iovec", bench_iovec.run),
         ("compression", bench_compression.run),
         ("checkpoint", bench_checkpoint.run),

@@ -28,7 +28,11 @@ def main():
     # repeated structure, low-rank adapters, zero-init optimizer moments)
     params["embed"] = (params["embed"] * 100).round() / 100
 
-    d = tempfile.mkdtemp(prefix="repro-archive-")
+    d = os.environ.get("SCDA_EXAMPLE_DIR")
+    if d:
+        os.makedirs(d, exist_ok=True)
+    else:
+        d = tempfile.mkdtemp(prefix="repro-archive-")
     raw, packed = os.path.join(d, "raw.scda"), os.path.join(d, "packed.scda")
     save(raw, params, step=1)
     save(packed, params, step=1, compressed=True, chunk_bytes=1 << 14)

@@ -15,7 +15,13 @@ from repro.core import (ThreadComm, fopen_read, fopen_write, partition,
 
 
 def main():
-    tmp = tempfile.mkdtemp(prefix="scda-quickstart-")
+    # SCDA_EXAMPLE_DIR pins the output location (the CI fsck smoke stage
+    # runs scdatool over the files this example writes).
+    tmp = os.environ.get("SCDA_EXAMPLE_DIR")
+    if tmp:
+        os.makedirs(tmp, exist_ok=True)
+    else:
+        tmp = tempfile.mkdtemp(prefix="scda-quickstart-")
     path = os.path.join(tmp, "demo.scda")
 
     # -- write (serial) ------------------------------------------------------

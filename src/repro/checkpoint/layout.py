@@ -94,6 +94,21 @@ def runs_cover_exactly(runs_by_owner: Sequence[Sequence[Run]],
     return pos == total_bytes
 
 
+def chunks_for_runs(runs: Sequence[Run], chunk_bytes: int) -> List[int]:
+    """Sorted indices of the chunks overlapping any of ``runs``.
+
+    The selective-restore primitive for compressed leaves: a shard reads
+    (and inflates) only these chunk elements of the leaf's varray, never
+    the rest of the archive.
+    """
+    needed = set()
+    for g, _, n in runs:
+        if n:
+            needed.update(range(g // chunk_bytes,
+                                (g + n - 1) // chunk_bytes + 1))
+    return sorted(needed)
+
+
 def chunk_sizes(nbytes: int, chunk_bytes: int) -> List[int]:
     """Deterministic chunking of a leaf's byte stream for §3 compression.
 

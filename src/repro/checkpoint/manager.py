@@ -30,6 +30,7 @@ import numpy as np
 from repro.checkpoint import pytree_io
 from repro.core import ScdaError
 from repro.core.comm import Communicator, SerialComm
+from repro.core.index import SIDECAR_SUFFIX, ScdaIndex
 
 _CKPT_RE = re.compile(r"^step_(\d{10})\.scda$")
 
@@ -56,12 +57,14 @@ class CheckpointManager:
     def __init__(self, directory: str, *, keep: int = 3,
                  compressed: bool = False,
                  comm: Optional[Communicator] = None,
-                 chunk_bytes: int = pytree_io.DEFAULT_CHUNK_BYTES) -> None:
+                 chunk_bytes: int = pytree_io.DEFAULT_CHUNK_BYTES,
+                 index_sidecar: bool = True) -> None:
         self.directory = directory
         self.keep = max(1, keep)
         self.compressed = compressed
         self.comm = comm or SerialComm()
         self.chunk_bytes = chunk_bytes
+        self.index_sidecar = index_sidecar
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
         self._crash_before_commit = False  # test hook: simulated node death
@@ -123,19 +126,33 @@ class CheckpointManager:
         self.comm.barrier()
         if self.comm.rank == 0:
             os.replace(tmp, final)  # atomic commit
+            if self.index_sidecar:
+                # The .scdax sidecar makes restore_leaf / lazy restores
+                # seek without a scan.  Best-effort: the checkpoint is
+                # already committed, and readers fall back to a fresh
+                # header scan when the sidecar is missing or stale.
+                try:
+                    ScdaIndex.build(final).write_sidecar()
+                except (ScdaError, OSError):
+                    pass
             self._apply_retention()
         self.comm.barrier()
 
     def _apply_retention(self) -> None:
         steps = self.all_steps()
         for s in steps[:-self.keep]:
-            try:
-                os.remove(self.path_for(s))
-            except OSError:
-                pass  # retention is best-effort
-        # sweep stale tmp files from crashed attempts
+            for path in (self.path_for(s), self.path_for(s) + SIDECAR_SUFFIX):
+                try:
+                    os.remove(path)
+                except OSError:
+                    pass  # retention is best-effort
+        # sweep stale tmp files from crashed attempts and orphaned sidecars
+        keep_names = {_ckpt_name(s) for s in self.all_steps()}
         for n in os.listdir(self.directory):
-            if n.endswith(".scda.tmp"):
+            stale = (n.endswith(".scda.tmp") or n.endswith(".scdax.tmp")
+                     or (n.endswith(".scda" + SIDECAR_SUFFIX)
+                         and n[:-len(SIDECAR_SUFFIX)] not in keep_names))
+            if stale:
                 try:
                     os.remove(os.path.join(self.directory, n))
                 except OSError:
@@ -156,6 +173,11 @@ class CheckpointManager:
     # -- restoring ---------------------------------------------------------------
     def restore(self, step: int, like=None) -> Tuple[Any, Optional[int]]:
         return pytree_io.restore(self.path_for(step), like, comm=self.comm)
+
+    def restore_leaf(self, step: int, name: str, like=None):
+        """Lazily load one tensor of checkpoint ``step`` (index seek)."""
+        return pytree_io.restore_leaf(self.path_for(step), name, like,
+                                      comm=self.comm)
 
     def restore_latest(self, like=None) -> Tuple[Any, Optional[int]]:
         """Restore the newest complete checkpoint; fall back on corruption.

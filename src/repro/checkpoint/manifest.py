@@ -19,6 +19,16 @@ STATUS_USER_STRING = b"scda-ckpt status"
 LEAF_USER_PREFIX = "leaf"
 FORMAT_VERSION = 1
 
+
+def leaf_user_string(i: int) -> bytes:
+    """Deterministic user string of the i-th leaf's section.
+
+    The contract the random-access restore path relies on: a leaf's section
+    is addressable by name (via the seekable index) without walking the
+    archive, so one tensor can be restored without touching the rest.
+    """
+    return f"{LEAF_USER_PREFIX} {i:06d}".encode("ascii")
+
 _BYTE_ORDER = "<" if sys.byteorder == "little" else ">"
 
 

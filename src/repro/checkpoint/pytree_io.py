@@ -18,8 +18,7 @@ File layout:
 """
 from __future__ import annotations
 
-import math
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -27,6 +26,7 @@ import numpy as np
 from repro.checkpoint import layout, manifest as mf
 from repro.core import ScdaError, ScdaErrorCode
 from repro.core.comm import Communicator, SerialComm
+from repro.core.index import ScdaIndex
 from repro.core.reader import ScdaReader, fopen_read
 from repro.core.writer import ScdaWriter, fopen_write
 
@@ -141,7 +141,7 @@ def save(path: str, tree, *, comm: Optional[Communicator] = None,
                       mf.build(step, leaves, aux) if comm.rank == 0 else None,
                       E=None, root=0)
         for i, (spec_, arr) in enumerate(zip(leaves, arrays)):
-            user = f"{mf.LEAF_USER_PREFIX} {i:06d}".encode()
+            user = mf.leaf_user_string(i)
             if compressed:
                 _save_leaf_compressed(f, user, arr, spec_, chunk_bytes)
             else:
@@ -175,20 +175,42 @@ def _encode_aux(value) -> Any:
 # Restoring
 # --------------------------------------------------------------------------
 
+def _read_header_sections(r: ScdaReader) -> Dict[str, Any]:
+    """Consume the leading status + manifest sections; returns the doc."""
+    hdr = r.read_section_header()
+    if hdr.type != "I" or hdr.user_string != mf.STATUS_USER_STRING:
+        raise ScdaError(ScdaErrorCode.CORRUPT_ENCODING,
+                        "not a repro checkpoint: missing status inline")
+    step = mf.parse_status_inline(r.read_inline_data())
+    hdr = r.read_section_header()
+    if hdr.type != "B" or hdr.user_string != mf.MANIFEST_USER_STRING:
+        raise ScdaError(ScdaErrorCode.CORRUPT_ENCODING,
+                        "not a repro checkpoint: missing manifest block")
+    doc = mf.parse(r.read_block_data())
+    if doc.get("step") is None:
+        doc["step"] = step
+    return doc
+
+
+def _adopt_sidecar(r: ScdaReader) -> None:
+    """Give the reader a ``.scdax`` index if a fresh sidecar exists.
+
+    Purely an optimization: without one, the reader's first seek builds
+    the index with a single header-only scan; a stale or unreadable
+    sidecar is ignored (and every seek re-checks the on-disk header, so
+    even adopting a wrong-but-same-size sidecar cannot corrupt a restore).
+    """
+    try:
+        r.set_index(ScdaIndex.load_sidecar(r.path))
+    except (ScdaError, OSError):
+        pass
+
+
 def read_manifest(path: str, comm: Optional[Communicator] = None) \
         -> Dict[str, Any]:
     """Read just the status + manifest (cheap metadata probe)."""
     with fopen_read(comm, path) as r:
-        hdr = r.read_section_header()
-        if hdr.type != "I" or hdr.user_string != mf.STATUS_USER_STRING:
-            raise ScdaError(ScdaErrorCode.CORRUPT_ENCODING,
-                            "not a repro checkpoint: missing status inline")
-        r.read_inline_data()
-        hdr = r.read_section_header()
-        if hdr.type != "B" or hdr.user_string != mf.MANIFEST_USER_STRING:
-            raise ScdaError(ScdaErrorCode.CORRUPT_ENCODING,
-                            "not a repro checkpoint: missing manifest block")
-        return mf.parse(r.read_block_data())
+        return _read_header_sections(r)
 
 
 def restore(path: str, like=None, *, comm: Optional[Communicator] = None):
@@ -199,19 +221,24 @@ def restore(path: str, like=None, *, comm: Optional[Communicator] = None):
     placement.  With ``like=None`` a nested dict of numpy arrays is
     rebuilt from the manifest names.
 
+    With ``like`` given the restore is *lazy*: each wanted leaf's section
+    is reached by an index seek (``.scdax`` sidecar when fresh, one
+    header-only scan otherwise) and unwanted leaves are never touched —
+    restoring one tensor of a terabyte archive reads that tensor, the
+    manifest, and nothing else.
+
     Returns ``(tree, step)``.
     """
     comm = comm or SerialComm()
     with fopen_read(comm, path) as r:
-        hdr = r.read_section_header()
-        step = mf.parse_status_inline(r.read_inline_data())
-        r.read_section_header()
-        doc = mf.parse(r.read_block_data())
+        doc = _read_header_sections(r)
+        step = doc.get("step")
         by_name: Dict[str, Any] = {}
         for i, spec_ in enumerate(doc["leaves"]):
             by_name[spec_["name"]] = (i, spec_)
 
         if like is None:
+            # Full restore touches every byte anyway — keep the forward walk.
             out: Dict[str, Any] = {}
             for spec_ in doc["leaves"]:
                 hdr = r.read_section_header()
@@ -219,7 +246,7 @@ def restore(path: str, like=None, *, comm: Optional[Communicator] = None):
                 out[spec_["name"]] = _read_leaf_full(r, hdr, spec_)
             for name, value in doc["aux"].items():
                 out[name] = value
-            return _unflatten_names(out), doc.get("step", step)
+            return _unflatten_names(out), step
 
         named, treedef = flatten_named(like)
         targets = {n: v for n, v in named}
@@ -229,22 +256,51 @@ def restore(path: str, like=None, *, comm: Optional[Communicator] = None):
             raise ScdaError(ScdaErrorCode.ARG_SEQUENCE,
                             f"leaves missing from checkpoint: {missing[:5]}"
                             f"{'…' if len(missing) > 5 else ''}")
+        _adopt_sidecar(r)
         values: Dict[str, Any] = {}
-        for spec_ in doc["leaves"]:
-            hdr = r.read_section_header()
+        for name in targets:
+            if name not in by_name:
+                continue  # aux leaf
+            i, spec_ = by_name[name]
+            hdr = r.open_section(mf.leaf_user_string(i))
             _check_leaf_header(hdr, spec_)
-            name = spec_["name"]
-            target = targets.get(name)
-            if target is None:
-                r.skip_data()  # present in file, not wanted by this restore
-                continue
-            values[name] = _read_leaf_to_target(r, hdr, spec_, target)
+            values[name] = _read_leaf_to_target(r, hdr, spec_,
+                                                targets[name])
         for name in targets:
             if name in doc["aux"]:
                 values[name] = doc["aux"][name]
         leaves_out = [values[n] for n, _ in named]
-        return jax.tree_util.tree_unflatten(treedef, leaves_out), \
-            doc.get("step", step)
+        return jax.tree_util.tree_unflatten(treedef, leaves_out), step
+
+
+def restore_leaf(path: str, name: str, like=None, *,
+                 comm: Optional[Communicator] = None):
+    """Load ONE leaf from a checkpoint without touching the rest.
+
+    The lazy-restore workload §1 motivates: seek straight to the leaf's
+    section (sidecar index or one header scan), read only its bytes —
+    for compressed leaves only the chunks overlapping the target shards.
+    ``like`` optionally gives a target (``jax.ShapeDtypeStruct`` with
+    ``.sharding`` or a concrete array) to place the leaf onto; with
+    ``like=None`` a numpy array is returned.  Aux (non-array) leaves are
+    returned from the manifest directly.
+    """
+    comm = comm or SerialComm()
+    with fopen_read(comm, path) as r:
+        doc = _read_header_sections(r)
+        for i, spec_ in enumerate(doc["leaves"]):
+            if spec_["name"] != name:
+                continue
+            _adopt_sidecar(r)
+            hdr = r.open_section(mf.leaf_user_string(i))
+            _check_leaf_header(hdr, spec_)
+            if like is None:
+                return _read_leaf_full(r, hdr, spec_)
+            return _read_leaf_to_target(r, hdr, spec_, like)
+        if name in doc["aux"]:
+            return doc["aux"][name]
+        raise ScdaError(ScdaErrorCode.ARG_SEQUENCE,
+                        f"leaf {name!r} not in checkpoint")
 
 
 def _check_leaf_header(hdr, spec_) -> None:
@@ -334,10 +390,7 @@ def _read_shard(r: ScdaReader, spec_, index, shape, dtype) -> np.ndarray:
 def _fill_from_chunks(r: ScdaReader, spec_, runs, buf: bytearray) -> None:
     """Selective chunk reads: only chunks overlapping this shard's runs."""
     chunk = spec_["chunk_bytes"]
-    needed = sorted({g // chunk
-                     for (g, _, n) in runs
-                     for g in range(g, g + n, chunk)} |
-                    {(g + n - 1) // chunk for (g, _, n) in runs if n})
+    needed = layout.chunks_for_runs(runs, chunk)
     if not needed:
         return
     chunks = dict(zip(needed, r.read_varray_elements(needed)))

@@ -26,6 +26,7 @@ from repro.core.io_backend import FileBackend
 from repro.core.writer import ScdaWriter, fopen_write, DEFAULT_VENDOR
 from repro.core.reader import (ScdaReader, SectionHeader, fopen_read,
                                scan_sections)
+from repro.core.index import IndexEntry, ScdaIndex
 
 __all__ = [
     "ScdaError", "ScdaErrorCode", "ferror_string",
@@ -34,4 +35,5 @@ __all__ = [
     "run_ranks", "FileBackend",
     "ScdaWriter", "fopen_write", "DEFAULT_VENDOR",
     "ScdaReader", "SectionHeader", "fopen_read", "scan_sections",
+    "IndexEntry", "ScdaIndex",
 ]

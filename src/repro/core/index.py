@@ -1,0 +1,316 @@
+"""Seekable section index — the random-access layer over the scda stream.
+
+The paper motivates scda for "generic and flexible archival and
+checkpoint/restart" with selective access (§1), but the on-disk stream has
+no record table: locating section i requires walking all i-1 predecessors.
+:class:`ScdaIndex` is that record table, produced by ONE header-only scan
+(no payload bytes are touched; varray extents come from the count-entry
+tables).  With it, :meth:`repro.core.reader.ScdaReader.seek_section` jumps
+any rank straight to any section and the existing windowed/element reads
+work unchanged — the format becomes an archive instead of a tape.
+
+The index is cacheable as a ``.scdax`` sidecar which is itself a valid
+scda file (an I section with a cheap staleness probe plus a §3.2-encoded
+B section holding the entry table as JSON), so ``scdatool`` and foreign
+readers can inspect it with the ordinary format tools.  A sidecar is never
+trusted blindly: loading verifies the target's file size, and every seek
+re-reads the section's on-disk 64-byte header and compares it against the
+entry (see :meth:`ScdaReader.seek_section`), so a stale index can fail
+loudly but can never return wrong bytes silently.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, List, Optional, Tuple
+
+from repro.core import codec, spec
+from repro.core.comm import Communicator
+from repro.core.errors import ScdaError, ScdaErrorCode
+
+#: Sidecar naming convention: ``<file>.scdax`` next to ``<file>``.
+SIDECAR_SUFFIX = ".scdax"
+#: File-header user string identifying a sidecar.
+SIDECAR_USER_STRING = b"scdax 00"
+#: Section user strings inside the sidecar.
+SIDECAR_TARGET_USER = b"scdax target"
+SIDECAR_ENTRIES_USER = b"scdax entries"
+#: Sidecar JSON schema version.
+INDEX_FORMAT = "repro-scdax"
+INDEX_VERSION = 1
+
+#: kind → (on-disk letter of the section's FIRST physical header, fixed
+#: user string for encoded kinds or None = the entry's own user string).
+_RAW_HEADER: Dict[str, Tuple[bytes, Optional[bytes]]] = {
+    "I": (b"I", None), "B": (b"B", None),
+    "A": (b"A", None), "V": (b"V", None),
+    "zB": (b"I", codec.MAGIC_BLOCK),
+    "zA": (b"I", codec.MAGIC_ARRAY),
+    "zV": (b"A", codec.MAGIC_VARRAY),
+}
+
+_ENTRY_FIELDS = ("kind", "N", "E", "decoded", "start", "end", "data_start",
+                 "entries_start", "v_entries_start", "v_data_start",
+                 "raw_E", "payload_bytes")
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexEntry:
+    """One logical section's type, geometry, and absolute file offsets.
+
+    A §3-encoded section (kind ``zB``/``zA``/``zV``) spans two physical
+    sections on disk but is ONE logical entry here, mirroring what
+    ``read_section_header(decode=True)`` reports.  ``payload_bytes`` is the
+    on-disk data byte count (compressed size for encoded kinds); logical
+    sizes live in ``N``/``E`` exactly as in :class:`SectionHeader`.
+    """
+    kind: str            # 'I'|'B'|'A'|'V'|'zB'|'zA'|'zV' (physical layout)
+    type: str            # logical type letter, as SectionHeader.type
+    user_string: bytes
+    N: int
+    E: int
+    decoded: bool
+    start: int           # absolute offset of the (first) section header
+    end: int             # absolute offset just past the final pad byte
+    data_start: int = 0
+    entries_start: int = 0
+    v_entries_start: int = 0
+    v_data_start: int = 0
+    raw_E: int = 0
+    payload_bytes: int = 0
+
+    def header(self):
+        from repro.core.reader import SectionHeader
+        return SectionHeader(self.type, self.user_string, N=self.N,
+                             E=self.E, decoded=self.decoded)
+
+    def raw_header(self) -> Tuple[bytes, bytes]:
+        """(letter, user string) of the on-disk header at ``start``."""
+        letter, fixed_user = _RAW_HEADER[self.kind]
+        return letter, self.user_string if fixed_user is None else fixed_user
+
+    def to_pending(self):
+        """The reader cursor state a forward walk would have produced."""
+        from repro.core.reader import _Pending
+        return _Pending(self.kind, self.header(),
+                        data_start=self.data_start,
+                        entries_start=self.entries_start,
+                        v_entries_start=self.v_entries_start,
+                        v_data_start=self.v_data_start,
+                        raw_E=self.raw_E)
+
+
+@dataclasses.dataclass
+class ScdaIndex:
+    """The complete section table of one scda file."""
+    path: str
+    file_size: int
+    scda_version: int
+    vendor: bytes
+    user_string: bytes
+    entries: List[IndexEntry]
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def __iter__(self):
+        return iter(self.entries)
+
+    # -- construction ---------------------------------------------------------
+    @classmethod
+    def build(cls, source,
+              comm: Optional[Communicator] = None) -> "ScdaIndex":
+        """One header-only scan of ``source`` (a path or an open reader).
+
+        Rank-local (every rank parses the identical bytes, §A.5.1's
+        standard pattern), so no communicator is required; one may be
+        passed for a collective open.
+        """
+        from repro.core.reader import ScdaReader, fopen_read
+        if isinstance(source, ScdaReader):
+            return cls._build_from(source)
+        with fopen_read(comm, source) as r:
+            return cls._build_from(r)
+
+    @classmethod
+    def _build_from(cls, r) -> "ScdaIndex":
+        r._backend.advise(0, r._file_size, "sequential")
+        entries: List[IndexEntry] = []
+        r.cursor = spec.FILE_HEADER_BYTES
+        while not r.at_eof:
+            start = r.cursor
+            hdr = r.read_section_header(decode=True)
+            p = r._pending
+            r.skip_data()  # records p.total_bytes, advances the cursor
+            entries.append(IndexEntry(
+                kind=p.kind, type=hdr.type, user_string=hdr.user_string,
+                N=hdr.N, E=hdr.E, decoded=hdr.decoded,
+                start=start, end=r.cursor,
+                data_start=p.data_start, entries_start=p.entries_start,
+                v_entries_start=p.v_entries_start,
+                v_data_start=p.v_data_start, raw_E=p.raw_E,
+                payload_bytes=p.total_bytes or 0))
+        return cls(path=r.path, file_size=r._file_size,
+                   scda_version=r.version, vendor=r.vendor,
+                   user_string=r.user_string, entries=entries)
+
+    # -- lookup ---------------------------------------------------------------
+    def find(self, user_string: bytes, occurrence: int = 0) -> int:
+        """Index of the ``occurrence``-th section with ``user_string``, or -1.
+
+        O(1) after the first call: a user-string table is built lazily so
+        per-leaf lookups during a lazy restore stay O(leaves), not
+        O(leaves × sections).
+        """
+        by = getattr(self, "_by_user", None)
+        if by is None:
+            by = {}
+            for i, e in enumerate(self.entries):
+                by.setdefault(e.user_string, []).append(i)
+            self._by_user = by
+        hits = by.get(user_string, ())
+        return hits[occurrence] if 0 <= occurrence < len(hits) else -1
+
+    # -- verification ---------------------------------------------------------
+    def verify(self, deep: bool = False) -> None:
+        """Check this index still describes the file at ``path``.
+
+        Shallow (default): the target's size must match — any append,
+        truncation, or rewrite-through-rename changes it in practice, and
+        per-seek header re-reads catch same-size rewrites.  ``deep``
+        rebuilds the index from the file and requires identical entries.
+        Raises :class:`ScdaError` (CORRUPT group) on any mismatch.
+        """
+        try:
+            size = os.stat(self.path).st_size
+        except OSError as e:
+            raise ScdaError(ScdaErrorCode.FS_READ,
+                            f"{self.path}: {e}") from e
+        if size != self.file_size:
+            raise ScdaError(ScdaErrorCode.CORRUPT_TRUNCATED,
+                            f"stale index: file is {size} bytes, index "
+                            f"recorded {self.file_size}")
+        if deep:
+            fresh = ScdaIndex.build(self.path)
+            if fresh.entries != self.entries:
+                raise ScdaError(ScdaErrorCode.CORRUPT_ENCODING,
+                                "stale index: section table does not match "
+                                "a fresh scan")
+
+    # -- sidecar (.scdax — itself a valid scda file) --------------------------
+    def sidecar_path(self, sidecar: Optional[str] = None) -> str:
+        return sidecar or self.path + SIDECAR_SUFFIX
+
+    def _target_probe(self) -> bytes:
+        text = f"size {self.file_size:>25}\n"
+        return text.encode("ascii").ljust(spec.INLINE_DATA_BYTES)[
+            :spec.INLINE_DATA_BYTES]
+
+    def to_json(self) -> bytes:
+        doc = {
+            "format": INDEX_FORMAT,
+            "version": INDEX_VERSION,
+            "target": {
+                "size": self.file_size,
+                "scda_version": self.scda_version,
+                "vendor": self.vendor.decode("latin-1"),
+                "user_string": self.user_string.decode("latin-1"),
+            },
+            "sections": [
+                {"type": e.type,
+                 "user_string": e.user_string.decode("latin-1"),
+                 **{f: getattr(e, f) for f in _ENTRY_FIELDS}}
+                for e in self.entries
+            ],
+        }
+        return json.dumps(doc, indent=1, sort_keys=True).encode("ascii")
+
+    @classmethod
+    def from_json(cls, raw: bytes, path: str) -> "ScdaIndex":
+        try:
+            doc = json.loads(raw.decode("ascii"))
+        except (ValueError, UnicodeDecodeError) as e:
+            raise ScdaError(ScdaErrorCode.CORRUPT_ENCODING,
+                            f"sidecar JSON: {e}") from e
+        if doc.get("format") != INDEX_FORMAT:
+            raise ScdaError(ScdaErrorCode.CORRUPT_ENCODING,
+                            f"not a scdax document: {doc.get('format')!r}")
+        if doc.get("version") != INDEX_VERSION:
+            raise ScdaError(ScdaErrorCode.CORRUPT_ENCODING,
+                            f"unsupported scdax version {doc.get('version')}")
+        try:
+            t = doc["target"]
+            entries = [
+                IndexEntry(type=s["type"],
+                           user_string=s["user_string"].encode("latin-1"),
+                           **{f: s[f] for f in _ENTRY_FIELDS})
+                for s in doc["sections"]
+            ]
+            return cls(path=path, file_size=int(t["size"]),
+                       scda_version=int(t["scda_version"]),
+                       vendor=t["vendor"].encode("latin-1"),
+                       user_string=t["user_string"].encode("latin-1"),
+                       entries=entries)
+        except (KeyError, TypeError, ValueError) as e:
+            raise ScdaError(ScdaErrorCode.CORRUPT_ENCODING,
+                            f"malformed scdax document: {e}") from e
+
+    def write_sidecar(self, sidecar: Optional[str] = None) -> str:
+        """Atomically write the ``.scdax`` sidecar; returns its path."""
+        from repro.core.writer import fopen_write
+        sp = self.sidecar_path(sidecar)
+        tmp = sp + ".tmp"
+        with fopen_write(None, tmp, user_string=SIDECAR_USER_STRING,
+                         sync=True) as f:
+            f.write_inline(SIDECAR_TARGET_USER, self._target_probe())
+            f.write_block(SIDECAR_ENTRIES_USER, self.to_json(), encode=True)
+        os.replace(tmp, sp)
+        return sp
+
+    @classmethod
+    def load_sidecar(cls, path: str, sidecar: Optional[str] = None,
+                     verify: bool = True) -> "ScdaIndex":
+        """Load ``<path>.scdax`` and (by default) verify it against the file."""
+        from repro.core.reader import fopen_read
+        sp = sidecar or path + SIDECAR_SUFFIX
+        with fopen_read(None, sp) as r:
+            if r.user_string != SIDECAR_USER_STRING:
+                raise ScdaError(ScdaErrorCode.CORRUPT_ENCODING,
+                                f"{sp}: not a scdax sidecar "
+                                f"({r.user_string!r})")
+            hdr = r.read_section_header()
+            if hdr.type != "I" or hdr.user_string != SIDECAR_TARGET_USER:
+                raise ScdaError(ScdaErrorCode.CORRUPT_ENCODING,
+                                f"{sp}: missing target probe section")
+            r.read_inline_data()
+            hdr = r.read_section_header()
+            if hdr.type != "B" or hdr.user_string != SIDECAR_ENTRIES_USER:
+                raise ScdaError(ScdaErrorCode.CORRUPT_ENCODING,
+                                f"{sp}: missing entries section")
+            idx = cls.from_json(r.read_block_data(), path)
+        if verify:
+            idx.verify()
+        return idx
+
+    @classmethod
+    def cached(cls, path: str, comm: Optional[Communicator] = None,
+               write: bool = True,
+               sidecar: Optional[str] = None) -> "ScdaIndex":
+        """The standard entry point: sidecar if fresh, else scan (and cache).
+
+        A missing, stale, or corrupt sidecar silently falls back to a fresh
+        header-only scan; with ``write``, rank 0 then refreshes the sidecar
+        best-effort (an unwritable directory never fails the read path).
+        """
+        try:
+            return cls.load_sidecar(path, sidecar)
+        except (ScdaError, OSError):
+            pass
+        idx = cls.build(path)
+        if write and (comm is None or comm.rank == 0):
+            try:
+                idx.write_sidecar(sidecar)
+            except (ScdaError, OSError):
+                pass
+        return idx

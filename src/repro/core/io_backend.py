@@ -234,6 +234,33 @@ class FileBackend:
             raise ScdaError(ScdaErrorCode.FS_READ,
                             f"{self.path}@{offset}: {e}") from e
 
+    # -- access-pattern hints -------------------------------------------------
+    _ADVICE = {}
+    if hasattr(os, "posix_fadvise"):  # pragma: no branch - platform constant
+        _ADVICE = {
+            "willneed": os.POSIX_FADV_WILLNEED,
+            "sequential": os.POSIX_FADV_SEQUENTIAL,
+            "random": os.POSIX_FADV_RANDOM,
+            "dontneed": os.POSIX_FADV_DONTNEED,
+        }
+
+    def advise(self, offset: int, length: int, advice: str) -> None:
+        """Advisory readahead hint (``posix_fadvise``); silently a no-op
+        where the platform lacks it or the kernel declines.
+
+        The index layer issues ``sequential`` for its one header-only scan
+        and ``willneed`` for the extent of a section about to be read after
+        a seek — random access should not pay sequential-readahead
+        misprediction on a parallel file system.
+        """
+        fadv = self._ADVICE.get(advice)
+        if fadv is None or self.fd < 0:
+            return
+        try:
+            os.posix_fadvise(self.fd, offset, max(0, length), fadv)
+        except OSError:  # advisory only — never an scda error
+            pass
+
     # -- metadata / lifecycle -------------------------------------------------
     def size(self) -> int:
         try:

@@ -41,7 +41,7 @@ class SectionHeader:
 class _Pending:
     """Cursor state between the header call and the data call(s)."""
     kind: str                   # 'I' | 'B' | 'A' | 'V' | 'zB' | 'zA' | 'zV'
-    header: SectionHeader = None
+    header: Optional[SectionHeader] = None
     data_start: int = 0         # raw payload start
     entries_start: int = 0      # V: E_i entries;  zV: U entries of the A
     v_entries_start: int = 0    # zA/zV: E_i entries of the carrier V
@@ -56,9 +56,11 @@ class ScdaReader:
 
     def __init__(self, comm: Optional[Communicator], path: str) -> None:
         self.comm = comm or SerialComm()
+        self.path = path
         self._backend = FileBackend(path, "r", create=False)
         self._closed = False
         self._pending: Optional[_Pending] = None
+        self._index = None  # lazy ScdaIndex (see repro.core.index)
         header = spec.parse_file_header(
             self._backend.pread(0, spec.FILE_HEADER_BYTES))
         self.version = header.version
@@ -191,6 +193,77 @@ class ScdaReader:
             v_data_start=v_entries + N * spec.COUNT_ENTRY_BYTES)
         return self._pending.header
 
+    # -- random access (§1: selective access; the PR-2 index layer) -----------
+    def index(self, rebuild: bool = False):
+        """The file's :class:`~repro.core.index.ScdaIndex`, built lazily.
+
+        Building is one header-only scan (rank-local; every rank sees the
+        identical bytes, so no collective traffic is needed).  Pass a
+        pre-built/sidecar-loaded index via :meth:`set_index` to skip even
+        that.  The cursor and any pending section are preserved (also when
+        the build fails on a corrupt file), so calling this mid-walk is
+        safe and seek-after-browse behaves the same with or without a
+        cached index.
+        """
+        if self._index is None or rebuild:
+            from repro.core.index import ScdaIndex
+            saved_cursor, saved_pending = self.cursor, self._pending
+            self._pending = None
+            try:
+                self._index = ScdaIndex.build(self)
+            finally:
+                self.cursor, self._pending = saved_cursor, saved_pending
+        return self._index
+
+    def set_index(self, index) -> None:
+        """Adopt a pre-built index (e.g. loaded from a ``.scdax`` sidecar)."""
+        self._index = index
+
+    def seek_section(self, i: int, check: bool = True) -> SectionHeader:
+        """Jump straight to logical section ``i`` (random access).
+
+        Positions the cursor on the section and installs the same pending
+        state a forward :meth:`read_section_header` walk would have produced,
+        without replaying the file — any data call (windowed/element reads
+        included) works afterwards.  Discards any currently pending section.
+
+        ``check`` re-reads the 64-byte on-disk section header and verifies
+        it against the index entry, so a stale sidecar can never silently
+        return wrong bytes.  Non-collective: any rank may seek freely, but
+        collective data calls still require all ranks on the same section.
+        """
+        self._check_open()
+        idx = self.index()
+        entries = idx.entries
+        if not 0 <= i < len(entries):
+            raise ScdaError(ScdaErrorCode.ARG_SEQUENCE,
+                            f"section {i} outside [0, {len(entries)})")
+        e = entries[i]
+        if check:
+            raw_letter, raw_user = e.raw_header()
+            letter, user = spec.parse_section_header(
+                self._backend.pread(e.start, spec.SECTION_HEADER_BYTES))
+            if letter != raw_letter or user != raw_user:
+                raise ScdaError(
+                    ScdaErrorCode.CORRUPT_ENCODING,
+                    f"index entry {i} does not match the file at offset "
+                    f"{e.start}: expected {raw_letter!r} {raw_user!r}, "
+                    f"found {letter!r} {user!r} (stale index?)")
+        self._backend.advise(e.start, e.end - e.start, "willneed")
+        self.cursor = e.start
+        self._pending = e.to_pending()
+        return self._pending.header
+
+    def open_section(self, user_string: bytes, occurrence: int = 0,
+                     check: bool = True) -> SectionHeader:
+        """Seek to the ``occurrence``-th section whose user string matches."""
+        i = self.index().find(user_string, occurrence)
+        if i < 0:
+            raise ScdaError(ScdaErrorCode.ARG_SEQUENCE,
+                            f"no section with user string {user_string!r} "
+                            f"(occurrence {occurrence})")
+        return self.seek_section(i, check=check)
+
     # -- data reads (§A.5.2–A.5.6) -------------------------------------------
     def read_inline_data(self, root: Optional[int] = None) -> Optional[bytes]:
         """§A.5.2.  ``root=None`` returns the bytes on every rank."""
@@ -233,20 +306,24 @@ class ScdaReader:
         if p is None:
             raise ScdaError(ScdaErrorCode.ARG_SEQUENCE, "no pending section")
         if p.kind == "I":
+            p.total_bytes = spec.INLINE_DATA_BYTES
             end = p.data_start + spec.INLINE_DATA_BYTES
         elif p.kind == "B":
+            p.total_bytes = p.header.E
             end = p.data_start + spec.padded_data_bytes(p.header.E)
         elif p.kind == "zB":
+            p.total_bytes = p.raw_E
             end = p.data_start + spec.padded_data_bytes(p.raw_E)
         elif p.kind == "A":
-            end = p.data_start + spec.padded_data_bytes(
-                p.header.N * p.header.E)
+            p.total_bytes = p.header.N * p.header.E
+            end = p.data_start + spec.padded_data_bytes(p.total_bytes)
         else:  # V, zA, zV — must sum the carrier's element sizes
             N = p.header.N
             entries_start = (p.entries_start if p.kind == "V"
                              else p.v_entries_start)
             data_start = (p.data_start if p.kind == "V" else p.v_data_start)
             total = self._sum_entries(entries_start, N)
+            p.total_bytes = total
             end = data_start + spec.padded_data_bytes(total)
         self._finish(end)
 
@@ -331,11 +408,9 @@ class ScdaReader:
                                 f"element {i} outside [0, {N})")
         if p.kind == "V":
             entries_start, data_start = p.entries_start, p.data_start
-            letter = b"E"
         else:
             entries_start, data_start = p.v_entries_start, p.v_data_start
-            letter = b"E"
-        sizes = self._parse_entries(entries_start, 0, N, letter)
+        sizes = self._parse_entries(entries_start, 0, N, b"E")
         offs = partition.offsets(sizes)
         out = []
         for i in indices:
@@ -487,10 +562,15 @@ def fopen_read(comm: Optional[Communicator], path: str) -> ScdaReader:
     return ScdaReader(comm, path)
 
 
-def scan_sections(path: str, decode: bool = True) -> List[SectionHeader]:
-    """Serial convenience: walk every section header, skipping payloads."""
+def scan_sections(path: str, decode: bool = True,
+                  comm: Optional[Communicator] = None) -> List[SectionHeader]:
+    """Walk every section header, skipping payloads.
+
+    Collective over ``comm`` when one is passed (each rank performs the
+    identical rank-local metadata walk, as in §A.5.1); defaults to serial.
+    """
     headers: List[SectionHeader] = []
-    with fopen_read(SerialComm(), path) as r:
+    with fopen_read(comm or SerialComm(), path) as r:
         while not r.at_eof:
             headers.append(r.read_section_header(decode=decode))
             r.skip_data()

@@ -494,3 +494,22 @@ def array_section_bytes(N: int, E: int) -> int:
 def varray_section_bytes(N: int, total_data: int) -> int:
     return (SECTION_HEADER_BYTES + (1 + N) * COUNT_ENTRY_BYTES
             + padded_data_bytes(total_data))
+
+
+# §3 encoded sections span two physical sections; their combined extents
+# (scdatool fsck cross-checks the reader's cursor walk against these).
+
+def encoded_block_section_bytes(compressed_E: int) -> int:
+    """§3.2 — I(magic, U-entry) followed by B(user, compressed)."""
+    return INLINE_SECTION_BYTES + block_section_bytes(compressed_E)
+
+
+def encoded_array_section_bytes(N: int, total_compressed: int) -> int:
+    """§3.3 — I(magic, U-entry) followed by the carrier V section."""
+    return INLINE_SECTION_BYTES + varray_section_bytes(N, total_compressed)
+
+
+def encoded_varray_section_bytes(N: int, total_compressed: int) -> int:
+    """§3.4 — A(magic, N, 32, U-entries) followed by the carrier V."""
+    return (array_section_bytes(N, COUNT_ENTRY_BYTES)
+            + varray_section_bytes(N, total_compressed))

@@ -1,0 +1,240 @@
+"""``scdatool`` — archive CLI for scda files.
+
+Subcommands::
+
+    scdatool ls FILE                 # section table (via the seekable index)
+    scdatool cat FILE SECTION        # decoded payload of one section
+    scdatool fsck FILE...            # structural validation, non-zero on corruption
+    scdatool index FILE...           # build/refresh (or --check) .scdax sidecars
+    scdatool copy SRC DST            # rewrite; --recompress / --decompress
+
+``SECTION`` is a section number (as printed by ``ls``) or a user string.
+Installed as a console script via ``pyproject.toml``; equivalently
+``python -m repro.tools.cli``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional
+
+from repro.core import (ScdaError, ScdaErrorCode, ScdaIndex, fopen_read,
+                        fopen_write)
+from repro.core.index import SIDECAR_SUFFIX
+from repro.tools.fsck import fsck_file
+
+
+def _err(msg: str) -> None:
+    print(f"scdatool: {msg}", file=sys.stderr)
+
+
+def _printable(user: bytes) -> str:
+    text = user.decode("latin-1")
+    return text if text.isprintable() else repr(user)
+
+
+# -- ls ----------------------------------------------------------------------
+
+def cmd_ls(args) -> int:
+    idx = ScdaIndex.build(args.file)
+    print(f"# {args.file}: {len(idx)} sections, {idx.file_size} bytes, "
+          f"scda version {idx.scda_version:#x}, "
+          f"vendor {_printable(idx.vendor)!r}, "
+          f"user {_printable(idx.user_string)!r}")
+    print(f"{'sec':>4} {'kind':>4} {'N':>10} {'E':>10} {'payload':>12} "
+          f"{'offset':>12}  user string")
+    for i, e in enumerate(idx):
+        print(f"{i:>4} {e.kind:>4} {e.N:>10} {e.E:>10} "
+              f"{e.payload_bytes:>12} {e.start:>12}  "
+              f"{_printable(e.user_string)}")
+    return 0
+
+
+# -- cat ---------------------------------------------------------------------
+
+def _resolve_section(idx: ScdaIndex, token: str) -> int:
+    if token.isdigit():
+        i = int(token)
+        if not 0 <= i < len(idx):
+            raise ScdaError(ScdaErrorCode.ARG_SEQUENCE,
+                            f"section {i} outside [0, {len(idx)})")
+        return i
+    i = idx.find(token.encode("latin-1"))
+    if i < 0:
+        raise ScdaError(ScdaErrorCode.ARG_SEQUENCE,
+                        f"no section with user string {token!r}")
+    return i
+
+
+def cmd_cat(args) -> int:
+    out = sys.stdout.buffer
+    with fopen_read(None, args.file) as r:
+        idx = r.index()
+        i = _resolve_section(idx, args.section)
+        e = idx.entries[i]
+        if args.element is not None and e.type != "V":
+            raise ScdaError(ScdaErrorCode.ARG_SEQUENCE,
+                            f"--element requires a varray section; "
+                            f"section {i} has type {e.type}")
+        if args.extent:
+            out.write(r._backend.pread(e.start, e.end - e.start))
+            return 0
+        hdr = r.seek_section(i)
+        if hdr.type == "I":
+            out.write(r.read_inline_data())
+        elif hdr.type == "B":
+            out.write(r.read_block_data())
+        elif hdr.type == "A":
+            for chunk in r.read_array_data([hdr.N]):
+                out.write(chunk)
+        else:  # V
+            if args.element is not None:
+                out.write(r.read_varray_elements([args.element])[0])
+            else:
+                sizes = r.read_varray_sizes([hdr.N])
+                for chunk in r.read_varray_data([hdr.N], sizes):
+                    out.write(chunk)
+    return 0
+
+
+# -- fsck --------------------------------------------------------------------
+
+def cmd_fsck(args) -> int:
+    status = 0
+    for path in args.files:
+        findings = fsck_file(path, deep=not args.fast,
+                             check_sidecar=not args.no_sidecar)
+        errors = sum(f.severity == "error" for f in findings)
+        warnings = len(findings) - errors
+        for f in findings:
+            if not args.quiet or f.severity == "error":
+                print(f"{path}: {f}")
+        if errors or (args.strict and warnings):
+            status = 1
+            print(f"{path}: CORRUPT ({errors} errors, {warnings} warnings)")
+        else:
+            print(f"{path}: clean ({warnings} warnings)")
+    return status
+
+
+# -- index -------------------------------------------------------------------
+
+def cmd_index(args) -> int:
+    status = 0
+    for path in args.files:
+        sidecar = path + SIDECAR_SUFFIX
+        if args.check:
+            try:
+                ScdaIndex.load_sidecar(path).verify(deep=True)
+                print(f"{sidecar}: fresh")
+            except (ScdaError, OSError) as e:
+                _err(f"{sidecar}: {e}")
+                status = 1
+            continue
+        idx = ScdaIndex.build(path)
+        idx.write_sidecar()
+        print(f"{sidecar}: {len(idx)} sections indexed")
+    return status
+
+
+# -- copy --------------------------------------------------------------------
+
+def cmd_copy(args) -> int:
+    with fopen_read(None, args.src) as r:
+        idx = r.index()
+        with fopen_write(None, args.dst, user_string=r.user_string,
+                         vendor=r.vendor) as w:
+            for i, e in enumerate(idx):
+                hdr = r.seek_section(i)
+                if args.recompress:
+                    enc = True
+                elif args.decompress:
+                    enc = False
+                else:
+                    enc = e.decoded   # preserve each section's encoding
+                if hdr.type == "I":
+                    w.write_inline(hdr.user_string, r.read_inline_data())
+                elif hdr.type == "B":
+                    w.write_block(hdr.user_string, r.read_block_data(),
+                                  encode=enc)
+                elif hdr.type == "A":
+                    data = r.read_array_data([hdr.N])
+                    w.write_array(hdr.user_string, data, [hdr.N], hdr.E,
+                                  indirect=True, encode=enc)
+                else:  # V
+                    sizes = r.read_varray_sizes([hdr.N])
+                    data = r.read_varray_data([hdr.N], sizes)
+                    w.write_varray(hdr.user_string, data, [hdr.N], sizes,
+                                   encode=enc)
+    if args.index:
+        ScdaIndex.build(args.dst).write_sidecar()
+    print(f"copied {len(idx)} sections: {args.src} -> {args.dst}")
+    return 0
+
+
+# -- entry point -------------------------------------------------------------
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="scdatool",
+        description="inspect, validate, index, and rewrite scda archives")
+    sub = ap.add_subparsers(dest="command", required=True)
+
+    p = sub.add_parser("ls", help="list the section table")
+    p.add_argument("file")
+    p.set_defaults(fn=cmd_ls)
+
+    p = sub.add_parser("cat", help="dump one section's decoded payload")
+    p.add_argument("file")
+    p.add_argument("section", help="section number or user string")
+    p.add_argument("--element", type=int, default=None,
+                   help="single varray element index")
+    p.add_argument("--extent", action="store_true",
+                   help="dump the raw on-disk extent (headers included)")
+    p.set_defaults(fn=cmd_cat)
+
+    p = sub.add_parser("fsck", help="validate file structure")
+    p.add_argument("files", nargs="+")
+    p.add_argument("--fast", action="store_true",
+                   help="skip payload decompression checks")
+    p.add_argument("--no-sidecar", action="store_true",
+                   help="do not verify .scdax sidecars")
+    p.add_argument("--strict", action="store_true",
+                   help="warnings also fail")
+    p.add_argument("-q", "--quiet", action="store_true",
+                   help="print errors only")
+    p.set_defaults(fn=cmd_fsck)
+
+    p = sub.add_parser("index", help="write (or --check) .scdax sidecars")
+    p.add_argument("files", nargs="+")
+    p.add_argument("--check", action="store_true",
+                   help="verify existing sidecars instead of writing")
+    p.set_defaults(fn=cmd_index)
+
+    p = sub.add_parser("copy", help="rewrite an archive section by section")
+    p.add_argument("src")
+    p.add_argument("dst")
+    g = p.add_mutually_exclusive_group()
+    g.add_argument("--recompress", action="store_true",
+                   help="§3-encode every B/A/V payload")
+    g.add_argument("--decompress", action="store_true",
+                   help="store every payload raw")
+    p.add_argument("--index", action="store_true",
+                   help="also write the destination's .scdax sidecar")
+    p.set_defaults(fn=cmd_copy)
+    return ap
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    args = build_parser().parse_args(argv)
+    try:
+        return args.fn(args)
+    except BrokenPipeError:  # | head etc.
+        return 0
+    except (ScdaError, OSError) as e:
+        _err(str(e))
+        return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,171 @@
+"""Structural validation of scda files (``scdatool fsck``).
+
+Walks the section stream front to back, re-deriving every offset the way a
+reader must, and checks everything the format makes checkable:
+
+* file header: magic bytes, version range, vendor/user padding;
+* section headers and count entries, including the per-element entry
+  tables of V sections with STRICT letter enforcement (the normal skip
+  path is deliberately lenient there, §A.5.1);
+* §3 compression framing: base64 line geometry, the 'z' marker, the
+  deflate stream's adler32, and the redundant size checks — every
+  compressed payload is actually inflated (unless ``deep=False``);
+* truncation: no section may extend past end of file, and the final
+  section's padding must land exactly ON end of file (trailing garbage
+  fails the next header parse and is reported as corruption);
+* data padding: the length is normative and enforced by offset
+  arithmetic; the pad *bytes* are only advisory per §2.1.2 ("may consist
+  of p arbitrary bytes"), so a pad matching neither the Unix nor the
+  MIME discipline is reported as a warning, not an error;
+* an existing ``.scdax`` sidecar, when present, is deep-verified against
+  the file (stale sidecars are findings too).
+
+Corruption cannot be resynced in a stream format — the walk stops at the
+first structural error; warnings accumulate.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import List, Optional
+
+from repro.core import spec
+from repro.core.errors import ScdaError
+from repro.core.index import SIDECAR_SUFFIX, ScdaIndex
+from repro.core.reader import fopen_read
+
+
+@dataclasses.dataclass
+class Finding:
+    severity: str            # "error" | "warning"
+    offset: int              # byte offset the finding anchors to
+    section: Optional[int]   # logical section number, None for file-level
+    message: str
+
+    def __str__(self) -> str:
+        where = f"section {self.section}" if self.section is not None \
+            else "file"
+        return f"{self.severity}: @{self.offset} ({where}): {self.message}"
+
+
+def _payload_bytes(r, p) -> int:
+    """On-disk data bytes of the pending section (strict-parses V tables)."""
+    if p.kind == "I":
+        return spec.INLINE_DATA_BYTES
+    if p.kind == "B":
+        return p.header.E
+    if p.kind == "zB":
+        return p.raw_E
+    if p.kind == "A":
+        return p.header.N * p.header.E
+    entries = p.entries_start if p.kind == "V" else p.v_entries_start
+    return sum(r._parse_entries(entries, 0, p.header.N, b"E"))
+
+
+def _check_section(r, deep: bool) -> None:
+    """Consume the pending section, validating as much as ``deep`` asks."""
+    p = r._pending
+    kind = p.kind
+    N = p.header.N
+    if kind == "I":
+        r.read_inline_data()
+    elif kind in ("B", "zB"):
+        if deep:
+            r.read_block_data()       # zB: inflate + adler32 + size check
+        else:
+            r.skip_data()
+    elif kind == "A":
+        r.skip_data()                 # raw payload: bounds are the check
+    elif kind == "zA":
+        if deep:
+            r.read_array_data([N])    # inflate every element, verify E
+        else:
+            r.skip_data()
+    elif kind == "V":
+        r.skip_data()
+    else:  # zV
+        sizes = r.read_varray_sizes([N])   # strict 'U' entry parse
+        if deep:
+            r.read_varray_data([N], sizes)  # inflate, verify per-element U
+        else:
+            r.skip_data()
+
+
+def _expected_extent(p, payload: int) -> int:
+    """The section's on-disk size from spec arithmetic alone.
+
+    Cross-checks the reader's cursor bookkeeping against an independent
+    derivation — the two agreeing is a structural invariant of the format.
+    """
+    kind, hdr = p.kind, p.header
+    if kind == "I":
+        return spec.inline_section_bytes()
+    if kind == "B":
+        return spec.block_section_bytes(hdr.E)
+    if kind == "zB":
+        return spec.encoded_block_section_bytes(p.raw_E)
+    if kind == "A":
+        return spec.array_section_bytes(hdr.N, hdr.E)
+    if kind == "V":
+        return spec.varray_section_bytes(hdr.N, payload)
+    if kind == "zA":
+        return spec.encoded_array_section_bytes(hdr.N, payload)
+    return spec.encoded_varray_section_bytes(hdr.N, payload)
+
+
+def _pad_warning(backend, kind: str, data_region: int, payload: int,
+                 end: int) -> Optional[str]:
+    """Check the pad bytes against both canonical styles (advisory)."""
+    if kind == "I":
+        return None  # inline sections carry exactly 32 bytes, no padding
+    pad = backend.pread(data_region + payload, end - data_region - payload)
+    last = backend.pread(data_region + payload - 1, 1)[0] if payload else None
+    for style in (spec.UNIX, spec.MIME):
+        if pad == spec.pad_data(payload, last, style):
+            return None
+    return (f"data padding matches neither Unix nor MIME style "
+            f"(legal per §2.1.2, but unusual): {pad[:16]!r}")
+
+
+def fsck_file(path: str, deep: bool = True,
+              check_sidecar: bool = True) -> List[Finding]:
+    """Validate ``path``; returns findings (empty = clean)."""
+    findings: List[Finding] = []
+    try:
+        r = fopen_read(None, path)
+    except ScdaError as e:
+        findings.append(Finding("error", 0, None, str(e)))
+        return findings
+    with r:
+        sec = 0
+        while not r.at_eof:
+            start = r.cursor
+            try:
+                r.read_section_header(decode=True)
+                p = r._pending
+                data_region = (p.v_data_start
+                               if p.kind in ("zA", "zV") else p.data_start)
+                payload = _payload_bytes(r, p)
+                _check_section(r, deep)
+                if r.cursor - start != _expected_extent(p, payload):
+                    findings.append(Finding(
+                        "error", start, sec,
+                        f"section extent {r.cursor - start} != spec "
+                        f"arithmetic {_expected_extent(p, payload)}"))
+                    return findings
+                warn = _pad_warning(r._backend, p.kind, data_region,
+                                    payload, r.cursor)
+                if warn:
+                    findings.append(Finding("warning", data_region + payload,
+                                            sec, warn))
+            except ScdaError as e:
+                findings.append(Finding("error", start, sec, str(e)))
+                return findings  # a stream format cannot resync
+            sec += 1
+    if check_sidecar and os.path.exists(path + SIDECAR_SUFFIX):
+        try:
+            ScdaIndex.load_sidecar(path).verify(deep=True)
+        except ScdaError as e:
+            findings.append(Finding("error", 0, None,
+                                    f"sidecar {path + SIDECAR_SUFFIX}: {e}"))
+    return findings

@@ -1,0 +1,331 @@
+"""The PR-2 random-access layer: ScdaIndex, seek_section, .scdax sidecars.
+
+Core invariant: data reached through an index seek is byte-identical to
+data reached by the forward-only walk, for every section kind and every
+reading partition — the index changes WHERE the cursor comes from, never
+WHAT the reads return.
+"""
+import os
+
+import pytest
+
+from repro.checkpoint import manifest as mf
+from repro.checkpoint import pytree_io
+from repro.core import (ScdaError, ScdaIndex, ThreadComm, fopen_read,
+                        fopen_write, partition, run_ranks, scan_sections)
+from repro.core.errors import ScdaErrorCode
+
+V_SIZES = [5, 0, 17, 3, 64, 1]
+
+
+def write_all_kinds(path, comm=None):
+    """One section of every physical kind: I, B, A, V, zB, zA, zV."""
+    rng = __import__("random").Random(7)
+    elems = [bytes(rng.randrange(256) for _ in range(s)) for s in V_SIZES]
+    blk = b"0123456789abcdef" * 40
+    arr = bytes(range(256)) * 2
+    with fopen_write(comm, path, user_string=b"index test") as f:
+        f.write_inline(b"inl", b"#" * 32)
+        f.write_block(b"blk", blk)
+        f.write_array(b"arr", arr, [64], 8)
+        f.write_varray(b"var", elems, [len(elems)], V_SIZES)
+        f.write_block(b"zblk", blk, encode=True)
+        f.write_array(b"zarr", arr, [128], 4, encode=True)
+        f.write_varray(b"zvar", elems, [len(elems)], V_SIZES, encode=True)
+    return blk, arr, elems
+
+
+@pytest.fixture
+def archive(tmp_path):
+    path = str(tmp_path / "all_kinds.scda")
+    blk, arr, elems = write_all_kinds(path)
+    return path, blk, arr, elems
+
+
+KINDS = ["I", "B", "A", "V", "zB", "zA", "zV"]
+LOGICAL = ["I", "B", "A", "V", "B", "A", "V"]
+
+
+class TestScanAndSkip:
+    """skip_data / scan_sections across every section kind (satellite)."""
+
+    def test_scan_decoded_kinds(self, archive):
+        path, _, _, _ = archive
+        headers = scan_sections(path)
+        assert [h.type for h in headers] == LOGICAL
+        assert [h.decoded for h in headers] == [False] * 4 + [True] * 3
+
+    def test_scan_raw_kinds(self, archive):
+        path, _, _, _ = archive
+        # decode=False sees the physical sections: each §3-encoded logical
+        # section is two raw sections (I+B, I+V, A+V).
+        raw = scan_sections(path, decode=False)
+        assert [h.type for h in raw] == \
+            ["I", "B", "A", "V", "I", "B", "I", "V", "A", "V"]
+        assert not any(h.decoded for h in raw)
+
+    def test_skip_every_kind_lands_on_next_header(self, archive):
+        path, _, _, _ = archive
+        with fopen_read(None, path) as r:
+            starts = []
+            while not r.at_eof:
+                starts.append(r.cursor)
+                r.read_section_header()
+                r.skip_data()
+            assert r.cursor == r._backend.size()
+        # every recorded start parses as a section header again
+        with fopen_read(None, path) as r:
+            for s in starts:
+                r.cursor = s
+                r.read_section_header()
+                r.skip_data()
+
+    def test_scan_sections_accepts_communicator(self, archive):
+        path, _, _, _ = archive
+        serial = scan_sections(path)
+
+        def scan(comm):
+            return scan_sections(path, comm=comm)
+
+        for per_rank in run_ranks(ThreadComm.group(3), scan):
+            assert per_rank == serial
+
+
+class TestIndex:
+    def test_entries_match_scan(self, archive):
+        path, _, _, _ = archive
+        idx = ScdaIndex.build(path)
+        assert [e.kind for e in idx] == KINDS
+        assert [e.header() for e in idx] == scan_sections(path)
+        # entries tile the file exactly
+        assert idx.entries[0].start == 128
+        for a, b in zip(idx.entries, idx.entries[1:]):
+            assert a.end == b.start
+        assert idx.entries[-1].end == idx.file_size == os.path.getsize(path)
+
+    def test_find(self, archive):
+        path, _, _, _ = archive
+        idx = ScdaIndex.build(path)
+        assert idx.find(b"zarr") == 5
+        assert idx.find(b"nope") == -1
+        assert idx.find(b"blk", occurrence=1) == -1
+
+    def test_seek_reads_byte_identical(self, archive):
+        path, blk, arr, elems = archive
+        with fopen_read(None, path) as r:
+            # visit sections in a deliberately non-forward order
+            assert r.seek_section(4).E == len(blk)
+            assert r.read_block_data() == blk  # zB: transparently inflated
+
+            assert r.seek_section(2).N == 64
+            assert b"".join(r.read_array_data([64])) == arr
+
+            hdr = r.seek_section(6)
+            sizes = r.read_varray_sizes([hdr.N])
+            assert sizes == V_SIZES
+            assert r.read_varray_data([hdr.N], sizes) == elems
+
+            hdr = r.seek_section(3)
+            assert r.read_varray_elements([2, 4]) == [elems[2], elems[4]]
+            r.skip_data()
+
+            assert r.seek_section(0).type == "I"
+            assert r.read_inline_data() == b"#" * 32
+
+            assert r.seek_section(5).N == 128  # zA
+            assert b"".join(r.read_array_data([128])) == arr
+
+    def test_seek_windowed_reads_match_forward(self, archive):
+        path, _, arr, _ = archive
+        with fopen_read(None, path) as r:
+            hdr = r.seek_section(2)
+            windows = [(0, 3), (10, 5), (63, 1)]
+            got = r.read_array_windows(windows, hdr.E)
+        for (start, n), data in zip(windows, got):
+            assert data == arr[start * 8:(start + n) * 8]
+
+    def test_open_section_by_user_string(self, archive):
+        path, blk, _, _ = archive
+        with fopen_read(None, path) as r:
+            hdr = r.open_section(b"zblk")
+            assert hdr.decoded and r.read_block_data() == blk
+            with pytest.raises(ScdaError):
+                r.open_section(b"missing")
+
+    def test_seek_out_of_range(self, archive):
+        path, _, _, _ = archive
+        with fopen_read(None, path) as r:
+            with pytest.raises(ScdaError):
+                r.seek_section(99)
+
+    def test_seek_discards_pending(self, archive):
+        path, blk, _, _ = archive
+        with fopen_read(None, path) as r:
+            idx = r.index()  # build before any section is pending
+            r.seek_section(2)  # pending A, data never consumed
+            assert r.seek_section(1).E == len(blk)
+            assert r.read_block_data() == blk
+            assert idx is r.index()
+
+    def test_seek_with_pending_on_fresh_reader(self, archive):
+        """Seek-after-browse must not depend on whether an index was
+        already cached: the lazy build preserves the pending section."""
+        path, blk, _, _ = archive
+        with fopen_read(None, path) as r:
+            r.read_section_header()  # browse, never consume
+            assert r.seek_section(1).E == len(blk)  # triggers index build
+            assert r.read_block_data() == blk
+
+    def test_index_build_preserves_walk_state(self, archive):
+        path, blk, _, _ = archive
+        with fopen_read(None, path) as r:
+            r.read_section_header()
+            r.skip_data()
+            hdr = r.read_section_header()  # pending B
+            r.index()                      # mid-walk build
+            assert r.read_block_data() == blk  # walk continues untouched
+            assert hdr.E == len(blk)
+
+
+def assert_seek_equals_forward(path, P):
+    """Byte-identity: seek-based partitioned reads == serial forward reads."""
+    serial = {}
+    with fopen_read(None, path) as r:
+        i = 0
+        while not r.at_eof:
+            hdr = r.read_section_header()
+            if hdr.type == "I":
+                serial[i] = r.read_inline_data()
+            elif hdr.type == "B":
+                serial[i] = r.read_block_data()
+            elif hdr.type == "A":
+                serial[i] = b"".join(r.read_array_data([hdr.N]))
+            else:
+                sizes = r.read_varray_sizes([hdr.N])
+                serial[i] = b"".join(r.read_varray_data([hdr.N], sizes))
+            i += 1
+    nsec = len(serial)
+
+    def workload(comm):
+        out = {}
+        with fopen_read(comm, path) as r:
+            for i in reversed(range(nsec)):  # stress non-forward order
+                hdr = r.seek_section(i)
+                if hdr.type == "I":
+                    out[i] = r.read_inline_data()
+                elif hdr.type == "B":
+                    out[i] = r.read_block_data()
+                elif hdr.type == "A":
+                    counts = partition.uniform(hdr.N, comm.size)
+                    out[i] = b"".join(r.read_array_data(counts))
+                else:
+                    counts = partition.uniform(hdr.N, comm.size)
+                    sizes = r.read_varray_sizes(counts)
+                    out[i] = b"".join(r.read_varray_data(counts, sizes))
+        return out
+
+    per_rank = run_ranks(ThreadComm.group(P), workload)
+    for i in range(nsec):
+        joined = b"".join(rank[i] for rank in per_rank
+                          if rank[i] is not None)
+        # inline/block reads return full data on every rank
+        expect = serial[i] * (P if i in (0, 1, 4) else 1)
+        assert joined == expect, f"section {i} differs under P={P}"
+
+
+@pytest.mark.parametrize("P", [1, 2, 4, 8])
+def test_index_vs_forward_byte_identity(tmp_path, P):
+    """Satellite: index-vs-forward byte-identity under ThreadComm P∈{1,2,4,8}."""
+    path = str(tmp_path / "p.scda")
+    write_all_kinds(path)
+    assert_seek_equals_forward(path, P)
+
+
+class TestSidecar:
+    def test_round_trip(self, archive):
+        path, _, _, _ = archive
+        idx = ScdaIndex.build(path)
+        sp = idx.write_sidecar()
+        assert sp == path + ".scdax"
+        # the sidecar is itself a valid scda file
+        side = scan_sections(sp)
+        assert [h.type for h in side] == ["I", "B"]
+        loaded = ScdaIndex.load_sidecar(path)
+        assert loaded.entries == idx.entries
+        assert loaded.file_size == idx.file_size
+        assert loaded.user_string == idx.user_string
+        loaded.verify(deep=True)
+
+    def test_stale_sidecar_detected(self, archive):
+        path, _, _, _ = archive
+        ScdaIndex.build(path).write_sidecar()
+        with open(path, "ab") as fh:
+            fh.write(b"tail")
+        with pytest.raises(ScdaError) as ei:
+            ScdaIndex.load_sidecar(path)
+        assert ei.value.code == ScdaErrorCode.CORRUPT_TRUNCATED
+
+    def test_same_size_rewrite_caught_on_seek(self, tmp_path):
+        """A same-size rewrite defeats the size probe; the per-seek header
+        check must still refuse to serve stale metadata."""
+        path = str(tmp_path / "f.scda")
+        with fopen_write(None, path) as f:
+            f.write_block(b"first", b"x" * 100)
+        idx = ScdaIndex.build(path)
+        idx.write_sidecar()
+        with fopen_write(None, path) as f:
+            f.write_block(b"other", b"y" * 100)  # same geometry, new name
+        loaded = ScdaIndex.load_sidecar(path)  # size probe passes
+        with fopen_read(None, path) as r:
+            r.set_index(loaded)
+            with pytest.raises(ScdaError) as ei:
+                r.seek_section(0)
+            assert ei.value.code == ScdaErrorCode.CORRUPT_ENCODING
+        with pytest.raises(ScdaError):
+            loaded.verify(deep=True)
+
+    def test_cached_falls_back_and_rewrites(self, archive):
+        path, _, _, _ = archive
+        assert not os.path.exists(path + ".scdax")
+        idx = ScdaIndex.cached(path)
+        assert os.path.exists(path + ".scdax")  # written on miss
+        again = ScdaIndex.cached(path)
+        assert again.entries == idx.entries
+
+
+class TestLazyRestore:
+    def test_restore_leaf_matches_full(self, tmp_path):
+        np = pytest.importorskip("numpy")
+        path = str(tmp_path / "ck.scda")
+        tree = {"w": np.arange(48, dtype=np.float64).reshape(6, 8),
+                "b": np.full((17,), 3, np.int32), "lr": 0.5}
+        pytree_io.save(path, tree, step=11)
+        full, step = pytree_io.restore(path)
+        assert step == 11
+        for name in ("w", "b"):
+            lazy = pytree_io.restore_leaf(path, name)
+            np.testing.assert_array_equal(lazy, full[name])
+        assert pytree_io.restore_leaf(path, "lr") == 0.5
+        with pytest.raises(ScdaError):
+            pytree_io.restore_leaf(path, "nope")
+
+    def test_restore_leaf_compressed_selective(self, tmp_path):
+        np = pytest.importorskip("numpy")
+        path = str(tmp_path / "ckz.scda")
+        tree = {"w": np.arange(4096, dtype=np.float32),
+                "b": np.zeros((2048,), np.float32)}
+        pytree_io.save(path, tree, compressed=True, chunk_bytes=1 << 10)
+        np.testing.assert_array_equal(
+            pytree_io.restore_leaf(path, "w"), tree["w"])
+
+    def test_restore_leaf_uses_fresh_sidecar(self, tmp_path):
+        np = pytest.importorskip("numpy")
+        path = str(tmp_path / "ck.scda")
+        tree = {"w": np.arange(10, dtype=np.float32)}
+        pytree_io.save(path, tree)
+        ScdaIndex.build(path).write_sidecar()
+        np.testing.assert_array_equal(
+            pytree_io.restore_leaf(path, "w"), tree["w"])
+
+    def test_leaf_user_string_round_trip(self):
+        assert mf.leaf_user_string(7) == b"leaf 000007"
