@@ -1,0 +1,68 @@
+"""Overlapped vs serial restore bandwidth — the PR-3 read-pipeline claim.
+
+Restores a multi-leaf checkpoint twice per variant: ``prefetch_bytes=0``
+(the serial oracle: pread → inflate → copy, one chunk at a time) and the
+default overlapped engine (background prefetch + pooled inflation).  Raw
+leaves measure the scatter-read/prefetch path; compressed leaves measure
+read/inflate overlap on the codec pool (``REPRO_CODEC_THREADS``).
+
+Methodology mirrors bench_parallel_io: ``os.sync()`` quiesces writeback
+between timed regions and each region is best-of-N.  The page cache
+cannot be dropped without privileges, so numbers are cold-ish, not
+cold-disk — they quantify the pipeline's overlap win, which is also what
+the byte-identity tests pin down for correctness.
+"""
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.checkpoint import pytree_io
+
+
+def _best_of(fn, reps=2):
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+        os.sync()
+    return best
+
+
+def _make_tree(total_mb, nleaves):
+    """Checkpoint-like leaves: structured float payloads (real-but-finite
+    deflate ratio), identical across serial/pipelined runs."""
+    per_elems = total_mb * (1 << 20) // nleaves // 4
+    return {f"leaf{i:02d}": (np.arange(per_elems, dtype=np.float32)
+                             * 0.5 + i)
+            for i in range(nleaves)}
+
+
+def run(quick=False):
+    rows = []
+    total_mb = 16 if quick else 64
+    nleaves = 8
+    reps = 1 if quick else 2
+    # 256 KiB deflate chunks: finer pipeline granularity than the 1 MiB
+    # default, and small enough that pooled inflates stay cache-resident.
+    chunk_bytes = 256 << 10
+    for tag, compressed in (("raw", False), ("zlib", True)):
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, f"{tag}.scda")
+            pytree_io.save(path, _make_tree(total_mb, nleaves),
+                           compressed=compressed, chunk_bytes=chunk_bytes)
+            os.sync()
+            times = {}
+            for mode, pf in (("serial", 0), ("pipelined", None)):
+                times[mode] = _best_of(
+                    lambda: pytree_io.restore(path, prefetch_bytes=pf),
+                    reps)
+                derived = f"{total_mb / times[mode]:.0f}MB/s"
+                if mode == "pipelined":
+                    derived += (f" speedup="
+                                f"{times['serial'] / times[mode]:.1f}x")
+                rows.append((f"restore.{mode}_{tag}",
+                             times[mode] * 1e6, derived))
+    return rows

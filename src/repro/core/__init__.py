@@ -19,7 +19,7 @@ through the Communicator + positioned-I/O backend, exactly as in the paper
 where the format is defined independently of MPI.
 """
 from repro.core.errors import ScdaError, ScdaErrorCode, ferror_string
-from repro.core import spec, encode, codec, partition
+from repro.core import spec, encode, codec, partition, pipeline
 from repro.core.comm import (Communicator, SerialComm, ThreadComm,
                              JaxProcessComm, run_ranks)
 from repro.core.io_backend import FileBackend
@@ -30,7 +30,7 @@ from repro.core.index import IndexEntry, ScdaIndex
 
 __all__ = [
     "ScdaError", "ScdaErrorCode", "ferror_string",
-    "spec", "encode", "codec", "partition",
+    "spec", "encode", "codec", "partition", "pipeline",
     "Communicator", "SerialComm", "ThreadComm", "JaxProcessComm",
     "run_ranks", "FileBackend",
     "ScdaWriter", "fopen_write", "DEFAULT_VENDOR",

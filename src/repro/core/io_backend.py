@@ -19,15 +19,27 @@ Fast-path machinery (all byte-transparent):
 * :meth:`FileBackend.write_gather` — takes a scatter-gather list of
   ``(offset, buffer)`` fragments and coalesces *adjacent* fragments into
   single vectored writes, so a whole contiguous section becomes one syscall.
+* :meth:`FileBackend.read_scatter` — the read mirror of ``write_gather``:
+  fills ``(offset, buffer)`` fragments via ``os.preadv``, coalescing
+  adjacent fragments into single vectored reads (IOV_MAX batching, partial
+  reads resumed, EOF raises CORRUPT_TRUNCATED instead of spinning).
 * A configurable readahead cache for mode ``'r'`` so metadata scans
   (64-byte section headers, 32-byte count entries) stop issuing tiny
   ``pread`` syscalls.  ``REPRO_SCDA_READAHEAD`` (bytes) tunes it; ``0``
-  disables.  Large payload reads bypass the cache entirely.
+  disables.  Large payload reads bypass the cache entirely.  The window is
+  seek-aware: :meth:`FileBackend.refit_readahead` drops and re-fits it at a
+  jump target instead of serving the first post-seek reads cold.
+* A background prefetch executor (:meth:`FileBackend.prefetch`) that
+  double-buffers upcoming extents for the overlapped restore engine
+  (:mod:`repro.core.pipeline`): reads land in a bounded cache consulted by
+  ``pread``/``read_scatter``; :meth:`FileBackend.release` drops consumed
+  buffers and hands the pages back with ``posix_fadvise(DONTNEED)``.
 """
 from __future__ import annotations
 
 import os
-from typing import Iterable, List, Optional, Sequence, Tuple, Union
+import threading
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
 
 from repro.core.errors import ScdaError, ScdaErrorCode
 
@@ -40,7 +52,24 @@ MAX_ZERO_PROGRESS = 8
 #: Default readahead window for mode-'r' backends (bytes); env-overridable.
 DEFAULT_READAHEAD = int(os.environ.get("REPRO_SCDA_READAHEAD", str(64 << 10)))
 
+#: Default prefetch window for the overlapped restore engine (bytes).
+#: ``REPRO_SCDA_PREFETCH`` overrides; ``0`` disables prefetch entirely,
+#: which makes every pipelined code path degrade to the serial read order.
+DEFAULT_PREFETCH = 4 << 20
+
+
+def prefetch_window() -> int:
+    """The effective prefetch window, read from the environment per call
+    (cheap, and lets tests flip the knob without re-importing)."""
+    raw = os.environ.get("REPRO_SCDA_PREFETCH", "")
+    try:
+        return max(0, int(raw)) if raw else DEFAULT_PREFETCH
+    except ValueError:
+        return DEFAULT_PREFETCH
+
+
 _HAS_PWRITEV = hasattr(os, "pwritev")
+_HAS_PREADV = hasattr(os, "preadv")
 try:
     _IOV_MAX = os.sysconf("SC_IOV_MAX")
     if _IOV_MAX <= 0:
@@ -87,6 +116,11 @@ class FileBackend:
                            else readahead) if mode == "r" else 0
         self._cache: bytes = b""
         self._cache_off = 0
+        # Prefetch state (mode 'r' only; executor is created lazily on the
+        # first prefetch() call so serial readers never pay for a thread).
+        self._pf_lock = threading.Lock()
+        self._pf: Dict[int, Tuple[int, "Future"]] = {}  # off -> (len, fut)
+        self._pf_pool = None
 
     # -- writes ---------------------------------------------------------------
     def pwrite(self, offset: int, data: BytesLike) -> None:
@@ -162,6 +196,31 @@ class FileBackend:
             if i < len(views) and n:
                 views[i] = views[i][n:]
 
+    @staticmethod
+    def _coalesce_runs(frags: Iterable[Tuple[int, BytesLike]]):
+        """Group ``(offset, buffer)`` fragments into maximal contiguous
+        runs, yielding ``(run_offset, run_bytes, buffers)``.  Fragments
+        must arrive in non-decreasing offset order; zero-length buffers
+        are skipped.  Shared by :meth:`write_gather` and
+        :meth:`read_scatter` so the two sides can never diverge."""
+        run_off = 0
+        run_end = None
+        bufs: List[BytesLike] = []
+        for off, buf in frags:
+            length = len(buf)
+            if length == 0:
+                continue
+            if run_end is not None and off != run_end:
+                yield run_off, run_end - run_off, bufs
+                bufs = []
+                run_end = None
+            if run_end is None:
+                run_off = run_end = off
+            bufs.append(buf)
+            run_end += length
+        if bufs:
+            yield run_off, run_end - run_off, bufs
+
     def write_gather(self,
                      frags: Iterable[Tuple[int, BytesLike]]) -> None:
         """Write ``(offset, buffer)`` fragments, coalescing adjacent runs.
@@ -171,28 +230,17 @@ class FileBackend:
         buffers are skipped.  Buffers must be bytes-like with ``len()`` in
         bytes (i.e. flat uint8 views — what the writer produces).
         """
-        run_off = 0
-        run_end = None
-        bufs: List[BytesLike] = []
-        for off, buf in frags:
-            length = len(buf)
-            if length == 0:
-                continue
-            if run_end is not None and off != run_end:
-                self.pwritev(run_off, bufs)
-                bufs = []
-                run_end = None
-            if run_end is None:
-                run_off = run_end = off
-            bufs.append(buf)
-            run_end += length
-        if bufs:
+        for run_off, _, bufs in self._coalesce_runs(frags):
             self.pwritev(run_off, bufs)
 
     # -- reads ----------------------------------------------------------------
     def pread(self, offset: int, n: int) -> bytes:
         if n <= 0:
             return b""
+        if self._pf:
+            hit = self._take_prefetched(offset, n)
+            if hit is not None:
+                return bytes(hit)
         ra = self._readahead
         if ra and n <= ra:
             lo, cache = self._cache_off, self._cache
@@ -233,6 +281,249 @@ class FileBackend:
         except OSError as e:
             raise ScdaError(ScdaErrorCode.FS_READ,
                             f"{self.path}@{offset}: {e}") from e
+
+    def preadv(self, offset: int, bufs: Sequence[memoryview]) -> int:
+        """Fill writable buffers contiguously from ``offset`` in as few
+        syscalls as possible; returns bytes read (short only at EOF).
+
+        The read mirror of :meth:`pwritev`: IOV_MAX batching and partial
+        reads resumed mid-buffer.  A 0-byte return is EOF, never a stall,
+        so the zero-progress guard here is simply to stop — callers decide
+        whether a short fill is CORRUPT_TRUNCATED.
+        """
+        views = [v if isinstance(v, memoryview) else memoryview(v)
+                 for v in bufs if len(v)]
+        if not _HAS_PREADV:  # pragma: no cover - exercised on exotic hosts
+            got = 0
+            for v in views:
+                data = self._pread_upto(offset + got, len(v))
+                v[:len(data)] = data
+                got += len(data)
+                if len(data) < len(v):
+                    break
+            return got
+        i, got = 0, 0
+        while i < len(views):
+            batch = views[i:i + _IOV_MAX]
+            try:
+                n = os.preadv(self.fd, batch, offset + got)
+            except OSError as e:
+                raise ScdaError(ScdaErrorCode.FS_READ,
+                                f"{self.path}@{offset + got}: {e}") from e
+            if n == 0:  # EOF — no spinning possible on reads
+                break
+            got += n
+            while i < len(views) and n >= len(views[i]):
+                n -= len(views[i])
+                i += 1
+            if i < len(views) and n:
+                views[i] = views[i][n:]
+        return got
+
+    def read_scatter(self,
+                     frags: Iterable[Tuple[int, BytesLike]]) -> None:
+        """Fill ``(offset, buffer)`` fragments, coalescing adjacent runs.
+
+        The read mirror of :meth:`write_gather`: fragments must arrive in
+        non-decreasing offset order; each maximal contiguous run becomes a
+        single vectored read straight into the caller's buffers (no user
+        space concatenation or copy).  Runs covered by a prefetched extent
+        are served from the prefetch cache without a syscall.  A run that
+        cannot be filled completely raises CORRUPT_TRUNCATED, exactly as
+        :meth:`pread` would.
+        """
+        for run_off, total, bufs in self._coalesce_runs(frags):
+            self._read_run(run_off, total, bufs)
+
+    def _read_run(self, offset: int, total: int,
+                  bufs: List[BytesLike]) -> None:
+        if self._pf:
+            hit = self._take_prefetched(offset, total)
+            if hit is not None:
+                pos = 0
+                for b in bufs:
+                    v = memoryview(b)
+                    v[:] = hit[pos:pos + len(v)]
+                    pos += len(v)
+                return
+        got = self.preadv(offset, [memoryview(b) for b in bufs])
+        if got < total:
+            raise ScdaError(
+                ScdaErrorCode.CORRUPT_TRUNCATED,
+                f"{self.path}: EOF at {offset + got}, wanted {total}")
+
+    def read_extents(self, extents: Sequence[Tuple[int, int]]) \
+            -> List[BytesLike]:
+        """Read ``(offset, length)`` extents into per-extent buffers.
+
+        Extents covered by a prefetched run are returned as ZERO-COPY
+        views of the prefetch buffer (the §3 decode path only reads
+        them); misses fall back to exact preads.  Raises
+        CORRUPT_TRUNCATED on short data, like :meth:`pread`.
+        """
+        out: List[BytesLike] = []
+        for off, n in extents:
+            if n <= 0:
+                out.append(b"")
+                continue
+            hit = self._take_prefetched(off, n) if self._pf else None
+            out.append(hit if hit is not None
+                       else self._pread_exact(off, n))
+        return out
+
+    # -- background prefetch (the overlapped restore engine's feeder) ---------
+    def prefetch(self, extents: Sequence[Tuple[int, int]],
+                 window: int, start: int = 0) -> int:
+        """Schedule background reads of ``(offset, length)`` extents,
+        beginning at index ``start``.
+
+        Adjacent extents coalesce into single jobs; scheduling stops once
+        ``window`` bytes are buffered or in flight (the double-buffering
+        bound — :meth:`release` returns budget as the consumer advances).
+        Returns how many extents past ``start`` were accepted (a prefix),
+        so a caller can resume from the first unaccepted extent later by
+        advancing ``start`` — without re-slicing its extent list each
+        call.  Purely advisory: a failed or short prefetch read is
+        re-issued (and its error raised) by the foreground
+        ``pread``/``read_scatter`` that actually consumes the extent.
+        No-op outside mode 'r'.
+        """
+        if self.mode != "r" or window <= 0 or self.fd < 0:
+            return 0
+        accepted = 0
+        with self._pf_lock:
+            budget = window - sum(ln for ln, _ in self._pf.values())
+            if budget <= 0:
+                return 0
+            run_off = run_len = 0
+            for k in range(start, len(extents)):
+                off, n = extents[k]
+                if n <= 0:
+                    accepted += 1
+                    continue
+                if n > window:
+                    # Never buffer an extent bigger than the whole window;
+                    # count it accepted so the pipeline moves past it and
+                    # the foreground read handles it directly.
+                    if run_len:
+                        budget -= self._submit_prefetch(run_off, run_len)
+                        run_len = 0
+                    accepted += 1
+                    continue
+                if run_len and off == run_off + run_len:
+                    run_len += n
+                else:
+                    if run_len:
+                        budget -= self._submit_prefetch(run_off, run_len)
+                    run_off, run_len = off, n
+                accepted += 1
+                if run_len >= budget:  # window full (open run included)
+                    break
+            if run_len:
+                self._submit_prefetch(run_off, run_len)
+        return accepted
+
+    def _submit_prefetch(self, offset: int, length: int) -> int:
+        """Submit one coalesced run (caller holds the lock); returns the
+        number of bytes newly scheduled (0 if already covered).
+
+        A run whose head overlaps buffered/in-flight entries is trimmed
+        to the uncovered tail — overwriting the dict entry instead (runs
+        are keyed by offset) would orphan a still-running job and read
+        the shared bytes twice, exactly on the boundary chunks adjacent
+        items have in common."""
+        trimmed = True
+        while trimmed and length > 0:
+            trimmed = False
+            for po, (plen, _) in self._pf.items():
+                if po <= offset < po + plen:
+                    cut = min(po + plen - offset, length)
+                    offset += cut
+                    length -= cut
+                    trimmed = True
+                    break
+        if length <= 0:
+            return 0
+        if self._pf_pool is None:
+            from concurrent.futures import ThreadPoolExecutor
+            # Two workers: one extent landing while the next is in flight.
+            self._pf_pool = ThreadPoolExecutor(
+                max_workers=2, thread_name_prefix="scda-prefetch")
+        fd = self.fd
+
+        def _job() -> bytes:
+            chunks, got = [], 0
+            while got < length:
+                chunk = os.pread(fd, length - got, offset + got)
+                if not chunk:
+                    break  # short at EOF; consumer re-reads and raises
+                chunks.append(chunk)
+                got += len(chunk)
+            return b"".join(chunks)
+
+        self._pf[offset] = (length, self._pf_pool.submit(_job))
+        return length
+
+    def _take_prefetched(self, offset: int, n: int) -> Optional[memoryview]:
+        """A zero-copy view of [offset, offset+n) if a prefetched extent
+        fully covers it, else None (the caller falls back to a real read).
+        Waits for an in-flight job covering the range; a job that failed
+        (OSError) is dropped so the foreground read reports the error."""
+        with self._pf_lock:
+            found = None
+            for po, (plen, fut) in self._pf.items():
+                if po <= offset and offset + n <= po + plen:
+                    found = (po, plen, fut)
+                    break
+            if found is None:
+                return None
+        po, plen, fut = found
+        try:
+            data = fut.result()
+        except OSError:
+            with self._pf_lock:
+                self._pf.pop(po, None)
+            return None
+        if offset + n > po + len(data):  # short at EOF
+            return None
+        return memoryview(data)[offset - po:offset - po + n]
+
+    def release(self, upto: int) -> None:
+        """Drop prefetched extents that end at or before ``upto`` and hand
+        their pages back to the kernel (``DONTNEED``) — the restore engine
+        calls this as it consumes the file front to back, so a long restore
+        never grows the page cache beyond the prefetch window."""
+        dropped = []
+        with self._pf_lock:
+            for po in list(self._pf):
+                plen, fut = self._pf[po]
+                if po + plen <= upto and fut.done():
+                    del self._pf[po]
+                    dropped.append((po, plen))
+        for po, plen in dropped:
+            self.advise(po, plen, "dontneed")
+        if self._cache and self._cache_off + len(self._cache) <= upto:
+            self._cache = b""
+
+    def pending_prefetch(self) -> int:
+        """Number of prefetch extents buffered or in flight (test hook —
+        a clean shutdown must leave this at 0)."""
+        with self._pf_lock:
+            return len(self._pf)
+
+    def refit_readahead(self, offset: int) -> None:
+        """Seek-aware readahead: drop the window and re-fit it at ``offset``
+        when a jump lands outside it, so post-seek metadata reads (the
+        64-byte header check, count entries) are warm instead of each
+        paying a cold miss.  No-op when readahead is disabled or the
+        target is already inside the current window."""
+        ra = self._readahead
+        if not ra:
+            return
+        lo = self._cache_off
+        if lo <= offset < lo + len(self._cache):
+            return
+        self._cache_off, self._cache = offset, self._pread_upto(offset, ra)
 
     # -- access-pattern hints -------------------------------------------------
     _ADVICE = {}
@@ -283,6 +574,14 @@ class FileBackend:
     def close(self, sync: bool = False) -> None:
         if self.fd < 0:
             return
+        # Drain the prefetcher FIRST: background jobs read self.fd, so the
+        # descriptor must stay open until every job has finished or been
+        # cancelled.  shutdown(wait=True) guarantees no leaked futures.
+        if self._pf_pool is not None:
+            self._pf_pool.shutdown(wait=True, cancel_futures=True)
+            self._pf_pool = None
+        with self._pf_lock:
+            self._pf.clear()
         try:
             if sync:
                 os.fsync(self.fd)

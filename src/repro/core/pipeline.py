@@ -1,0 +1,190 @@
+"""Overlapped restore engine — the asynchronous read pipeline (read side
+of the PR-1 scatter-gather fast path).
+
+The serial restore walk is pread → inflate → copy, one chunk at a time:
+the disk idles while zlib runs and zlib idles while the disk seeks.  This
+module overlaps the three stages:
+
+* upcoming extents are handed to :meth:`FileBackend.prefetch`, a small
+  background executor that double-buffers them into a bounded cache
+  (``REPRO_SCDA_PREFETCH`` bytes; ``0`` disables and every caller falls
+  back to the exact serial order);
+* the foreground thread consumes extents via :meth:`FileBackend.
+  read_scatter` (coalesced ``preadv``, served from the prefetch cache
+  when warm) and immediately submits compressed chunks to the shared
+  ``scda-codec`` pool (:func:`repro.core.codec.submit_decompress_batch`),
+  so chunk k inflates while chunk k+1 is in flight from disk;
+* fully consumed extents are released back to the kernel
+  (:meth:`FileBackend.release` → ``posix_fadvise(DONTNEED)``) so a long
+  restore never grows the page cache beyond the prefetch window.
+
+Byte-identity is structural: the pipeline changes WHEN bytes are read and
+WHERE they inflate, never WHAT is returned — every result equals the
+forward-walk read, and any failure (truncated extent, corrupt chunk)
+raises the same :class:`ScdaError` the serial path would, with all
+in-flight futures drained first (no leaks, no hangs).
+
+Consumers: :meth:`repro.core.reader.ScdaReader.read_batch` (batched
+element reads) and the checkpoint restore scheduler in
+:mod:`repro.checkpoint.pytree_io`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Iterator, List, Optional, Sequence, Tuple
+
+from repro.core import codec
+from repro.core.errors import ScdaError, ScdaErrorCode
+from repro.core.io_backend import BytesLike, FileBackend
+
+#: (absolute file offset, byte length)
+Extent = Tuple[int, int]
+
+
+@dataclasses.dataclass
+class ReadItem:
+    """One schedulable unit of the pipeline (a leaf, a shard, a request).
+
+    ``extents`` must be offset-sorted within the item, and callers should
+    sort items by their first extent so consumption sweeps the file front
+    to back (prefetch and ``release`` both assume forward progress).
+
+    ``dst`` optionally supplies one writable buffer per extent — the raw
+    leaf fast path, where payload bytes land directly in the shard buffer
+    with zero copies.  Without it the engine allocates.  ``inflate`` runs
+    each extent through §3 decompression (on the codec pool when the
+    pipeline is live, inline when serial); ``expected_sizes`` then
+    enforces per-extent uncompressed sizes, CORRUPT_CHECKSUM on mismatch.
+    """
+    key: Any
+    extents: List[Extent]
+    inflate: bool = False
+    expected_sizes: Optional[Sequence[int]] = None
+    dst: Optional[Sequence[BytesLike]] = None
+
+    def start(self) -> int:
+        return self.extents[0][0] if self.extents else 0
+
+
+def run_pipeline(backend: FileBackend, items: Sequence[ReadItem],
+                 prefetch_bytes: int,
+                 depth: Optional[int] = None) -> Iterator[Tuple[Any, List]]:
+    """Execute ``items`` against ``backend``; yield ``(key, results)``.
+
+    ``results`` has one entry per extent: the filled ``dst`` buffer (or an
+    allocated ``bytearray``) for raw items, inflated ``bytes`` for
+    ``inflate`` items.  Results are yielded as they complete — raw items
+    complete immediately, inflate items complete when their pool futures
+    resolve, bounded by ``depth`` in-flight items (default: the codec pool
+    width, so the queue can keep every pool thread busy).
+
+    ``prefetch_bytes <= 0`` is the serial mode: no background reads, no
+    pool, extents consumed strictly in order — the oracle the pipelined
+    mode is tested against.
+    """
+    items = list(items)
+    serial = prefetch_bytes <= 0
+    width = max(1, codec.pool_width())
+    depth = depth if depth is not None else max(2, width)
+    flat: List[Extent] = [e for it in items for e in it.extents]
+    pf_i = 0
+    inflight: List[Tuple[Any, List, int]] = []  # (key, futures, est bytes)
+    inflight_bytes = 0
+    # In-flight jobs pin both their compressed buffers and their inflated
+    # results until drained, so the queue is bounded by BYTES as well as
+    # item count — the prefetch window only governs the read cache, and
+    # a checkpoint of huge leaves must not hold pool-width whole leaves
+    # in memory at once.  One item beyond the head always stays in
+    # flight so read/inflate overlap survives the cap.
+    byte_cap = max(4 * prefetch_bytes, 64 << 20)
+    released = 0
+
+    def _drain_head() -> Tuple[Any, List]:
+        nonlocal inflight_bytes
+        key, futs, est = inflight.pop(0)
+        inflight_bytes -= est
+        out: List[bytes] = []
+        for f in futs:  # each future resolves to a batch of payloads
+            out.extend(f.result())
+        return key, out
+
+    try:
+        for idx, it in enumerate(items):
+            if not serial:
+                pf_i += backend.prefetch(flat, window=prefetch_bytes,
+                                         start=pf_i)
+            if it.dst is not None:
+                bufs: List[BytesLike] = list(it.dst)
+                backend.read_scatter(
+                    zip((off for off, _ in it.extents), bufs))
+            else:
+                # no caller buffer to fill — serve prefetched extents as
+                # zero-copy views instead of allocating and memcpy-ing
+                bufs = backend.read_extents(it.extents)
+            if not it.inflate:
+                yield it.key, bufs
+            elif serial:
+                out = []
+                for j, b in enumerate(bufs):
+                    raw = codec.decompress(b)
+                    if it.expected_sizes is not None \
+                            and len(raw) != it.expected_sizes[j]:
+                        raise ScdaError(
+                            ScdaErrorCode.CORRUPT_CHECKSUM,
+                            f"element inflated to {len(raw)}, "
+                            f"U-entry says {it.expected_sizes[j]}")
+                    out.append(raw)
+                yield it.key, out
+            else:
+                # A few multi-chunk jobs instead of one future per chunk:
+                # enough slices to keep every pool thread busy, few enough
+                # that worker wakeups don't GIL-starve this thread.
+                step = max(1, -(-len(bufs) // (2 * width)))
+                futs = []
+                for j in range(0, len(bufs), step):
+                    sizes = (it.expected_sizes[j:j + step]
+                             if it.expected_sizes is not None else None)
+                    futs.append(codec.submit_decompress_batch(
+                        bufs[j:j + step], sizes))
+                est = (sum(n for _, n in it.extents)
+                       + sum(it.expected_sizes or ()))
+                inflight.append((it.key, futs, est))
+                inflight_bytes += est
+                while inflight and (len(inflight) > depth
+                                    or (inflight_bytes > byte_cap
+                                        and len(inflight) > 1)
+                                    or all(f.done()
+                                           for f in inflight[0][1])):
+                    yield _drain_head()
+            if not serial:
+                # Everything before the next item's first extent has been
+                # consumed (items are offset-sorted) — give it back in
+                # half-window batches: big enough to amortize fadvise
+                # (DONTNEED is not free, on network file systems in
+                # particular), small enough that prefetch budget frees
+                # mid-window and read-ahead of the next window overlaps
+                # consumption of this one.  Capped at 4 MiB so huge
+                # windows still release promptly.
+                nxt = (items[idx + 1].start() if idx + 1 < len(items)
+                       else max((o + n for o, n in it.extents), default=0))
+                if nxt - released >= min(max(1, prefetch_bytes // 2),
+                                         1 << 22) \
+                        or idx + 1 == len(items):
+                    backend.release(nxt)
+                    released = nxt
+        while inflight:
+            yield _drain_head()
+    finally:
+        # Error or early close: no future may outlive the generator (the
+        # backend fd is about to go away under the prefetcher and pool).
+        for _, futs, _est in inflight:
+            for f in futs:
+                f.cancel()
+        for _, futs, _est in inflight:
+            for f in futs:
+                if not f.cancelled():
+                    try:
+                        f.result()
+                    except Exception:  # noqa: BLE001 - shutdown path
+                        pass
+        inflight.clear()

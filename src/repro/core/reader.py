@@ -240,19 +240,32 @@ class ScdaReader:
                             f"section {i} outside [0, {len(entries)})")
         e = entries[i]
         if check:
-            raw_letter, raw_user = e.raw_header()
-            letter, user = spec.parse_section_header(
-                self._backend.pread(e.start, spec.SECTION_HEADER_BYTES))
-            if letter != raw_letter or user != raw_user:
-                raise ScdaError(
-                    ScdaErrorCode.CORRUPT_ENCODING,
-                    f"index entry {i} does not match the file at offset "
-                    f"{e.start}: expected {raw_letter!r} {raw_user!r}, "
-                    f"found {letter!r} {user!r} (stale index?)")
+            # Seek-aware readahead: a jump outside the current window
+            # drops and re-fits it at the target, so the header check
+            # below and the metadata reads that follow are warm.  Skipped
+            # for check=False, which promises an I/O-free seek.
+            self._backend.refit_readahead(e.start)
+            self.verify_index_entry(i, e)
         self._backend.advise(e.start, e.end - e.start, "willneed")
         self.cursor = e.start
         self._pending = e.to_pending()
         return self._pending.header
+
+    def verify_index_entry(self, i: int, entry=None) -> None:
+        """Re-read section ``i``'s on-disk 64-byte header and require it to
+        match the index entry — the per-use staleness check every
+        index-driven access path (seek, batch read, restore engine) runs
+        so a stale sidecar can never silently return wrong bytes."""
+        e = self.index().entries[i] if entry is None else entry
+        raw_letter, raw_user = e.raw_header()
+        letter, user = spec.parse_section_header(
+            self._backend.pread(e.start, spec.SECTION_HEADER_BYTES))
+        if letter != raw_letter or user != raw_user:
+            raise ScdaError(
+                ScdaErrorCode.CORRUPT_ENCODING,
+                f"index entry {i} does not match the file at offset "
+                f"{e.start}: expected {raw_letter!r} {raw_user!r}, "
+                f"found {letter!r} {user!r} (stale index?)")
 
     def open_section(self, user_string: bytes, occurrence: int = 0,
                      check: bool = True) -> SectionHeader:
@@ -425,6 +438,131 @@ class ScdaReader:
                                     f"U-entry says {expect}")
             out.append(raw)
         return out
+
+    def read_batch(self, requests: Sequence, prefetch_bytes: Optional[int]
+                   = None):
+        """Batched, pipelined element reads across sections (§1 selective
+        access at archive scale — the overlapped restore engine's API).
+
+        ``requests``: sequence of ``(section_index, windows)`` where
+        ``windows`` is a list of ``(elem_start, n_elems)`` element windows.
+        Supported section kinds: fixed arrays ('A', 'zA') and varrays
+        ('V', 'zV'); §3-encoded elements are transparently inflated (on
+        the codec thread pool when the pipeline is live).
+
+        Returns an iterator of ``(request_pos, results)`` yielded as each
+        request completes — requests are processed in FILE-OFFSET order,
+        not argument order, so disk consumption sweeps forward while
+        decompression overlaps on the pool.  ``results``: for 'A'/'zA' one
+        buffer per window (elements joined); for 'V'/'zV' one ``bytes``
+        per element, in window order.
+
+        ``prefetch_bytes=None`` uses ``REPRO_SCDA_PREFETCH`` (default
+        4 MiB); ``0`` disables the background pipeline and reads serially
+        in the given order — byte-identical either way.  Non-collective
+        and cursor-neutral: any rank may batch-read any sections without
+        disturbing a pending section or the forward walk; every section's
+        on-disk header is re-checked against the index, as in
+        :meth:`seek_section`.
+        """
+        from repro.core.io_backend import prefetch_window
+        from repro.core.pipeline import ReadItem, run_pipeline
+        self._check_open()
+        if prefetch_bytes is None:
+            prefetch_bytes = prefetch_window()
+        entries = self.index().entries
+        checked = set()
+        requests = [(sec, list(windows)) for sec, windows in requests]
+        # One count-entry parse per (section, letter), to the furthest
+        # element any request touches — windowed callers (scdatool diff
+        # walks a section in ~1 MiB slices) would otherwise re-parse a
+        # growing prefix per window, quadratic in section size.
+        max_upto: dict = {}
+        for sec, windows in requests:
+            upto = max((s + n for s, n in windows), default=0)
+            max_upto[sec] = max(max_upto.get(sec, 0), upto)
+        tables: dict = {}  # (section, letter) -> parsed count entries
+
+        def _table(sec, start, letter):
+            key = (sec, letter)
+            if key not in tables:
+                tables[key] = self._parse_entries(start, 0, max_upto[sec],
+                                                  letter)
+            return tables[key]
+
+        items: List = []
+        posts: dict = {}
+        for pos, (sec, windows) in enumerate(requests):
+            if not 0 <= sec < len(entries):
+                raise ScdaError(ScdaErrorCode.ARG_SEQUENCE,
+                                f"section {sec} outside [0, {len(entries)})")
+            e = entries[sec]
+            if sec not in checked:
+                self.verify_index_entry(sec, e)
+                checked.add(sec)
+            for s, n in windows:
+                if s < 0 or n < 0 or s + n > e.N:
+                    raise ScdaError(ScdaErrorCode.ARG_SEQUENCE,
+                                    f"window ({s}, {n}) outside section "
+                                    f"{sec}'s [0, {e.N})")
+            flat = [i for s, n in windows for i in range(s, s + n)]
+            if e.kind == "A":
+                extents = [(e.data_start + s * e.E, n * e.E)
+                           for s, n in windows]
+                items.append(ReadItem(pos, extents))
+                posts[pos] = ("windows", None)
+            elif e.kind == "zA":
+                csizes = _table(sec, e.v_entries_start, b"E")
+                offs = partition.offsets(csizes)
+                extents = [(e.v_data_start + offs[i], csizes[i])
+                           for i in flat]
+                items.append(ReadItem(pos, extents, inflate=True,
+                                      expected_sizes=[e.E] * len(flat)))
+                posts[pos] = ("join", [n for _, n in windows])
+            elif e.kind == "V":
+                sizes = _table(sec, e.entries_start, b"E")
+                offs = partition.offsets(sizes)
+                extents = [(e.data_start + offs[s],
+                            offs[s + n] - offs[s]) for s, n in windows]
+                items.append(ReadItem(pos, extents))
+                posts[pos] = ("split", [sizes[s:s + n] for s, n in windows])
+            elif e.kind == "zV":
+                csizes = _table(sec, e.v_entries_start, b"E")
+                usizes = _table(sec, e.entries_start, b"U")
+                offs = partition.offsets(csizes)
+                extents = [(e.v_data_start + offs[i], csizes[i])
+                           for i in flat]
+                items.append(ReadItem(pos, extents, inflate=True,
+                                      expected_sizes=[usizes[i]
+                                                      for i in flat]))
+                posts[pos] = ("elements", None)
+            else:
+                raise ScdaError(ScdaErrorCode.ARG_SEQUENCE,
+                                f"read_batch needs an array or varray "
+                                f"section; section {sec} is {e.kind!r}")
+        items.sort(key=lambda it: it.start())
+
+        def _assemble():
+            for key, res in run_pipeline(self._backend, items,
+                                         prefetch_bytes):
+                mode, meta = posts[key]
+                if mode == "join":
+                    out, it = [], iter(res)
+                    for n in meta:
+                        out.append(b"".join(
+                            next(it) for _ in range(n)))
+                elif mode == "split":
+                    out = []
+                    for buf, sizes in zip(res, meta):
+                        view, p = memoryview(buf), 0
+                        for s in sizes:
+                            out.append(bytes(view[p:p + s]))
+                            p += s
+                else:  # "windows" / "elements" — engine results verbatim
+                    out = [bytes(b) if not isinstance(b, bytes) else b
+                           for b in res]
+                yield key, out
+        return _assemble()
 
     def read_varray_sizes(self, counts: Sequence[int]) -> List[int]:
         """§A.5.5 — this rank's (E_i); for decoded sections these are the

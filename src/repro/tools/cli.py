@@ -7,6 +7,7 @@ Subcommands::
     scdatool fsck FILE...            # structural validation, non-zero on corruption
     scdatool index FILE...           # build/refresh (or --check) .scdax sidecars
     scdatool copy SRC DST            # rewrite; --recompress / --decompress
+    scdatool diff A B                # leaf-wise compare via the indexes
 
 ``SECTION`` is a section number (as printed by ``ls``) or a user string.
 Installed as a console script via ``pyproject.toml``; equivalently
@@ -172,6 +173,208 @@ def cmd_copy(args) -> int:
     return 0
 
 
+# -- diff --------------------------------------------------------------------
+
+_DIFF_CHUNK = 1 << 20  # bounded-memory payload comparison
+
+
+def _stream_diff(ba, bb, off_a: int, off_b: int, na: int,
+                 nb: int) -> Optional[int]:
+    """First differing byte offset of two on-disk ranges, or None."""
+    n = min(na, nb)
+    pos = 0
+    while pos < n:
+        take = min(_DIFF_CHUNK, n - pos)
+        ca = ba.pread(off_a + pos, take)
+        cb = bb.pread(off_b + pos, take)
+        if ca != cb:
+            for i, (x, y) in enumerate(zip(ca, cb)):
+                if x != y:
+                    return pos + i
+            return pos + min(len(ca), len(cb))
+        pos += take
+    return None if na == nb else n
+
+
+def _fast_section_diff(ra, rb, ea, eb):
+    """Same-kind fast path comparing count-entry values and payload data
+    bytes (never headers or padding, whose bytes are line-break-style
+    dependent).  Returns ``("equal", None)``, ``("differs", detail)``, or
+    ``("decode", None)`` when raw encoded bytes differ but content may
+    still match (zlib level / style) and a decoded pass must decide."""
+    ba, bb = ra._backend, rb._backend
+    kind = ea.kind
+    if kind in ("I", "B", "A"):
+        at = _stream_diff(ba, bb, ea.data_start, eb.data_start,
+                          ea.payload_bytes, eb.payload_bytes)
+        return ("equal", None) if at is None else \
+            ("differs", f"payload differs (first at byte {at})")
+    if kind == "V":
+        sa = ra._parse_entries(ea.entries_start, 0, ea.N, b"E")
+        sb = rb._parse_entries(eb.entries_start, 0, eb.N, b"E")
+        if sa != sb:
+            first = next(j for j, (x, y) in enumerate(zip(sa, sb))
+                         if x != y)
+            return ("differs",
+                    f"element sizes differ (first at element {first})")
+        at = _stream_diff(ba, bb, ea.data_start, eb.data_start,
+                          ea.payload_bytes, eb.payload_bytes)
+        return ("equal", None) if at is None else \
+            ("differs", f"payload differs (first at byte {at})")
+    if kind == "zV":
+        ua = ra._parse_entries(ea.entries_start, 0, ea.N, b"U")
+        ub = rb._parse_entries(eb.entries_start, 0, eb.N, b"U")
+        if ua != ub:
+            first = next(j for j, (x, y) in enumerate(zip(ua, ub))
+                         if x != y)
+            return ("differs",
+                    f"element sizes differ (first at element {first})")
+    # encoded kinds: identical compressed geometry + bytes prove equality;
+    # anything else needs the decoded pass.
+    if kind == "zB" and ea.raw_E != eb.raw_E:
+        return ("decode", None)
+    if kind in ("zA", "zV"):
+        ca = ra._parse_entries(ea.v_entries_start, 0, ea.N, b"E")
+        cb = rb._parse_entries(eb.v_entries_start, 0, eb.N, b"E")
+        if ca != cb:
+            return ("decode", None)
+    start_a = ea.v_data_start if kind in ("zA", "zV") else ea.data_start
+    start_b = eb.v_data_start if kind in ("zA", "zV") else eb.data_start
+    at = _stream_diff(ba, bb, start_a, start_b,
+                      ea.payload_bytes, eb.payload_bytes)
+    return ("equal", None) if at is None else ("decode", None)
+
+
+def _logical_payload_diff(ra, rb, i) -> Optional[str]:
+    """Decoded (logical) payload comparison of section ``i`` of both
+    archives — element batches through the pipelined ``read_batch``,
+    bounded memory, never a full restore.  Encoded sections compare by
+    content, so a recompressed copy is still equal.  Returns a
+    human-readable difference, or None if equal."""
+    ea = ra.index().entries[i]
+    if ea.type == "I":
+        ra.seek_section(i)
+        rb.seek_section(i)
+        if ra.read_inline_data() != rb.read_inline_data():
+            return "inline data differs"
+        return None
+    if ea.type == "B":
+        ra.seek_section(i)
+        rb.seek_section(i)
+        if ra.read_block_data() != rb.read_block_data():
+            return "block payload differs"
+        return None
+    # A/V (raw or encoded): element windows via the batched reader — ONE
+    # read_batch per archive (tables parsed once, windows streamed by the
+    # pipeline in offset order with bounded in-flight memory), not one
+    # call per window, which would re-parse the count-entry tables per
+    # step (quadratic in N).
+    if ea.type == "A":
+        step = max(1, _DIFF_CHUNK // max(1, ea.E))
+        windows = [(start, min(step, ea.N - start))
+                   for start in range(0, ea.N, step)]
+    else:
+        # Varray elements are variable-size, so windows are bounded by
+        # bytes, not element count — a fixed count per window would make
+        # diff's memory proportional to the largest elements.
+        sizes = ra._parse_entries(ea.entries_start, 0, ea.N,
+                                  b"U" if ea.kind == "zV" else b"E")
+        windows = []
+        start = acc = 0
+        for j, s in enumerate(sizes):
+            acc += s
+            if acc >= _DIFF_CHUNK:
+                windows.append((start, j + 1 - start))
+                start, acc = j + 1, 0
+        if start < ea.N:
+            windows.append((start, ea.N - start))
+    reqs = [(i, [w]) for w in windows]
+    for (pos, res_a), (_, res_b) in zip(ra.read_batch(reqs),
+                                        rb.read_batch(reqs)):
+        start, n = windows[pos]
+        if ea.type == "A":
+            wa, wb = res_a[0], res_b[0]
+            if wa != wb:
+                E = max(1, ea.E)
+                first = next(j for j in range(n)
+                             if wa[j * E:(j + 1) * E]
+                             != wb[j * E:(j + 1) * E])
+                return f"payload differs (first at element {start + first})"
+        else:
+            for j, (x, y) in enumerate(zip(res_a, res_b)):
+                if x != y:
+                    return (f"payload differs (first at element "
+                            f"{start + j})")
+    return None
+
+
+def cmd_diff(args) -> int:
+    """Leaf-wise archive comparison via the seekable indexes.
+
+    Section tables, user strings, and per-leaf payload bytes are compared
+    without a full restore: raw extents first (cheap), decoded payloads
+    only when the encodings differ (so a recompressed copy still compares
+    equal leaf-wise).  Exit 1 on the first difference; ``--all`` keeps
+    going and lists every one.
+    """
+    diffs = 0
+
+    def report(msg: str) -> None:
+        nonlocal diffs
+        diffs += 1
+        print(msg)
+
+    with fopen_read(None, args.a) as ra, fopen_read(None, args.b) as rb:
+        ia, ib = ra.index(), rb.index()
+        if ra.user_string != rb.user_string:
+            report(f"file user string differs: "
+                   f"{_printable(ra.user_string)!r} vs "
+                   f"{_printable(rb.user_string)!r}")
+            if not args.all:
+                return 1
+        if len(ia) != len(ib):
+            report(f"section count differs: {len(ia)} vs {len(ib)}")
+            if not args.all:
+                return 1
+        for i in range(min(len(ia), len(ib))):
+            ea, eb = ia.entries[i], ib.entries[i]
+            name = _printable(ea.user_string)
+            if (ea.type, ea.user_string, ea.N, ea.E) != \
+                    (eb.type, eb.user_string, eb.N, eb.E):
+                report(f"section {i} ({name!r}): headers differ: "
+                       f"{ea.type} {_printable(ea.user_string)!r} "
+                       f"N={ea.N} E={ea.E} vs "
+                       f"{eb.type} {_printable(eb.user_string)!r} "
+                       f"N={eb.N} E={eb.E}")
+                if not args.all:
+                    return 1
+                continue
+            if ea.kind == eb.kind:
+                # Same physical encoding: compare count-entry values and
+                # raw payload bytes without decoding anything.
+                verdict, detail = _fast_section_diff(ra, rb, ea, eb)
+                if verdict == "equal":
+                    continue
+                if verdict == "differs":
+                    report(f"section {i} ({name!r}): {detail}")
+                    if not args.all:
+                        return 1
+                    continue
+                # "decode": raw encoded bytes differ but content may not
+                # (zlib level, line-break style) — decide logically.
+            msg = _logical_payload_diff(ra, rb, i)
+            if msg is not None:
+                report(f"section {i} ({name!r}): {msg}")
+                if not args.all:
+                    return 1
+    if diffs:
+        print(f"{args.a} and {args.b} differ ({diffs} difference"
+              f"{'s' if diffs != 1 else ''} listed)")
+        return 1
+    print(f"{args.a} and {args.b} match leaf-wise")
+    return 0
+
+
 # -- entry point -------------------------------------------------------------
 
 def build_parser() -> argparse.ArgumentParser:
@@ -222,6 +425,15 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--index", action="store_true",
                    help="also write the destination's .scdax sidecar")
     p.set_defaults(fn=cmd_copy)
+
+    p = sub.add_parser("diff",
+                       help="compare two archives leaf-wise via the index")
+    p.add_argument("a")
+    p.add_argument("b")
+    p.add_argument("--all", action="store_true",
+                   help="list every difference instead of stopping at the "
+                        "first")
+    p.set_defaults(fn=cmd_diff)
     return ap
 
 

@@ -7,7 +7,9 @@ calling test BEFORE jax import).  Exercises:
      — all three must be byte-identical (partition-independence for
      sharded jax.Arrays).
   3. restore F1 under (2, 4), (8, 1), (1, 1) and fully-replicated —
-     values must match exactly (elastic restart).
+     values must match exactly (elastic restart), with the overlapped
+     restore engine (prefetch on, the default) and the serial oracle
+     (prefetch_bytes=0) agreeing on every re-partitioned restore.
 """
 import os
 import sys
@@ -104,14 +106,18 @@ def main(tmpdir: str) -> int:
     ]
     for mesh, specs in cases:
         like = abstract_like(s42, mesh, specs)
-        out, step = restore(p1, like)
-        if step != 11 or not tree_equal(out, s42):
-            print(f"FAIL: restore mismatch on mesh {mesh.shape}")
-            return 1
-        # verify the restored arrays actually carry the requested sharding
-        if out["params"]["w"].sharding.spec != specs["w"]:
-            print("FAIL: sharding not honored")
-            return 1
+        # pipelined (default prefetch) AND serial oracle: both must
+        # reproduce the logical state exactly under every re-partition.
+        for pf in (None, 0):
+            out, step = restore(p1, like, prefetch_bytes=pf)
+            if step != 11 or not tree_equal(out, s42):
+                print(f"FAIL: restore mismatch on mesh {mesh.shape} "
+                      f"(prefetch_bytes={pf})")
+                return 1
+            # restored arrays must carry the requested sharding
+            if out["params"]["w"].sharding.spec != specs["w"]:
+                print("FAIL: sharding not honored")
+                return 1
 
     print("OK elastic")
     return 0

@@ -209,3 +209,107 @@ class TestCopy:
         for section, want in (("blk", BLK), ("zvar", b"".join(ELEMS))):
             assert main(["cat", rw, section]) == 0
             assert capfdbinary.readouterr().out == want
+
+
+class TestDiff:
+    def test_identical_archives_match(self, archive, tmp_path, capsys):
+        other = str(tmp_path / "b.scda")
+        write_archive(other)
+        assert main(["diff", archive, other]) == 0
+        assert "match leaf-wise" in capsys.readouterr().out
+
+    def test_recompressed_copy_is_leafwise_equal(self, archive, tmp_path,
+                                                 capsys):
+        """Different on-disk encoding, identical logical content: the
+        decoded fallback must report equality."""
+        # a copy written with the MIME line-break style differs byte-wise
+        # in every §3-encoded section but is logically identical
+        from repro.core import fopen_read, fopen_write, spec
+        dst = str(tmp_path / "mime.scda")
+        with fopen_read(None, archive) as r:
+            idx = r.index()
+            with fopen_write(None, dst, user_string=r.user_string,
+                             style=spec.MIME) as w:
+                for i, e in enumerate(idx):
+                    hdr = r.seek_section(i)
+                    if hdr.type == "I":
+                        w.write_inline(hdr.user_string, r.read_inline_data())
+                    elif hdr.type == "B":
+                        w.write_block(hdr.user_string, r.read_block_data(),
+                                      encode=e.decoded)
+                    elif hdr.type == "A":
+                        w.write_array(hdr.user_string,
+                                      r.read_array_data([hdr.N]),
+                                      [hdr.N], hdr.E, indirect=True,
+                                      encode=e.decoded)
+                    else:
+                        sizes = r.read_varray_sizes([hdr.N])
+                        w.write_varray(hdr.user_string,
+                                       r.read_varray_data([hdr.N], sizes),
+                                       [hdr.N], sizes, encode=e.decoded)
+        with open(archive, "rb") as a, open(dst, "rb") as b:
+            assert a.read() != b.read()  # raw bytes really do differ
+        assert main(["diff", archive, dst]) == 0
+        assert "match leaf-wise" in capsys.readouterr().out
+
+    def test_payload_difference_exits_nonzero(self, archive, tmp_path,
+                                              capsys):
+        other = str(tmp_path / "b.scda")
+        with fopen_write(None, other, user_string=b"cli test") as f:
+            f.write_inline(b"inl", b"#" * 32)
+            f.write_block(b"blk", BLK)
+            mutated = bytearray(ARR)
+            mutated[17] ^= 0xFF
+            f.write_array(b"arr", bytes(mutated), [32], 8)
+            f.write_varray(b"var", ELEMS, [len(ELEMS)], V_SIZES)
+            f.write_block(b"zblk", BLK, encode=True)
+            f.write_array(b"zarr", ARR, [64], 4, encode=True)
+            f.write_varray(b"zvar", ELEMS, [len(ELEMS)], V_SIZES,
+                           encode=True)
+        assert main(["diff", archive, other]) == 1
+        out = capsys.readouterr().out
+        assert "section 2 ('arr')" in out and "payload differs" in out
+
+    def test_header_and_count_differences(self, archive, tmp_path, capsys):
+        shorter = str(tmp_path / "short.scda")
+        with fopen_write(None, shorter, user_string=b"cli test") as f:
+            f.write_inline(b"inl", b"#" * 32)
+            f.write_block(b"other name", BLK)
+        assert main(["diff", archive, shorter]) == 1
+        assert "section count differs" in capsys.readouterr().out
+        assert main(["diff", shorter, archive]) == 1
+
+    def test_all_lists_every_difference(self, archive, tmp_path, capsys):
+        other = str(tmp_path / "b.scda")
+        with fopen_write(None, other, user_string=b"cli test") as f:
+            f.write_inline(b"inl", b"@" * 32)           # diff 1
+            f.write_block(b"blk", BLK[:-1] + b"X")      # diff 2
+            f.write_array(b"arr", ARR, [32], 8)
+            f.write_varray(b"var", ELEMS, [len(ELEMS)], V_SIZES)
+            f.write_block(b"zblk", BLK, encode=True)
+            f.write_array(b"zarr", ARR, [64], 4, encode=True)
+            f.write_varray(b"zvar", ELEMS, [len(ELEMS)], V_SIZES,
+                           encode=True)
+        assert main(["diff", archive, other, "--all"]) == 1
+        out = capsys.readouterr().out
+        assert "section 0" in out and "section 1" in out
+        assert "2 differences listed" in out
+
+    def test_encoded_content_difference_found(self, archive, tmp_path,
+                                              capsys):
+        """A difference hidden inside compressed payloads is detected."""
+        other = str(tmp_path / "b.scda")
+        mutated = list(ELEMS)
+        mutated[2] = bytes(b ^ 1 for b in mutated[2])
+        with fopen_write(None, other, user_string=b"cli test") as f:
+            f.write_inline(b"inl", b"#" * 32)
+            f.write_block(b"blk", BLK)
+            f.write_array(b"arr", ARR, [32], 8)
+            f.write_varray(b"var", ELEMS, [len(ELEMS)], V_SIZES)
+            f.write_block(b"zblk", BLK, encode=True)
+            f.write_array(b"zarr", ARR, [64], 4, encode=True)
+            f.write_varray(b"zvar", mutated, [len(ELEMS)], V_SIZES,
+                           encode=True)
+        assert main(["diff", archive, other]) == 1
+        out = capsys.readouterr().out
+        assert "section 6 ('zvar')" in out and "element 2" in out

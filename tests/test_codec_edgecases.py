@@ -12,8 +12,10 @@ import zlib
 
 import pytest
 
-from repro.core import (SerialComm, ThreadComm, codec, encode, fopen_read,
-                        fopen_write, partition, run_ranks, spec)
+from repro.core import (ScdaError, SerialComm, ThreadComm, codec, encode,
+                        fopen_read, fopen_write, partition, run_ranks,
+                        spec)
+from repro.core.errors import ScdaErrorCode
 
 
 class TestZlibLevels:
@@ -200,3 +202,96 @@ class TestCompressElementsParity:
                  for i in range(0, len(data), 4096)]
         assert codec.compress_elements(views) == \
             [codec.compress(bytes(v)) for v in views]
+
+
+class TestFastStage1Parity:
+    """The single-pass stage-2 fast decode (geometry-verified lenient
+    base64) must match the strict reference decoder byte-for-byte on
+    every valid stream, and decline anything unusual."""
+
+    def test_fast_equals_strict_across_sizes_and_styles(self):
+        rng = __import__("random").Random(3)
+        sizes = [0, 1, 2, 3, 55, 56, 57, 76, 1023, 1024, 4096, 65537]
+        for style in (spec.UNIX, spec.MIME):
+            for n in sizes:
+                for data in (bytes(rng.randrange(256) for _ in range(n)),
+                             bytes(n)):
+                    z = codec.compress(data, style)
+                    assert codec.decompress(z) == data
+                    strict = base64.b64decode(codec._unbreak_lines(z),
+                                              validate=True)
+                    fast = codec._fast_stage1(z)
+                    if fast is not None:
+                        assert bytes(fast) == strict, (style, n)
+
+    def test_fast_declines_exotic_break_bytes(self):
+        z = bytearray(codec.compress(os.urandom(4096)))
+        # §3.1 allows arbitrary break bytes; the fast path must hand
+        # such streams to the reference decoder, not mis-decode them.
+        z[76] = ord("#")
+        assert codec._fast_stage1(bytes(z)) is None
+        with pytest.raises(ScdaError):
+            # strict path still validates the code bytes...
+            codec.decompress(bytes(z[:76] + z[78:]))
+        # ...but the stream with only its break bytes rewritten decodes
+        # to the same payload through the reference path
+        z2 = bytearray(codec.compress(b"x" * 4096))
+        for i in range(76, len(z2), 78):
+            z2[i] = ord("!")
+        assert codec.decompress(bytes(z2)) == b"x" * 4096
+
+    def test_invalid_code_byte_error_parity(self):
+        # Lenient a2b_base64 *skips* bytes outside the alphabet, so a
+        # corrupted code byte sails through the fast parse and only
+        # fails at inflate — the canonical-fallback retry must surface
+        # the reference path's CORRUPT_ENCODING, not CORRUPT_CHECKSUM,
+        # through every batch entry point.
+        z = bytearray(codec.compress(os.urandom(1 << 20)))
+        for pos in (0, 40, 100, len(z) - 5):
+            if z[pos] in codec._LINE_BREAK[spec.UNIX]:
+                continue
+            bad = bytes(z[:pos]) + b"\xff" + bytes(z[pos + 1:])
+            batch = [bad] * codec._POOL_MIN_ELEMENTS  # force the pool path
+            with pytest.raises(ScdaError) as serial:
+                codec.decompress(bad)
+            with pytest.raises(ScdaError) as pooled:
+                codec.decompress_elements(batch)
+            with pytest.raises(ScdaError) as submitted:
+                codec.submit_decompress_batch(batch).result()
+            assert serial.value.code == pooled.value.code \
+                == submitted.value.code == ScdaErrorCode.CORRUPT_ENCODING
+
+    def test_fast_accepts_trailing_padding(self):
+        # Streams whose stage-1 length is not a multiple of 3 end with
+        # 1–2 '=' padding bytes; the strict-acceptance gate must not
+        # reject those legal streams.  Generate until both padding
+        # widths have been seen.
+        rng = __import__("random").Random(7)
+        seen = set()
+        for _ in range(500):
+            if seen == {1, 2}:
+                break
+            data = bytes(rng.randrange(256)
+                         for _ in range(rng.randrange(60, 400)))
+            z = codec.compress(data)
+            enc = codec._unbreak_lines(z)
+            pad = len(enc) - len(enc.rstrip(b"="))
+            if pad == 0 or len(z) < 78 + 3:
+                continue
+            seen.add(pad)
+            fast = codec._fast_stage1(z)
+            assert fast is not None
+            assert bytes(fast) == base64.b64decode(enc, validate=True)
+            assert codec.decompress_elements([z]) == [data]
+        assert seen == {1, 2}, seen
+
+    def test_batch_decompress_parity_and_sizes(self):
+        elements = [os.urandom(s) for s in (0, 1, 4096, 300000, 7)]
+        streams = [codec.compress(e) for e in elements]
+        assert codec.decompress_elements(streams) == elements
+        assert codec.decompress_elements(
+            streams, [len(e) for e in elements]) == elements
+        with pytest.raises(ScdaError) as ei:
+            codec.decompress_elements(streams, [len(e) + 1
+                                                for e in elements])
+        assert ei.value.code == ScdaErrorCode.CORRUPT_CHECKSUM
