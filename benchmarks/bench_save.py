@@ -1,0 +1,95 @@
+"""Serial vs overlapped save bandwidth — the PR-4 write-pipeline claim.
+
+Saves a multi-leaf checkpoint twice per variant:
+
+* **serial** — the fully serial stage order: ``write_window=0`` (the
+  legacy write path, no writeback queue) with the codec pool dispatch
+  pinned to one thread (``codec.set_pool_width(1)``), so snapshot,
+  deflate, and ``pwritev`` run strictly one stage at a time.  This is
+  the same single-threaded baseline discipline as ``bench_restore``'s
+  serial leg (whose inflate is single-threaded by construction).
+* **pipelined** — the default overlapped engine: snapshots one leaf
+  ahead, deflate batches on the codec pool (``REPRO_CODEC_THREADS``),
+  background ``pwritev`` bounded by ``REPRO_SCDA_WRITE_PIPELINE``.
+
+Raw leaves measure snapshot/writeback overlap; compressed leaves measure
+deflate pooling + write overlap.  Leaf payloads are random float32 —
+checkpoint-like weights (mantissa-dominated, deflate-speed realistic);
+the arange ramps of the restore bench deflate an order of magnitude
+slower and would hide the write stage entirely.
+
+Methodology mirrors bench_restore: ``os.sync()`` quiesces writeback
+between timed regions and each region is best-of-N.  Byte-identity of
+the two modes is pinned by tests/test_save_pipeline.py; this file only
+quantifies the overlap win.
+"""
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.checkpoint import pytree_io
+from repro.core import codec
+
+
+def _best_of(fn, reps=2):
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+        os.sync()
+    return best
+
+
+def _make_tree(total_mb, nleaves):
+    """Checkpoint-like leaves: random float32 weights (realistic deflate
+    speed/ratio), identical across serial/pipelined runs."""
+    rng = np.random.default_rng(42)
+    per_elems = total_mb * (1 << 20) // nleaves // 4
+    return {f"leaf{i:02d}": rng.standard_normal(per_elems)
+            .astype(np.float32) for i in range(nleaves)}
+
+
+def run(quick=False):
+    rows = []
+    total_mb = 16 if quick else 64
+    nleaves = 8
+    reps = 2 if quick else 3
+    # 256 KiB deflate chunks, as in bench_restore: finer pipeline
+    # granularity than the 1 MiB default.
+    chunk_bytes = 256 << 10
+    tree = _make_tree(total_mb, nleaves)
+    # Warm the codec/writeback pools once so the pipelined leg measures
+    # steady state, not thread spawn (the serial leg has no threads).
+    with tempfile.TemporaryDirectory() as d:
+        pytree_io.save(os.path.join(d, "warm.scda"),
+                       {"w": np.zeros(1 << 20, np.uint8)},
+                       compressed=True, chunk_bytes=chunk_bytes)
+    for tag, compressed in (("raw", False), ("zlib", True)):
+        with tempfile.TemporaryDirectory() as d:
+            times = {}
+            for mode, ww in (("serial", 0), ("pipelined", None)):
+                path = os.path.join(d, f"{tag}_{mode}.scda")
+
+                def do(path=path, ww=ww):
+                    pytree_io.save(path, tree, compressed=compressed,
+                                   chunk_bytes=chunk_bytes,
+                                   write_window=ww)
+
+                if mode == "serial":
+                    prev = codec.set_pool_width(1)
+                    try:
+                        times[mode] = _best_of(do, reps)
+                    finally:
+                        codec.set_pool_width(prev)
+                else:
+                    times[mode] = _best_of(do, reps)
+                derived = f"{total_mb / times[mode]:.0f}MB/s"
+                if mode == "pipelined":
+                    derived += (f" speedup="
+                                f"{times['serial'] / times[mode]:.1f}x")
+                rows.append((f"save.{mode}_{tag}",
+                             times[mode] * 1e6, derived))
+    return rows

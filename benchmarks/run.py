@@ -38,6 +38,7 @@ def _distill(rows, quick: bool) -> dict:
         "iovec": {},
         "index": {},
         "restore_MBps": {},
+        "save_MBps": {},
     }
     for name, us, derived in rows:
         m = re.match(r"parallel_io\.(write|read|write_sync)_p(\d+)", name)
@@ -61,13 +62,13 @@ def _distill(rows, quick: bool) -> dict:
             m2 = re.search(r"speedup=(\d+(?:\.\d+)?)x", derived)
             if m2:
                 out["iovec"]["speedup_x"] = float(m2.group(1))
-        elif name.startswith("restore."):
-            out["restore_MBps"][name.split(".", 1)[1]] = _mbps(derived)
+        elif name.startswith(("restore.", "save.")):
+            group, key = name.split(".", 1)
+            out[f"{group}_MBps"][key] = _mbps(derived)
             m2 = re.search(r"speedup=(\d+(?:\.\d+)?)x", derived)
             if m2:
-                out["restore_MBps"][
-                    name.split(".", 1)[1].split("_")[-1]
-                    + "_speedup_x"] = float(m2.group(1))
+                out[f"{group}_MBps"][key.split("_")[-1]
+                                     + "_speedup_x"] = float(m2.group(1))
         elif name.startswith("index."):
             # strip the section-count suffix so quick/full keys align
             key = re.sub(r"_\d+$", "", name.split(".", 1)[1])
@@ -90,7 +91,7 @@ def main() -> None:
 
     from benchmarks import (bench_checkpoint, bench_compression,
                             bench_format, bench_index, bench_iovec,
-                            bench_parallel_io, bench_restore,
+                            bench_parallel_io, bench_restore, bench_save,
                             bench_roofline)
     suites = [
         ("format", bench_format.run),
@@ -100,6 +101,7 @@ def main() -> None:
         ("compression", bench_compression.run),
         ("checkpoint", bench_checkpoint.run),
         ("restore", bench_restore.run),
+        ("save", bench_save.run),
         ("roofline", bench_roofline.run),
     ]
     only = [s for s in args.only.split(",") if s]

@@ -118,9 +118,22 @@ class CheckpointManager:
                           aux_extra: Optional[Dict[str, Any]]) -> None:
         final = self.path_for(step)
         tmp = final + ".tmp"
-        pytree_io.save(tmp, host_tree, comm=self.comm, step=step,
-                       compressed=self.compressed,
-                       chunk_bytes=self.chunk_bytes, aux_extra=aux_extra)
+        try:
+            pytree_io.save(tmp, host_tree, comm=self.comm, step=step,
+                           compressed=self.compressed,
+                           chunk_bytes=self.chunk_bytes,
+                           aux_extra=aux_extra)
+        except BaseException:
+            # A failed save must not leave its half-written tmp around
+            # until the next retention sweep: remove it now (best-effort
+            # — the atomic-rename invariant already keeps it invisible)
+            # and surface the original error unchanged.
+            if self.comm.rank == 0:
+                try:
+                    os.remove(tmp)
+                except OSError:
+                    pass
+            raise
         if self._crash_before_commit:
             raise RuntimeError("injected crash before commit")
         self.comm.barrier()

@@ -7,14 +7,20 @@ JAX pytrees.  ``restore`` rebuilds the state under *any* target sharding /
 mesh ("the file can be read on any number of processes that agree on any
 partition"), which is what makes restarts elastic.
 
-The restore path is an overlapped pipeline (:mod:`repro.core.pipeline`):
-the scheduler walks the :class:`ScdaIndex` once, sorts every wanted leaf's
-runs by file offset, prefetches the next ``REPRO_SCDA_PREFETCH`` bytes of
-extents on a background executor, and inflates compressed chunks on the
-codec thread pool while the next leaf's preads are in flight.  Results are
-byte-identical to the serial walk; ``REPRO_SCDA_PREFETCH=0`` (or
-``prefetch_bytes=0``) disables the engine and takes today's serial path
-exactly — it is the oracle the pipeline is tested against.
+Both hot paths are overlapped pipelines (:mod:`repro.core.pipeline`).
+Restore: the scheduler walks the :class:`ScdaIndex` once, sorts every
+wanted leaf's runs by file offset, prefetches the next
+``REPRO_SCDA_PREFETCH`` bytes of extents on a background executor, and
+inflates compressed chunks on the codec thread pool while the next leaf's
+preads are in flight.  Save: the scheduler plans every leaf's extents
+from the manifest, snapshots device arrays one leaf ahead, deflates
+chunks on the same pool, and drains coalesced ``pwritev`` fragments
+through a background queue bounded to ``REPRO_SCDA_WRITE_PIPELINE``
+in-flight bytes.  Results are byte-identical to the serial walks;
+``REPRO_SCDA_PREFETCH=0`` / ``REPRO_SCDA_WRITE_PIPELINE=0`` (or the
+``prefetch_bytes`` / ``write_window`` arguments) disable each engine and
+take the exact legacy serial order — the oracles the pipelines are
+tested against.
 
 File layout:
     F  header (vendor "repro scda-jax 0.1")
@@ -36,8 +42,9 @@ from repro.checkpoint import layout, manifest as mf
 from repro.core import ScdaError, ScdaErrorCode, partition
 from repro.core.comm import Communicator, SerialComm
 from repro.core.index import ScdaIndex
-from repro.core.io_backend import prefetch_window
-from repro.core.pipeline import ReadItem, run_pipeline
+from repro.core.io_backend import prefetch_window, write_pipeline_window
+from repro.core.pipeline import (ReadItem, WriteItem, run_pipeline,
+                                 run_write_pipeline)
 from repro.core.reader import ScdaReader, fopen_read
 from repro.core.writer import ScdaWriter, fopen_write
 
@@ -50,6 +57,14 @@ def _effective_prefetch(prefetch_bytes: Optional[int]) -> int:
     if prefetch_bytes is None:
         return prefetch_window()
     return max(0, int(prefetch_bytes))
+
+
+def _effective_write_window(write_window: Optional[int]) -> int:
+    """Resolve the save-pipeline window: explicit argument wins, else the
+    ``REPRO_SCDA_WRITE_PIPELINE`` environment knob (0 = serial save)."""
+    if write_window is None:
+        return write_pipeline_window()
+    return max(0, int(write_window))
 
 
 # --------------------------------------------------------------------------
@@ -130,9 +145,24 @@ def _owned_windows(arr, nbytes: int) -> List[Tuple[int, memoryview]]:
 def save(path: str, tree, *, comm: Optional[Communicator] = None,
          step: Optional[int] = None, compressed: bool = False,
          chunk_bytes: int = DEFAULT_CHUNK_BYTES,
-         aux_extra: Optional[Dict[str, Any]] = None) -> None:
-    """Write ``tree`` to ``path`` as a serial-equivalent scda checkpoint."""
+         aux_extra: Optional[Dict[str, Any]] = None,
+         write_window: Optional[int] = None) -> None:
+    """Write ``tree`` to ``path`` as a serial-equivalent scda checkpoint.
+
+    Leaf sections go through the overlapped save engine
+    (:func:`repro.core.pipeline.run_write_pipeline`): device→host
+    snapshots run one leaf ahead, compressed chunks deflate on the codec
+    pool, and finished fragments drain through a background ``pwritev``
+    queue bounded to ``write_window`` in-flight bytes (default
+    ``REPRO_SCDA_WRITE_PIPELINE``, 32 MiB).  ``write_window=0`` saves
+    serially, in exactly the pre-pipeline write order — the byte oracle
+    the pipeline is fuzzed against.  Either way the file bytes depend
+    only on the logical tree: serial equivalence is preserved by
+    construction, since both paths plan sections with the same writer
+    primitives.
+    """
     comm = comm or SerialComm()
+    ww = _effective_write_window(write_window)
     named, _ = flatten_named(tree)
     leaves: List[mf.LeafSpec] = []
     arrays: List[Any] = []
@@ -159,6 +189,10 @@ def save(path: str, tree, *, comm: Optional[Communicator] = None,
         f.write_block(mf.MANIFEST_USER_STRING,
                       mf.build(step, leaves, aux) if comm.rank == 0 else None,
                       E=None, root=0)
+        if ww > 0 and leaves:
+            _save_leaves_pipelined(f, leaves, arrays, compressed,
+                                   chunk_bytes, ww)
+            return
         for i, (spec_, arr) in enumerate(zip(leaves, arrays)):
             user = mf.leaf_user_string(i)
             if compressed:
@@ -177,6 +211,73 @@ def _save_leaf_compressed(f: ScdaWriter, user: bytes, arr,
         elements.append(bytes(flat[pos:pos + s]))
         pos += s
     f.write_varray(user, elements, [len(sizes)], sizes, encode=True)
+
+
+# --------------------------------------------------------------------------
+# The overlapped save engine's checkpoint scheduler
+# --------------------------------------------------------------------------
+
+def _save_leaves_pipelined(f: ScdaWriter, leaves: List[mf.LeafSpec],
+                           arrays: List[Any], compressed: bool,
+                           chunk_bytes: int, window: int) -> None:
+    """Emit every leaf section through the overlapped save engine.
+
+    The walk plans one :class:`WriteItem` per leaf up front.  Raw leaf
+    extents are fully determined by the manifest (N = nbytes, E = 1);
+    the §3.4 compressed pair needs each leaf's total compressed size, so
+    ``plan`` callbacks thread a shared cursor in leaf order — exactly
+    the serial writer's cursor discipline, while deflate and writeback
+    float free.  Snapshots (``np.asarray`` per shard — the device→host
+    copy for jax arrays, a no-op for the manager's pre-snapshotted host
+    trees) run one leaf ahead on the codec pool.
+
+    Byte-identity with the serial path is structural: raw leaves plan
+    through :meth:`ScdaWriter.plan_array_windows` (the same method the
+    serial ``write_array_windows`` wraps) and compressed leaves through
+    :meth:`ScdaWriter.plan_encoded_varray` (built on the
+    :mod:`repro.core.encode` byte oracles), with deterministic zlib at
+    the same level.
+    """
+    cursor = [f.cursor]
+    items: List[WriteItem] = []
+    for i, (spec_, arr) in enumerate(zip(leaves, arrays)):
+        user = mf.leaf_user_string(i)
+        if compressed:
+            usizes = layout.chunk_sizes(spec_["nbytes"], chunk_bytes)
+
+            def snapshot(arr=arr, usizes=usizes):
+                flat = _byte_view(np.asarray(arr))
+                chunks, pos = [], 0
+                for s in usizes:
+                    chunks.append(flat[pos:pos + s])
+                    pos += s
+                return chunks
+
+            def plan(streams, user=user, usizes=usizes):
+                frags, cursor[0] = f.plan_encoded_varray(
+                    user, usizes, streams, cursor[0])
+                return frags
+
+            items.append(WriteItem(key=i, snapshot=snapshot, plan=plan,
+                                   deflate=True, style=f.style))
+        else:
+            def snapshot(arr=arr, spec_=spec_):
+                return _owned_windows(arr, spec_["nbytes"])
+
+            def plan(windows, user=user, spec_=spec_):
+                frags, cursor[0] = f.plan_array_windows(
+                    user, windows, N=spec_["nbytes"], E=1,
+                    cursor=cursor[0])
+                return frags
+
+            items.append(WriteItem(key=i, snapshot=snapshot, plan=plan,
+                                   style=f.style))
+    try:
+        run_write_pipeline(f._backend, items, window)
+    finally:
+        # Keep the writer's cursor coherent even on the error path — the
+        # context manager's close (barriers included) runs next.
+        f.cursor = cursor[0]
 
 
 def _encode_aux(value) -> Any:

@@ -35,6 +35,12 @@ Fast-path implementation (byte-identical to the reference algorithm):
   one future so the overlapped restore engine
   (:mod:`repro.core.pipeline`) can inflate chunk k while chunk k+1 is
   still in flight from disk.
+* The write side mirrors the mirror: :func:`submit_compress_batch`
+  deflates a slice of payloads as one pool job (stage 1 only — pure
+  zlib, GIL released for the whole call) and the caller finishes with
+  :func:`encode_stage2` (base64 + line breaks, brief GIL-held numpy) on
+  its own thread, so the overlapped save engine can deflate leaf k+1
+  while leaf k's ``pwritev`` is in flight.
 """
 from __future__ import annotations
 
@@ -82,8 +88,12 @@ _NP_MIN_BYTES = 1 << 10
 #: Thread-pool policy for compress_elements: worth it only past real work.
 _POOL_MIN_ELEMENTS = 4
 _POOL_MIN_BYTES = 1 << 20
-_POOL_THREADS = int(_os.environ.get("REPRO_CODEC_THREADS", "0")) \
-    or min(8, _os.cpu_count() or 1)
+def _default_pool_width() -> int:
+    return int(_os.environ.get("REPRO_CODEC_THREADS", "0")) \
+        or min(8, _os.cpu_count() or 1)
+
+
+_POOL_THREADS = _default_pool_width()
 _pool = None
 _pool_lock = _threading.Lock()
 
@@ -186,16 +196,30 @@ def _fast_stage1(stream: bytes) -> Optional[bytes]:
         return None  # strict path reports the canonical error
 
 
-def compress(data: BytesLike, style: str = spec.UNIX,
-             level: int = DEFAULT_LEVEL) -> bytes:
-    """Apply the two-stage §3.1 algorithm to one data item."""
+def deflate_stage1(data: BytesLike, level: int = DEFAULT_LEVEL) -> bytes:
+    """Stage 1 of §3.1: 8-byte big-endian size ‖ ``'z'`` ‖ deflate stream.
+
+    Pure zlib after the 9-byte header — releases the GIL for the whole
+    deflate, which is why :func:`submit_compress_batch` jobs run exactly
+    this and nothing else."""
     view = memoryview(data)
     if view.format != "B" or view.ndim != 1:
         view = view.cast("B")
     stage1_parts = [struct.pack(">Q", len(view)) + b"z"]
     stage1_parts += _deflate(view, level)
-    encoded = base64.b64encode(b"".join(stage1_parts))
+    return b"".join(stage1_parts)
+
+
+def encode_stage2(stage1: BytesLike, style: str = spec.UNIX) -> bytes:
+    """Stage 2 of §3.1: base64 with 76-byte lines + 2-byte breaks."""
+    encoded = base64.b64encode(stage1)
     return _break_lines(encoded, style)
+
+
+def compress(data: BytesLike, style: str = spec.UNIX,
+             level: int = DEFAULT_LEVEL) -> bytes:
+    """Apply the two-stage §3.1 algorithm to one data item."""
+    return encode_stage2(deflate_stage1(data, level), style)
 
 
 def _parse_stage2(stream: bytes, fast: bool = False):
@@ -375,10 +399,61 @@ def submit_decompress_batch(streams: Sequence[BytesLike],
     return _get_pool().submit(_job)
 
 
+def submit_compress_batch(payloads: Sequence[BytesLike],
+                          level: int = DEFAULT_LEVEL):
+    """Deflate a batch of payloads in ONE pool job; returns a Future
+    resolving to the list of stage-1 bodies (size header + 'z' + deflate
+    stream).
+
+    The write mirror of :func:`submit_decompress_batch`, with the same
+    GIL discipline inverted: the pool job is back-to-back GIL-releasing
+    deflates and nothing else; the submitting thread finishes each body
+    with :func:`encode_stage2` (base64 + numpy line breaking — brief,
+    GIL-held) when the future resolves, so worker wakeups never fight
+    the caller for the lock.  ``encode_stage2(fut.result()[j], style)``
+    is byte-identical to ``compress(payloads[j], style, level)`` by
+    construction — :func:`compress` is those two calls.
+    """
+    views = [memoryview(p) for p in payloads]  # pin callers' buffers
+
+    def _job() -> List[bytes]:
+        return [deflate_stage1(v, level) for v in views]
+
+    return _get_pool().submit(_job)
+
+
+def submit_task(fn, *args):
+    """Run ``fn(*args)`` on the shared codec pool; returns the Future.
+
+    Used by the overlapped save engine for its device→host snapshot
+    lookahead (one leaf ahead — a double buffer, not a fan-out), so the
+    rare non-codec job rides the existing pool instead of paying for a
+    dedicated thread."""
+    return _get_pool().submit(fn, *args)
+
+
 def pool_width() -> int:
     """The codec pool's thread count (the engine sizes its in-flight
     inflate queue from this)."""
     return _POOL_THREADS
+
+
+def set_pool_width(n: Optional[int]) -> int:
+    """Override the pool-dispatch width at runtime; returns the previous
+    value.  ``None`` re-reads ``REPRO_CODEC_THREADS``/cpu count.
+
+    Bench/test hook (the runtime twin of the env knob): ``1`` makes
+    every ``*_elements`` call run inline on the caller — the fully
+    serial codec the save/restore benchmarks use as their baseline.  An
+    already-created pool keeps its workers; only dispatch policy
+    changes.
+    """
+    global _POOL_THREADS
+    prev = _POOL_THREADS
+    if n is None:
+        n = _default_pool_width()
+    _POOL_THREADS = max(1, int(n))
+    return prev
 
 
 def uncompressed_size_entry(u: int, style: str = spec.UNIX) -> bytes:

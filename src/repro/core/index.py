@@ -23,6 +23,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import zlib
 from typing import Dict, List, Optional, Tuple
 
 from repro.core import codec, spec
@@ -79,6 +80,14 @@ class IndexEntry:
     v_data_start: int = 0
     raw_E: int = 0
     payload_bytes: int = 0
+    #: CRC32 of the section's *decoded logical payload* (inline data,
+    #: block/array data bytes, varray elements concatenated — after §3
+    #: decoding for encoded kinds), recorded by ``scdatool index
+    #: --checksums``.  None when never computed; excluded from equality
+    #: so a checksummed sidecar still deep-verifies against a fresh
+    #: (checksum-free) scan.  Re-encoding preserves it, exactly as
+    #: ``scdatool diff`` compares logically.
+    crc32: Optional[int] = dataclasses.field(default=None, compare=False)
 
     def header(self):
         from repro.core.reader import SectionHeader
@@ -198,6 +207,99 @@ class ScdaIndex:
                                 "stale index: section table does not match "
                                 "a fresh scan")
 
+    # -- payload checksums (the verify-without-a-reference manifest) ----------
+    @staticmethod
+    def _section_crc(r, i: int) -> int:
+        """CRC32 of section ``i``'s decoded logical payload.
+
+        Raw A sections stream through windowed reads, so a terabyte raw
+        leaf checksums in bounded memory; encoded kinds (zA/V/zV) run
+        the full decode chain — a checksum match therefore also proves
+        the §3 framing, base64 geometry, and zlib adler32 of every
+        payload byte it covers — at the cost of materializing each
+        section's decoded elements while it is checksummed.
+        """
+        hdr = r.seek_section(i)
+        crc = 0
+        if hdr.type == "I":
+            crc = zlib.crc32(r.read_inline_data())
+        elif hdr.type == "B":
+            crc = zlib.crc32(r.read_block_data())
+        elif hdr.type == "A" and not hdr.decoded:
+            # Raw A sections can be huge (checkpoint leaves are E=1 with
+            # N in the millions); windowed reads keep memory bounded
+            # instead of materializing one buffer per element.
+            step = max(1, (1 << 20) // max(1, hdr.E))
+            for start in range(0, hdr.N, step):
+                n = min(step, hdr.N - start)
+                crc = zlib.crc32(r.read_array_windows([(start, n)],
+                                                      hdr.E)[0], crc)
+            r.skip_data()
+        elif hdr.type == "A":
+            for chunk in r.read_array_data([hdr.N]):
+                crc = zlib.crc32(chunk, crc)
+        else:  # V
+            sizes = r.read_varray_sizes([hdr.N])
+            for chunk in r.read_varray_data([hdr.N], sizes):
+                crc = zlib.crc32(chunk, crc)
+        return crc
+
+    def with_checksums(self, reader=None) -> "ScdaIndex":
+        """A copy of this index with every entry's ``crc32`` computed.
+
+        ``scdatool index --checksums`` writes the result as the sidecar:
+        a checksum manifest that lets ``scdatool verify`` validate the
+        archive later without a reference copy (ROADMAP open item).
+        """
+        from repro.core.reader import fopen_read
+        if reader is None:
+            with fopen_read(None, self.path) as r:
+                return self.with_checksums(r)
+        reader.set_index(self)
+        entries = [dataclasses.replace(e,
+                                       crc32=self._section_crc(reader, i))
+                   for i, e in enumerate(self.entries)]
+        return dataclasses.replace(self, entries=entries)
+
+    def has_checksums(self) -> bool:
+        """True when every entry carries a recorded payload ``crc32`` —
+        the precondition for ``scdatool verify`` to fully cover a file."""
+        return all(e.crc32 is not None for e in self.entries)
+
+    def verify_checksums(self, reader=None) -> List[str]:
+        """Re-read every payload and compare against the recorded CRCs.
+
+        Returns a list of human-readable problems (empty = verified).
+        Entries without a recorded ``crc32`` are reported — an archive
+        "verifies" only if every section is actually covered.  Decode
+        failures (corrupt §3 framing, truncation) are reported per
+        section rather than raised, so one rotten leaf doesn't hide the
+        state of the rest.
+        """
+        from repro.core.reader import fopen_read
+        if reader is None:
+            with fopen_read(None, self.path) as r:
+                return self.verify_checksums(r)
+        problems: List[str] = []
+        reader.set_index(self)
+        for i, e in enumerate(self.entries):
+            name = e.user_string.decode("latin-1")
+            if e.crc32 is None:
+                problems.append(f"section {i} ({name!r}): no checksum "
+                                f"recorded (re-run scdatool index "
+                                f"--checksums)")
+                continue
+            try:
+                got = self._section_crc(reader, i)
+            except ScdaError as err:
+                problems.append(f"section {i} ({name!r}): unreadable: "
+                                f"{err}")
+                continue
+            if got != e.crc32:
+                problems.append(f"section {i} ({name!r}): payload CRC32 "
+                                f"{got:#010x} != recorded {e.crc32:#010x}")
+        return problems
+
     # -- sidecar (.scdax — itself a valid scda file) --------------------------
     def sidecar_path(self, sidecar: Optional[str] = None) -> str:
         return sidecar or self.path + SIDECAR_SUFFIX
@@ -220,7 +322,10 @@ class ScdaIndex:
             "sections": [
                 {"type": e.type,
                  "user_string": e.user_string.decode("latin-1"),
-                 **{f: getattr(e, f) for f in _ENTRY_FIELDS}}
+                 **{f: getattr(e, f) for f in _ENTRY_FIELDS},
+                 # backward-compatible extra key: absent when not computed,
+                 # ignored by readers that predate it
+                 **({"crc32": e.crc32} if e.crc32 is not None else {})}
                 for e in self.entries
             ],
         }
@@ -244,6 +349,7 @@ class ScdaIndex:
             entries = [
                 IndexEntry(type=s["type"],
                            user_string=s["user_string"].encode("latin-1"),
+                           crc32=s.get("crc32"),
                            **{f: s[f] for f in _ENTRY_FIELDS})
                 for s in doc["sections"]
             ]

@@ -34,6 +34,16 @@ Fast-path machinery (all byte-transparent):
   (:mod:`repro.core.pipeline`): reads land in a bounded cache consulted by
   ``pread``/``read_scatter``; :meth:`FileBackend.release` drops consumed
   buffers and hands the pages back with ``posix_fadvise(DONTNEED)``.
+* The write mirror of the prefetcher: :meth:`FileBackend.submit_write_gather`
+  queues gather writes on a small background executor with BOUNDED
+  in-flight bytes (``REPRO_SCDA_WRITE_PIPELINE`` window; submission blocks
+  while the window is full), so the overlapped save engine can deflate
+  leaf k+1 while leaf k's ``pwritev`` is still on its way to disk.
+  :meth:`FileBackend.drain_writes` is the completion drain: it waits for
+  every queued write and raises the first failure as the exact
+  :class:`ScdaError` the foreground write would have raised.  Positioned
+  writes at disjoint offsets commute, so background completion order never
+  affects the bytes.
 """
 from __future__ import annotations
 
@@ -66,6 +76,27 @@ def prefetch_window() -> int:
         return max(0, int(raw)) if raw else DEFAULT_PREFETCH
     except ValueError:
         return DEFAULT_PREFETCH
+
+
+#: Default in-flight byte window for the overlapped save engine.
+#: ``REPRO_SCDA_WRITE_PIPELINE`` overrides; ``0`` disables pipelined
+#: writes entirely — every save degrades to the exact legacy serial
+#: write order, which is the byte oracle the pipeline is tested against.
+#: 32 MiB: large enough that two whole default-chunked leaves can be in
+#: flight on both writeback workers (an 8 MiB window measured *slower*
+#: than serial on raw saves — one leaf filled it and serialized the
+#: queue), small enough to bound a save's extra memory.
+DEFAULT_WRITE_PIPELINE = 32 << 20
+
+
+def write_pipeline_window() -> int:
+    """The effective write-pipeline window (bytes), read per call like
+    :func:`prefetch_window`; ``0`` = serial saves."""
+    raw = os.environ.get("REPRO_SCDA_WRITE_PIPELINE", "")
+    try:
+        return max(0, int(raw)) if raw else DEFAULT_WRITE_PIPELINE
+    except ValueError:
+        return DEFAULT_WRITE_PIPELINE
 
 
 _HAS_PWRITEV = hasattr(os, "pwritev")
@@ -121,6 +152,17 @@ class FileBackend:
         self._pf_lock = threading.Lock()
         self._pf: Dict[int, Tuple[int, "Future"]] = {}  # off -> (len, fut)
         self._pf_pool = None
+        # Writeback state (mode 'w' only; executor created lazily on the
+        # first submit_write_gather so serial writers never pay for it).
+        self._wb_lock = threading.Lock()
+        self._wb: List[Tuple["Future", int]] = []  # (future, bytes queued)
+        self._wb_pool = None
+        self._wb_error: Optional[ScdaError] = None
+        # Sticky copy of the first failure: _wb_error is cleared once
+        # drain_writes has delivered it, but the file stays poisoned —
+        # later submissions must keep failing fast (a lost fragment
+        # cannot be unlost by writing more).
+        self._wb_poison: Optional[ScdaError] = None
 
     # -- writes ---------------------------------------------------------------
     def pwrite(self, offset: int, data: BytesLike) -> None:
@@ -165,7 +207,13 @@ class FileBackend:
                          else memoryview(b"".join(small)))
         if not views:
             return
-        if len(views) == 1 or not _HAS_PWRITEV:
+        # A run whose fragments all pre-joined used to collapse to ONE
+        # view and silently degrade to pwrite — a different syscall with
+        # its own stall counter, invisible to fault injection (and
+        # accounting) at the pwritev layer.  Small-fragment runs now stay
+        # on the vectored path whenever the platform has one, so every
+        # gathered write shares a single zero-progress budget.
+        if not _HAS_PWRITEV:  # pragma: no cover - exercised on exotic hosts
             for v in views:
                 self.pwrite(offset, v)
                 offset += len(v)
@@ -232,6 +280,119 @@ class FileBackend:
         """
         for run_off, _, bufs in self._coalesce_runs(frags):
             self.pwritev(run_off, bufs)
+
+    # -- background writeback (the overlapped save engine's drain) ------------
+    def submit_write_gather(self,
+                            frags: Iterable[Tuple[int, BytesLike]],
+                            window: int) -> None:
+        """Queue ``frags`` for a background :meth:`write_gather`.
+
+        The write mirror of :meth:`prefetch`: fragments are handed to a
+        small executor and this call returns as soon as the queue has
+        room — it BLOCKS (oldest-first) while more than ``window`` bytes
+        are in flight, which is the pipeline's memory bound and the
+        back-pressure that keeps a fast producer from buffering a whole
+        checkpoint.  The caller's buffers are pinned by the queued job
+        and must not be mutated until :meth:`drain_writes`.
+
+        A failed background write surfaces as the exact
+        :class:`ScdaError` the foreground :meth:`write_gather` would have
+        raised — here on the next submission, or at the latest from
+        :meth:`drain_writes`/:meth:`close`.  After a failure all later
+        submissions fail fast without queueing, permanently — the
+        poison survives :meth:`drain_writes` delivering the error (the
+        file is already missing fragments; more writes cannot unpoison
+        it), including submissions on the ``window <= 0`` serial path.
+
+        ``window <= 0`` degrades to a plain synchronous
+        :meth:`write_gather` — the serial oracle.
+        """
+        with self._wb_lock:
+            self._reap_done_locked()
+            self._raise_poison_locked()
+        if window <= 0:
+            self.write_gather(frags)
+            return
+        frags = [(off, buf) for off, buf in frags if len(buf)]
+        nbytes = sum(len(buf) for _, buf in frags)
+        with self._wb_lock:
+            if self._wb_pool is None:
+                from concurrent.futures import ThreadPoolExecutor
+                # Two workers: one write landing while the next queues.
+                self._wb_pool = ThreadPoolExecutor(
+                    max_workers=2, thread_name_prefix="scda-writeback")
+        while True:
+            with self._wb_lock:
+                self._reap_done_locked()
+                self._raise_poison_locked()
+                if not self._wb or \
+                        sum(n for _, n in self._wb) + nbytes <= window:
+                    self._wb.append((self._wb_pool.submit(
+                        self.write_gather, frags), nbytes))
+                    return
+                head = self._wb[0][0]
+            # Oldest-first wait OUTSIDE the lock (the reap and
+            # pending_write_bytes must stay reachable meanwhile):
+            # submission order is also file order, so draining the head
+            # frees window budget soonest.
+            try:
+                head.result()
+            except Exception:  # noqa: BLE001 - reap converts to ScdaError
+                pass  # recorded by the next reap; raised after accounting
+
+    def _raise_poison_locked(self) -> None:
+        """Fail fast on a poisoned backend, consuming the one-shot
+        ``_wb_error`` delivery so a later drain/close does not re-raise
+        an error this submission already handed to the caller."""
+        if self._wb_poison is not None:
+            self._wb_error = None
+            raise self._wb_poison
+
+    def _reap_done_locked(self) -> None:
+        """Drop completed writeback jobs; record the first failure."""
+        still = []
+        for fut, n in self._wb:
+            if fut.done():
+                err = fut.exception()
+                if err is not None and self._wb_poison is None:
+                    self._wb_poison = err if isinstance(err, ScdaError) \
+                        else ScdaError(ScdaErrorCode.FS_WRITE,
+                                       f"{self.path}: {err}")
+                    self._wb_error = self._wb_poison
+            else:
+                still.append((fut, n))
+        self._wb[:] = still
+
+    def drain_writes(self) -> None:
+        """Wait for every queued background write; raise the first error.
+
+        The save engine's completion drain: a successful return means
+        every submitted fragment is handed to the kernel (durability is
+        still :meth:`fsync`'s job, exactly as for foreground writes).
+        Idempotent and a no-op when nothing was ever submitted; an error
+        is delivered once (so a close after a handled failure does not
+        re-raise and mask it), but the backend stays poisoned for
+        further submissions.
+        """
+        with self._wb_lock:
+            pending = list(self._wb)
+        for fut, _ in pending:
+            try:
+                fut.result()
+            except Exception:  # noqa: BLE001 - reap converts to ScdaError
+                pass  # recorded by the reap below
+        with self._wb_lock:
+            self._reap_done_locked()
+            err, self._wb_error = self._wb_error, None
+        if err is not None:
+            raise err
+
+    def pending_write_bytes(self) -> int:
+        """Bytes queued or in flight on the writeback executor (test hook —
+        a clean shutdown must leave this at 0)."""
+        with self._wb_lock:
+            self._reap_done_locked()
+            return sum(n for _, n in self._wb)
 
     # -- reads ----------------------------------------------------------------
     def pread(self, offset: int, n: int) -> bytes:
@@ -582,8 +743,20 @@ class FileBackend:
             self._pf_pool = None
         with self._pf_lock:
             self._pf.clear()
+        # Same for the writeback executor: every queued write must reach
+        # the kernel before fsync/close, and a failed one must surface as
+        # the ScdaError the foreground write would have raised (after the
+        # fd is closed — never leak it on the error path).
+        wb_err: Optional[ScdaError] = None
+        if self._wb_pool is not None:
+            try:
+                self.drain_writes()
+            except ScdaError as e:
+                wb_err = e
+            self._wb_pool.shutdown(wait=True)
+            self._wb_pool = None
         try:
-            if sync:
+            if sync and wb_err is None:
                 os.fsync(self.fd)
             os.close(self.fd)
         except OSError as e:
@@ -591,3 +764,5 @@ class FileBackend:
         finally:
             self.fd = -1
             self._cache = b""
+        if wb_err is not None:
+            raise wb_err

@@ -1,5 +1,5 @@
-"""Overlapped restore engine — the asynchronous read pipeline (read side
-of the PR-1 scatter-gather fast path).
+"""Overlapped restore and save engines — the asynchronous read and write
+pipelines over the PR-1 scatter-gather fast path.
 
 The serial restore walk is pread → inflate → copy, one chunk at a time:
 the disk idles while zlib runs and zlib idles while the disk seeks.  This
@@ -24,16 +24,43 @@ forward-walk read, and any failure (truncated extent, corrupt chunk)
 raises the same :class:`ScdaError` the serial path would, with all
 in-flight futures drained first (no leaks, no hangs).
 
+The write half (:func:`run_write_pipeline`) is the mirror.  The serial
+save walk is snapshot → deflate → pwrite, one leaf at a time: the codec
+pool idles while the disk writes and the disk idles while zlib runs.
+The engine overlaps the three stages —
+
+* device→host snapshots run one item ahead on the shared pool (a double
+  buffer, :func:`repro.core.codec.submit_task`), so leaf k+1 is on the
+  host before leaf k finishes writing;
+* compressed payloads deflate on the codec pool
+  (:func:`repro.core.codec.submit_compress_batch` — deflate-only jobs,
+  the write inverse of the inflate-only GIL discipline; stage-2 base64
+  runs on this thread), bounded by in-flight bytes;
+* finished fragments queue on :meth:`FileBackend.submit_write_gather`, a
+  small writeback executor with a bounded in-flight window
+  (``REPRO_SCDA_WRITE_PIPELINE`` bytes; ``0`` = the exact legacy serial
+  order), and :meth:`FileBackend.drain_writes` is the completion drain.
+
+Because serial equivalence fixes every section's extent from collective
+parameters, item k+1's offsets need only item k's *planned* sizes, never
+its completed write — ``plan`` callbacks run strictly in item order
+while deflate and writeback float free.  Byte-identity is structural
+here too: the pipeline changes WHEN payloads deflate and WHERE the
+pwritev happens, never WHAT lands in the file, and any failure raises
+the same :class:`ScdaError` as the serial path with every in-flight
+future drained (no leaks, no hangs).
+
 Consumers: :meth:`repro.core.reader.ScdaReader.read_batch` (batched
-element reads) and the checkpoint restore scheduler in
+element reads) and the checkpoint restore/save schedulers in
 :mod:`repro.checkpoint.pytree_io`.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Iterator, List, Optional, Sequence, Tuple
+from typing import (Any, Callable, Iterator, List, Optional, Sequence,
+                    Tuple)
 
-from repro.core import codec
+from repro.core import codec, spec
 from repro.core.errors import ScdaError, ScdaErrorCode
 from repro.core.io_backend import BytesLike, FileBackend
 
@@ -188,3 +215,169 @@ def run_pipeline(backend: FileBackend, items: Sequence[ReadItem],
                     except Exception:  # noqa: BLE001 - shutdown path
                         pass
         inflight.clear()
+
+
+# --------------------------------------------------------------------------
+# The write mirror: snapshot → deflate → pwritev
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class WriteItem:
+    """One schedulable unit of the save pipeline (typically a leaf).
+
+    ``snapshot`` produces the item's payload (device→host for jax
+    arrays); the engine runs it one item ahead on the shared pool so the
+    copy overlaps the previous item's deflate/write.  With ``deflate``
+    the payload must be a sequence of independent chunk buffers; the
+    engine compresses each with the §3.1 algorithm (``level``/``style``)
+    on the codec pool and hands ``plan`` the finished streams.  Without
+    it, ``plan`` receives the snapshot payload verbatim.
+
+    ``plan(payload) -> [(offset, buffer), ...]`` turns the final payload
+    into absolute-offset write fragments.  Plans are invoked STRICTLY in
+    item order — an item's offsets may depend on every predecessor's
+    planned size (the §3.4 compressed case), so schedulers keep their
+    cursor in the closure and advance it per call.  The fragments are
+    then queued out-of-order-safe on the writeback executor (positioned
+    writes at disjoint offsets commute).
+    """
+    key: Any
+    snapshot: Callable[[], Any]
+    plan: Callable[[Any], List[Tuple[int, BytesLike]]]
+    deflate: bool = False
+    level: Optional[int] = None
+    style: str = spec.UNIX
+
+
+def run_write_pipeline(backend: FileBackend, items: Sequence[WriteItem],
+                       window: int, depth: Optional[int] = None) -> int:
+    """Execute write ``items`` against ``backend``; returns bytes queued.
+
+    ``window <= 0`` is the serial mode: snapshot, deflate, and write run
+    strictly in item order on this thread with plain synchronous
+    :meth:`FileBackend.write_gather` — the oracle the pipelined mode is
+    tested against.  Otherwise snapshots run one item ahead, in-flight
+    items (snapshotted payloads and deflate jobs alike) are bounded by
+    ``depth`` (default: codec pool width) AND by bytes
+    (``max(4 * window, 64 MiB)`` of raw payload — a checkpoint of huge
+    leaves must not pin pool-width whole leaves), and writes drain in
+    the background within ``window`` in-flight bytes.
+
+    The engine drains the writeback queue before returning, so every
+    error — deflate, plan, or write — surfaces HERE as the serial
+    path's :class:`ScdaError`, with no future left running.
+    """
+    items = list(items)
+    total = 0
+    if window <= 0:
+        for it in items:
+            payload = it.snapshot()
+            if it.deflate:
+                payload = [codec.compress(c, it.style,
+                                          _level(it)) for c in payload]
+            frags = it.plan(payload)
+            total += sum(len(b) for _, b in frags)
+            backend.write_gather(frags)
+        return total
+
+    width = max(1, codec.pool_width())
+    depth = depth if depth is not None else max(2, width)
+    byte_cap = max(4 * window, 64 << 20)
+    snaps = {}    # idx -> snapshot Future
+    pend = {}     # idx -> (deflate futures or None, payload, est bytes)
+    pend_bytes = 0
+    sub = 0       # next item to move snapshot → deflate
+
+    def _ensure_snap(j: int) -> None:
+        if j < len(items) and j not in snaps and j not in pend:
+            snaps[j] = codec.submit_task(items[j].snapshot)
+
+    try:
+        for idx, it in enumerate(items):
+            # Submission runs ahead of emission: move items onto the
+            # codec pool until the in-flight caps say stop.  The current
+            # item (sub == idx) always submits, and one item beyond the
+            # head always stays in flight so deflate/write overlap
+            # survives the cap.
+            while sub < len(items) and (
+                    sub <= idx
+                    or (sub - idx <= depth and pend_bytes <= byte_cap)):
+                jt = items[sub]
+                _ensure_snap(sub)
+                _ensure_snap(sub + 1)  # the double buffer
+                payload = snaps.pop(sub).result()
+                if jt.deflate:
+                    chunks = list(payload)
+                    est = sum(len(c) for c in chunks)
+                    # A few multi-chunk jobs, as on the read side: enough
+                    # slices to keep the pool busy, few enough that
+                    # worker wakeups don't GIL-starve this thread.
+                    step = max(1, -(-len(chunks) // (2 * width)))
+                    futs = [codec.submit_compress_batch(
+                        chunks[j:j + step], _level(jt))
+                        for j in range(0, len(chunks), step)]
+                    pend[sub] = (futs, None, est)
+                else:
+                    est = _est_bytes(payload)
+                    pend[sub] = (None, payload, est)
+                pend_bytes += est
+                sub += 1
+            futs, payload, est = pend.pop(idx)
+            pend_bytes -= est
+            if futs is not None:
+                streams: List[bytes] = []
+                for f in futs:
+                    streams.extend(codec.encode_stage2(s1, it.style)
+                                   for s1 in f.result())
+                frags = it.plan(streams)
+            else:
+                frags = it.plan(payload)
+            total += sum(len(b) for _, b in frags)
+            backend.submit_write_gather(frags, window)
+        backend.drain_writes()
+        return total
+    finally:
+        # Error or early exit: no future may outlive this call (the
+        # backend fd is about to go away under the writeback pool).
+        leaked = list(snaps.values())
+        for futs, _, _ in pend.values():
+            leaked.extend(futs or ())
+        for f in leaked:
+            f.cancel()
+        for f in leaked:
+            if not f.cancelled():
+                try:
+                    f.result()
+                except Exception:  # noqa: BLE001 - shutdown path
+                    pass
+        snaps.clear()
+        pend.clear()
+        try:
+            backend.drain_writes()
+        except ScdaError:
+            # the primary error is already propagating; the drain only
+            # guarantees quiescence here
+            pass
+
+
+def _level(it: WriteItem) -> int:
+    return codec.DEFAULT_LEVEL if it.level is None else it.level
+
+
+def _est_bytes(payload) -> int:
+    """Best-effort size of a raw snapshot payload for the in-flight byte
+    cap: a buffer, or a list/tuple of buffers / ``(offset, buffer)``
+    fragments (the checkpoint scheduler's window lists).  Anything else
+    — notably one-shot iterables, which must reach ``plan`` unconsumed —
+    counts 0: the item-depth cap still bounds it, just not by bytes."""
+    if isinstance(payload, (bytes, bytearray, memoryview)):
+        return len(payload)
+    if not isinstance(payload, (list, tuple)):
+        return 0
+    try:
+        total = 0
+        for entry in payload:
+            total += len(entry[-1] if isinstance(entry, tuple) else entry)
+        return total
+    except TypeError:
+        return 0

@@ -201,8 +201,30 @@ class ScdaWriter:
         coalesce into single vectored writes.
         """
         self._check_open()
+        frags, next_cursor = self.plan_array_windows(
+            user_string, windows, N, E, pad_last_byte, self.cursor)
+        self._backend.write_gather(frags)
+        self.cursor = next_cursor
+
+    def plan_array_windows(self, user_string: bytes,
+                           windows: Sequence[Window], N: int, E: int,
+                           pad_last_byte: Optional[int] = None,
+                           cursor: Optional[int] = None) \
+            -> Tuple[List[Frag], int]:
+        """This rank's :meth:`write_array_windows` fragments at ``cursor``
+        — ``(frags, next_cursor)`` — without writing anything.
+
+        The overlapped save engine's planning primitive: section offsets
+        are fully determined by the collective parameters, so the
+        scheduler plans every leaf's extents up front and emits the
+        bodies out of order while the serial writer (which calls this
+        exact method, then writes immediately) remains the byte oracle.
+        """
+        if cursor is None:
+            cursor = self.cursor
         frags: List[Frag] = []
-        data_start = self._array_header_frags(frags, b"A", user_string, N, E)
+        data_start = self._array_header_frags(frags, b"A", user_string,
+                                              N, E, cursor)
         owns_last = False
         for start, buf in sorted(windows, key=lambda w: w[0]):
             view = _as_bytes(buf)
@@ -224,8 +246,7 @@ class ScdaWriter:
                           spec.pad_data(n, pad_last_byte, self.style)))
         elif n == 0 and self.comm.rank == 0:
             frags.append((data_start, spec.pad_data(0, None, self.style)))
-        self._backend.write_gather(frags)
-        self.cursor = data_start + spec.padded_data_bytes(n)
+        return frags, data_start + spec.padded_data_bytes(n)
 
     # ------------------------------------------------------------------ V --
     def write_varray(self, user_string: bytes,
@@ -314,6 +335,42 @@ class ScdaWriter:
         self._backend.write_gather(frags)
         self.cursor = data_start + spec.padded_data_bytes(total)
 
+    def plan_encoded_varray(self, user_string: bytes,
+                            usizes: Sequence[int],
+                            streams: Sequence[BytesLike],
+                            cursor: Optional[int] = None) \
+            -> Tuple[List[Frag], int]:
+        """Single-rank planning mirror of ``write_varray(encode=True)``:
+        the §3.4 A(U-entries) + V(compressed streams) section pair as
+        ``(frags, next_cursor)``, nothing written.
+
+        ``usizes`` are the uncompressed element sizes (the U entries —
+        known from the layout before any byte deflates), ``streams`` the
+        finished §3.1 streams.  The overlapped save engine calls this
+        once a leaf's deflate futures resolve; byte-identity with the
+        serial path holds because both build from the same
+        :mod:`repro.core.encode` iovec oracles.
+        """
+        if self.comm.size != 1:
+            raise ScdaError(ScdaErrorCode.ARG_PARTITION,
+                            "encoded-varray planning is single-rank "
+                            "(matching write_varray(encode=True) use)")
+        if cursor is None:
+            cursor = self.cursor
+        frags: List[Frag] = []
+        u_entries = spec.count_entries(b"U", list(usizes), self.style)
+        for part in _encode.iov_array(
+                codec.MAGIC_VARRAY, u_entries, len(usizes),
+                spec.COUNT_ENTRY_BYTES, self.style):
+            if len(part):
+                frags.append((cursor, part))
+            cursor += len(part)
+        for part in _encode.iov_varray(user_string, streams, self.style):
+            if len(part):
+                frags.append((cursor, part))
+            cursor += len(part)
+        return frags, cursor
+
     def _write_u_entry_array(self, counts: Sequence[int],
                              local_sizes: Sequence[int], N: int) -> None:
         """The A("V compressed scda 00", N, 32, U-entries) metadata section."""
@@ -327,22 +384,25 @@ class ScdaWriter:
 
     # -- shared helpers -------------------------------------------------------
     def _array_header_frags(self, frags: List[Frag], letter: bytes,
-                            user_string: bytes, N: int, E: int) -> int:
+                            user_string: bytes, N: int, E: int,
+                            cursor: Optional[int] = None) -> int:
         """Build the A-section header entries and return data_start.
 
         The entries are constructed on *every* rank so argument validation
         stays collective (all ranks raise together, none runs ahead into a
         diverged file state); only rank 0 enqueues them for writing.
         """
+        if cursor is None:
+            cursor = self.cursor
         header = (spec.section_header(letter, user_string, self.style),
                   spec.count_entry(b"N", N, self.style),
                   spec.count_entry(b"E", E, self.style))
         if self.comm.rank == 0:
-            frags.append((self.cursor, header[0]))
-            frags.append((self.cursor + spec.SECTION_HEADER_BYTES, header[1]))
-            frags.append((self.cursor + spec.SECTION_HEADER_BYTES
+            frags.append((cursor, header[0]))
+            frags.append((cursor + spec.SECTION_HEADER_BYTES, header[1]))
+            frags.append((cursor + spec.SECTION_HEADER_BYTES
                           + spec.COUNT_ENTRY_BYTES, header[2]))
-        return (self.cursor + spec.SECTION_HEADER_BYTES
+        return (cursor + spec.SECTION_HEADER_BYTES
                 + 2 * spec.COUNT_ENTRY_BYTES)
 
     def _append_padding(self, frags: List[Frag], data_start: int, n: int,
@@ -437,10 +497,24 @@ class ScdaWriter:
         if self._closed:
             return
         sync = self.sync if sync is None else sync
+        # Quiesce BEFORE the barrier: with the overlapped save engine a
+        # rank may still have queued background writes, and the final
+        # barrier's contract is "all data is on its way to the kernel on
+        # every rank" — a reader on another rank may open the file the
+        # moment its own close returns.  A failed background write must
+        # not leak the descriptor or skip the barriers (the other ranks
+        # are waiting); it is re-raised once the close is complete.
+        err: Optional[ScdaError] = None
+        try:
+            self._backend.drain_writes()
+        except ScdaError as e:
+            err = e
         self.comm.barrier()
-        self._backend.close(sync=sync)
+        self._backend.close(sync=sync and err is None)
         self._closed = True
         self.comm.barrier()
+        if err is not None:
+            raise err
 
 
 def fopen_write(comm: Optional[Communicator], path: str,

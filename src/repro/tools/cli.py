@@ -6,6 +6,8 @@ Subcommands::
     scdatool cat FILE SECTION        # decoded payload of one section
     scdatool fsck FILE...            # structural validation, non-zero on corruption
     scdatool index FILE...           # build/refresh (or --check) .scdax sidecars
+    scdatool index --checksums F...  # sidecar + per-section payload CRC32s
+    scdatool verify FILE...          # re-check payloads against the checksums
     scdatool copy SRC DST            # rewrite; --recompress / --decompress
     scdatool diff A B                # leaf-wise compare via the indexes
 
@@ -126,15 +128,66 @@ def cmd_index(args) -> int:
         sidecar = path + SIDECAR_SUFFIX
         if args.check:
             try:
-                ScdaIndex.load_sidecar(path).verify(deep=True)
-                print(f"{sidecar}: fresh")
+                idx = ScdaIndex.load_sidecar(path)
+                idx.verify(deep=True)
+                if args.checksums and not idx.has_checksums():
+                    _err(f"{sidecar}: fresh but records no payload "
+                         f"checksums (write them with: scdatool index "
+                         f"--checksums)")
+                    status = 1
+                else:
+                    print(f"{sidecar}: fresh")
             except (ScdaError, OSError) as e:
                 _err(f"{sidecar}: {e}")
                 status = 1
             continue
-        idx = ScdaIndex.build(path)
+        with fopen_read(None, path) as r:
+            idx = r.index()
+            if args.checksums:
+                idx = idx.with_checksums(r)
         idx.write_sidecar()
-        print(f"{sidecar}: {len(idx)} sections indexed")
+        print(f"{sidecar}: {len(idx)} sections indexed"
+              + (" (with payload checksums)" if args.checksums else ""))
+    return status
+
+
+# -- verify ------------------------------------------------------------------
+
+def cmd_verify(args) -> int:
+    """Validate archives against their sidecar checksum manifests.
+
+    The reference-free integrity check (``diff`` needs a second copy;
+    ``verify`` does not): loads the ``.scdax`` sidecar written by
+    ``index --checksums``, confirms it still describes the file, then
+    re-reads and re-decodes every payload and compares CRC32s.  Exit 1
+    on any mismatch, unreadable section, missing checksum, or missing
+    sidecar.
+    """
+    status = 0
+    for path in args.files:
+        sidecar = path + SIDECAR_SUFFIX
+        try:
+            idx = ScdaIndex.load_sidecar(path)
+        except (ScdaError, OSError) as e:
+            _err(f"{path}: cannot load checksum manifest {sidecar}: {e} "
+                 f"(write one with: scdatool index --checksums)")
+            status = 1
+            continue
+        try:
+            problems = idx.verify_checksums()
+        except (ScdaError, OSError) as e:
+            _err(f"{path}: {e}")
+            status = 1
+            continue
+        for p in problems:
+            print(f"{path}: {p}")
+        if problems:
+            status = 1
+            print(f"{path}: FAILED ({len(problems)} problem"
+                  f"{'s' if len(problems) != 1 else ''})")
+        else:
+            print(f"{path}: verified ({len(idx)} sections, "
+                  f"payload checksums match)")
     return status
 
 
@@ -412,7 +465,16 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("files", nargs="+")
     p.add_argument("--check", action="store_true",
                    help="verify existing sidecars instead of writing")
+    p.add_argument("--checksums", action="store_true",
+                   help="also record per-section payload CRC32s "
+                        "(enables 'scdatool verify')")
     p.set_defaults(fn=cmd_index)
+
+    p = sub.add_parser("verify",
+                       help="check archives against their sidecar "
+                            "checksum manifests (no reference copy)")
+    p.add_argument("files", nargs="+")
+    p.set_defaults(fn=cmd_verify)
 
     p = sub.add_parser("copy", help="rewrite an archive section by section")
     p.add_argument("src")

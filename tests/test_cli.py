@@ -169,6 +169,16 @@ class TestIndexCommand:
             fh.write(b"tail")
         assert main(["index", "--check", archive]) == 1
 
+    def test_check_checksums_requires_recorded_crcs(self, archive, capsys):
+        # a checksum-free sidecar is fresh, but --check --checksums
+        # must refuse it (verify would fail on every section)
+        assert main(["index", archive]) == 0
+        assert main(["index", "--check", "--checksums", archive]) == 1
+        assert "no payload checksums" in capsys.readouterr().err
+        assert main(["index", "--checksums", archive]) == 0
+        assert main(["index", "--check", "--checksums", archive]) == 0
+        assert "fresh" in capsys.readouterr().out
+
     def test_fsck_reports_stale_sidecar(self, tmp_path, capsys):
         path = str(tmp_path / "s.scda")
         write_archive(path)
@@ -176,6 +186,75 @@ class TestIndexCommand:
         write_archive(path)  # same size, new mtime — deep verify catches
         os.truncate(path, os.path.getsize(path) - 32)
         assert main(["fsck", "-q", path]) == 1
+
+
+class TestVerify:
+    """scdatool verify: archive integrity against the sidecar checksum
+    manifest, without a reference copy (ROADMAP open item)."""
+
+    def test_index_checksums_then_verify_clean(self, archive, capsys):
+        assert main(["index", "--checksums", archive]) == 0
+        assert main(["verify", archive]) == 0
+        assert "verified" in capsys.readouterr().out
+
+    def test_checksums_are_backward_compatible_extra_key(self, archive):
+        assert main(["index", "--checksums", archive]) == 0
+        idx = ScdaIndex.load_sidecar(archive)
+        assert all(e.crc32 is not None for e in idx)
+        # a fresh (checksum-free) scan still deep-verifies against it:
+        # crc32 is excluded from entry equality
+        idx.verify(deep=True)
+        # and the plain index command still reads/writes the sidecar
+        assert main(["index", "--check", archive]) == 0
+
+    def test_verify_detects_payload_corruption(self, archive, capsys):
+        assert main(["index", "--checksums", archive]) == 0
+        idx = ScdaIndex.load_sidecar(archive)
+        e = next(en for en in idx if en.kind == "A")
+        with open(archive, "r+b") as fh:  # flip one raw payload byte
+            fh.seek(e.data_start + 5)
+            c = fh.read(1)
+            fh.seek(e.data_start + 5)
+            fh.write(bytes([c[0] ^ 0xFF]))
+        assert main(["verify", archive]) == 1
+        out = capsys.readouterr().out
+        assert "CRC32" in out and "FAILED" in out
+
+    def test_verify_detects_encoded_corruption(self, archive, capsys):
+        assert main(["index", "--checksums", archive]) == 0
+        idx = ScdaIndex.load_sidecar(archive)
+        e = next(en for en in idx if en.kind == "zV")
+        with open(archive, "r+b") as fh:  # clobber inside the §3 stream
+            fh.seek(e.v_data_start + 2)
+            fh.write(b"!!!!")
+        assert main(["verify", archive]) == 1
+        out = capsys.readouterr().out
+        assert "FAILED" in out
+
+    def test_verify_without_sidecar_fails_with_hint(self, archive,
+                                                    capsys):
+        assert main(["verify", archive]) == 1
+        assert "--checksums" in capsys.readouterr().err
+
+    def test_verify_without_checksums_fails(self, archive, capsys):
+        assert main(["index", archive]) == 0  # sidecar, but no CRCs
+        assert main(["verify", archive]) == 1
+        assert "no checksum recorded" in capsys.readouterr().out
+
+    def test_verify_stale_sidecar_fails(self, archive, capsys):
+        assert main(["index", "--checksums", archive]) == 0
+        with open(archive, "ab") as fh:
+            fh.write(b"tail")
+        assert main(["verify", archive]) == 1
+
+    def test_checksums_stable_across_reencoding(self, archive, tmp_path):
+        """Payload CRCs are logical: a recompressed copy carries the same
+        checksums (consistent with diff's leaf-wise equality)."""
+        rz = str(tmp_path / "rz.scda")
+        assert main(["copy", "--recompress", archive, rz]) == 0
+        a = ScdaIndex.build(archive).with_checksums()
+        b = ScdaIndex.build(rz).with_checksums()
+        assert [e.crc32 for e in a] == [e.crc32 for e in b]
 
 
 class TestCopy:

@@ -1,0 +1,589 @@
+"""The overlapped save engine (PR 4): write-side backpressure, the
+snapshot → deflate → pwritev pipeline, and the pipelined checkpoint save
+scheduler.
+
+Core invariant — the write mirror of the PR-3 restore contract: the
+pipeline changes WHEN payloads deflate and WHERE the pwritev happens,
+never WHAT lands in the file.  Every pipelined save must be
+byte-identical to the serial write oracle (``write_window=0`` /
+``REPRO_SCDA_WRITE_PIPELINE=0``), at every writing partition, and every
+failure must raise the same ScdaError the serial path raises — with the
+temp file cleaned up and no leaked futures (no hangs).
+"""
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import pytree_io
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import ScdaError, ThreadComm, codec, run_ranks
+from repro.core.errors import ScdaErrorCode
+from repro.core.io_backend import (MAX_ZERO_PROGRESS, FileBackend,
+                                   write_pipeline_window)
+from repro.core.pipeline import WriteItem, run_write_pipeline
+
+WW = 1 << 20  # pipelined write window used throughout
+
+
+def _read(path):
+    with open(path, "rb") as fh:
+        return fh.read()
+
+
+# --------------------------------------------------------------------------
+# FileBackend: background writeback (submit_write_gather / drain_writes)
+# --------------------------------------------------------------------------
+
+class TestWriteback:
+    def test_background_equals_foreground(self, tmp_path):
+        rng = np.random.default_rng(0)
+        frags, pos = [], 0
+        for _ in range(50):
+            n = int(rng.integers(1, 5000))
+            frags.append((pos, bytes(rng.integers(0, 256, n,
+                                                  dtype=np.uint8))))
+            pos += n + int(rng.integers(0, 3)) * 64  # some gaps
+        a, b = str(tmp_path / "fg.bin"), str(tmp_path / "bg.bin")
+        fg = FileBackend(a, "w", create=True)
+        fg.write_gather(frags)
+        fg.close()
+        bg = FileBackend(b, "w", create=True)
+        for frag in frags:  # one job per fragment: maximal reordering
+            bg.submit_write_gather([frag], window=WW)
+        bg.drain_writes()
+        assert bg.pending_write_bytes() == 0
+        bg.close()
+        assert _read(a) == _read(b)
+
+    def test_tiny_window_backpressure_still_completes(self, tmp_path):
+        b = FileBackend(str(tmp_path / "w.bin"), "w", create=True)
+        payload = b"x" * 4096
+        for i in range(32):  # window smaller than one fragment is legal
+            b.submit_write_gather([(i * 4096, payload)], window=100)
+        b.drain_writes()
+        b.close()
+        assert _read(str(tmp_path / "w.bin")) == payload * 32
+
+    def test_window_zero_is_synchronous(self, tmp_path):
+        b = FileBackend(str(tmp_path / "w.bin"), "w", create=True)
+        b.submit_write_gather([(0, b"hello")], window=0)
+        assert b._wb_pool is None  # never spun up a thread
+        assert b.pending_write_bytes() == 0
+        b.close()
+        assert _read(str(tmp_path / "w.bin")) == b"hello"
+
+    def test_write_error_surfaces_on_drain_and_submit(self, tmp_path,
+                                                      monkeypatch):
+        b = FileBackend(str(tmp_path / "w.bin"), "w", create=True)
+
+        def boom(fd, bufs, off):
+            raise OSError(28, "No space left on device")
+
+        monkeypatch.setattr(os, "pwritev", boom)
+        b.submit_write_gather([(0, b"z" * 100)], window=WW)
+        with pytest.raises(ScdaError) as ei:
+            b.drain_writes()
+        assert ei.value.code == ScdaErrorCode.FS_WRITE
+        monkeypatch.undo()
+        b.close()
+
+    def test_close_surfaces_pending_write_error(self, tmp_path,
+                                                monkeypatch):
+        b = FileBackend(str(tmp_path / "w.bin"), "w", create=True)
+
+        def boom(fd, bufs, off):
+            raise OSError(5, "Input/output error")
+
+        monkeypatch.setattr(os, "pwritev", boom)
+        b.submit_write_gather([(0, b"z" * 100)], window=WW)
+        monkeypatch.undo()
+        with pytest.raises(ScdaError) as ei:
+            b.close()
+        assert ei.value.code == ScdaErrorCode.FS_WRITE
+        assert b.fd == -1  # descriptor never leaks on the error path
+
+    def test_poison_survives_drain(self, tmp_path, monkeypatch):
+        # drain_writes delivers the error ONCE (close after a handled
+        # failure must not re-raise and mask it), but the file stays
+        # poisoned: later submissions fail fast on every path, or the
+        # caller could "successfully" close a file missing fragments.
+        b = FileBackend(str(tmp_path / "w.bin"), "w", create=True)
+
+        def boom(fd, bufs, off):
+            raise OSError(28, "No space left on device")
+
+        monkeypatch.setattr(os, "pwritev", boom)
+        b.submit_write_gather([(0, b"z" * 100)], window=WW)
+        with pytest.raises(ScdaError):
+            b.drain_writes()
+        monkeypatch.undo()
+        with pytest.raises(ScdaError) as ei:  # background path
+            b.submit_write_gather([(100, b"y" * 100)], window=WW)
+        assert ei.value.code == ScdaErrorCode.FS_WRITE
+        with pytest.raises(ScdaError):  # serial path poisons too
+            b.submit_write_gather([(100, b"y" * 100)], window=0)
+        b.close()  # error already delivered: close stays clean
+
+    def test_submit_delivery_consumes_error_close_stays_clean(
+            self, tmp_path, monkeypatch):
+        # The once-only delivery contract holds on the SUBMIT path too:
+        # once a submission has raised the failure, close() must not
+        # re-raise it (it would mask whatever the caller is unwinding).
+        import time
+        b = FileBackend(str(tmp_path / "w.bin"), "w", create=True)
+
+        def boom(fd, bufs, off):
+            raise OSError(28, "No space left on device")
+
+        monkeypatch.setattr(os, "pwritev", boom)
+        b.submit_write_gather([(0, b"z" * 100)], window=WW)
+        monkeypatch.undo()
+        for _ in range(500):  # job fails promptly; reap sets the poison
+            if b.pending_write_bytes() == 0:
+                break
+            time.sleep(0.01)
+        with pytest.raises(ScdaError) as ei:
+            b.submit_write_gather([(100, b"y" * 100)], window=WW)
+        assert ei.value.code == ScdaErrorCode.FS_WRITE
+        b.close()  # delivered above: close must stay clean
+        assert b.fd == -1
+
+    def test_non_scda_write_error_converts_and_closes_fd(self, tmp_path,
+                                                         monkeypatch):
+        # A writeback job dying with a NON-ScdaError (bad buffer, memory
+        # pressure) must still surface as the foreground FS_WRITE error —
+        # never escape raw past close()'s handler and leak the fd.
+        b = FileBackend(str(tmp_path / "w.bin"), "w", create=True)
+
+        def boom(fd, bufs, off):
+            raise TypeError("synthetic non-ScdaError failure")
+
+        monkeypatch.setattr(os, "pwritev", boom)
+        b.submit_write_gather([(0, b"z" * 100)], window=WW)
+        with pytest.raises(ScdaError) as ei:
+            b.drain_writes()
+        assert ei.value.code == ScdaErrorCode.FS_WRITE
+        monkeypatch.undo()
+        b.close()
+        assert b.fd == -1
+
+
+# --------------------------------------------------------------------------
+# write_gather zero-progress accounting — incl. the small-fragment
+# pre-join path (fully-joined runs must NOT bypass the vectored path)
+# --------------------------------------------------------------------------
+
+class TestZeroProgress:
+    def test_zero_progress_large_fragments(self, tmp_path, monkeypatch):
+        b = FileBackend(str(tmp_path / "w.bin"), "w", create=True)
+        monkeypatch.setattr(os, "pwritev", lambda fd, bufs, off: 0)
+        with pytest.raises(ScdaError) as ei:
+            b.write_gather([(0, b"x" * 20000), (20000, b"y" * 20000)])
+        assert ei.value.code == ScdaErrorCode.FS_WRITE
+        monkeypatch.undo()
+        b.close()
+
+    def test_zero_progress_prejoined_small_run(self, tmp_path,
+                                               monkeypatch):
+        """A run whose fragments all pre-join used to collapse to one
+        buffer and silently take the os.pwrite path — injection (and
+        stall accounting) at the pwritev layer never saw it.  It must
+        now raise FS_WRITE through the same vectored-path guard."""
+        b = FileBackend(str(tmp_path / "w.bin"), "w", create=True)
+        calls = []
+
+        def zero(fd, bufs, off):
+            calls.append(len(bufs))
+            return 0
+
+        monkeypatch.setattr(os, "pwritev", zero)
+        small = [(i * 100, b"a" * 100) for i in range(10)]  # joins to one
+        with pytest.raises(ScdaError) as ei:
+            b.write_gather(small)
+        assert ei.value.code == ScdaErrorCode.FS_WRITE
+        assert len(calls) == MAX_ZERO_PROGRESS  # the injection DID bite
+        assert all(c == 1 for c in calls)       # ... on the joined view
+        monkeypatch.undo()
+        b.close()
+
+    def test_short_writes_resume_byte_identical(self, tmp_path,
+                                                monkeypatch):
+        real = os.pwritev
+
+        def tiny(fd, bufs, off):  # ≤3 bytes per call, resumes mid-buffer
+            return real(fd, [memoryview(bufs[0])[:3]], off)
+
+        b = FileBackend(str(tmp_path / "w.bin"), "w", create=True)
+        monkeypatch.setattr(os, "pwritev", tiny)
+        frags = [(0, b"a" * 100), (100, b"b" * 100), (200, b"c" * 56),
+                 (256, b"X" * 20000), (20256, b"d" * 10), (20266, b"e" * 10)]
+        b.write_gather(frags)
+        monkeypatch.undo()
+        b.close()
+        assert _read(str(tmp_path / "w.bin")) == \
+            b"a" * 100 + b"b" * 100 + b"c" * 56 + b"X" * 20000 \
+            + b"d" * 10 + b"e" * 10
+
+    def test_intermittent_stalls_complete(self, tmp_path, monkeypatch):
+        real = os.pwritev
+        count = [0]
+
+        def flaky(fd, bufs, off):  # a few zeros between every grain
+            count[0] += 1
+            if count[0] % 4 != 0:
+                return 0
+            return real(fd, [memoryview(bufs[0])[:512]], off)
+
+        b = FileBackend(str(tmp_path / "w.bin"), "w", create=True)
+        monkeypatch.setattr(os, "pwritev", flaky)
+        b.write_gather([(0, b"q" * 4096), (4096, b"r" * 4096)])
+        monkeypatch.undo()
+        b.close()
+        assert _read(str(tmp_path / "w.bin")) == b"q" * 4096 + b"r" * 4096
+
+
+# --------------------------------------------------------------------------
+# run_write_pipeline: serial mode is the oracle for the pipelined mode
+# --------------------------------------------------------------------------
+
+def _raw_items(payloads):
+    cursor = [0]
+    items = []
+    for i, p in enumerate(payloads):
+        def plan(payload, n=len(p)):
+            frags = [(cursor[0], payload)]
+            cursor[0] += n
+            return frags
+        items.append(WriteItem(key=i, snapshot=lambda p=p: p, plan=plan))
+    return items
+
+
+class TestRunWritePipeline:
+    def test_serial_equals_pipelined_raw(self, tmp_path):
+        rng = np.random.default_rng(1)
+        payloads = [bytes(rng.integers(0, 256, int(rng.integers(1, 40000)),
+                                       dtype=np.uint8)) for _ in range(20)]
+        out = {}
+        for window in (0, WW):
+            path = str(tmp_path / f"w{window}.bin")
+            b = FileBackend(path, "w", create=True)
+            run_write_pipeline(b, _raw_items(payloads), window)
+            b.close()
+            out[window] = _read(path)
+        assert out[0] == out[WW] == b"".join(payloads)
+
+    @pytest.mark.parametrize("nchunks", [1, 3, 17])
+    def test_serial_equals_pipelined_deflate(self, tmp_path, nchunks):
+        rng = np.random.default_rng(2)
+        chunks = [rng.standard_normal(3000).astype(np.float32).tobytes()
+                  for _ in range(nchunks)]
+
+        def make_items():
+            cursor = [0]
+
+            def plan(streams):
+                frags = []
+                for s in streams:
+                    frags.append((cursor[0], s))
+                    cursor[0] += len(s)
+                return frags
+            return [WriteItem(key=0, snapshot=lambda: chunks, plan=plan,
+                              deflate=True)]
+
+        out = {}
+        for window in (0, WW):
+            path = str(tmp_path / f"w{window}.bin")
+            b = FileBackend(path, "w", create=True)
+            run_write_pipeline(b, make_items(), window)
+            b.close()
+            out[window] = _read(path)
+        oracle = b"".join(codec.compress(c) for c in chunks)
+        assert out[0] == out[WW] == oracle
+
+    def test_plans_run_in_item_order(self, tmp_path):
+        order = []
+        cursor = [0]
+        items = []
+        for i in range(12):
+            def plan(payload, i=i):
+                order.append(i)
+                frags = [(cursor[0], payload)]
+                cursor[0] += len(payload)
+                return frags
+            items.append(WriteItem(key=i, snapshot=lambda i=i: b"%03d" % i,
+                                   plan=plan, deflate=False))
+        b = FileBackend(str(tmp_path / "w.bin"), "w", create=True)
+        run_write_pipeline(b, items, WW)
+        b.close()
+        assert order == list(range(12))
+
+    def test_raw_payloads_count_toward_byte_cap(self):
+        # Non-deflate snapshots must register their real size with the
+        # in-flight accounting — est 0 would let the engine pin
+        # depth+1 whole-leaf host copies regardless of the byte cap.
+        from repro.core.pipeline import _est_bytes
+        assert _est_bytes(b"abc") == 3
+        assert _est_bytes(memoryview(b"abcd")) == 4
+        assert _est_bytes([b"ab", memoryview(b"cde")]) == 5
+        assert _est_bytes([(0, b"ab"), (7, b"cdef")]) == 6  # window lists
+        assert _est_bytes(object()) == 0  # unsizable: depth cap only
+        gen = (b for b in [b"ab"])  # one-shot payloads must NOT be
+        assert _est_bytes(gen) == 0  # consumed before plan() sees them
+        assert list(gen) == [b"ab"]
+
+    def test_generator_payload_reaches_plan_unconsumed(self, tmp_path):
+        got = []
+
+        def plan(payload):
+            got.append(b"".join(payload))
+            return [(0, got[-1])]
+
+        items = [WriteItem(key=0, snapshot=lambda: (c for c in
+                                                    [b"he", b"llo"]),
+                           plan=plan)]
+        b = FileBackend(str(tmp_path / "w.bin"), "w", create=True)
+        run_write_pipeline(b, items, WW)
+        b.close()
+        assert got == [b"hello"]
+        assert _read(str(tmp_path / "w.bin")) == b"hello"
+
+    def test_error_in_plan_drains_cleanly(self, tmp_path):
+        items = _raw_items([b"x" * 100] * 8)
+
+        def bad_plan(payload):
+            raise ScdaError(ScdaErrorCode.ARG_DATA_SIZE, "injected")
+
+        items[3] = WriteItem(key=3, snapshot=lambda: b"y",
+                             plan=bad_plan)
+        b = FileBackend(str(tmp_path / "w.bin"), "w", create=True)
+        with pytest.raises(ScdaError) as ei:
+            run_write_pipeline(b, items, WW)
+        assert ei.value.code == ScdaErrorCode.ARG_DATA_SIZE
+        assert b.pending_write_bytes() == 0  # quiesced before raising
+        b.close()
+
+
+# --------------------------------------------------------------------------
+# Checkpoint save: pipelined file bytes == serial write oracle (fuzzed)
+# --------------------------------------------------------------------------
+
+def _fuzz_tree(rng, max_leaves=6):
+    dtypes = [np.float32, np.float64, np.int32, np.uint8, np.int16]
+    tree = {}
+    n = int(rng.integers(1, max_leaves + 1))
+    for i in range(n):
+        kind = int(rng.integers(0, 4))
+        dt = dtypes[int(rng.integers(0, len(dtypes)))]
+        if kind == 0:  # empty
+            shape = (0, int(rng.integers(1, 5)))
+        elif kind == 1:  # scalar-ish
+            shape = ()
+        elif kind == 2:  # 1-D, deliberately odd length
+            shape = (int(rng.integers(1, 50000)),)
+        else:  # small N-D
+            shape = tuple(int(rng.integers(1, 40))
+                          for _ in range(int(rng.integers(2, 4))))
+        if np.issubdtype(dt, np.floating):
+            val = rng.standard_normal(shape).astype(dt)
+        else:
+            val = rng.integers(0, 100, shape).astype(dt)
+        tree[f"leaf{i}"] = val
+    tree["aux_lr"] = 0.5
+    return tree
+
+
+@pytest.mark.parametrize("P", [1, 2, 4, 8])
+def test_save_byte_identity_raw_fuzzed(tmp_path, P):
+    rng = np.random.default_rng(100 + P)
+    for trial in range(3):
+        tree = _fuzz_tree(rng)
+        oracle = str(tmp_path / f"oracle{trial}.scda")
+        pytree_io.save(oracle, tree, step=trial, write_window=0)
+        piped = str(tmp_path / f"piped{trial}.scda")
+
+        def workload(comm):
+            pytree_io.save(piped, tree, step=trial, comm=comm,
+                           write_window=WW)
+        run_ranks(ThreadComm.group(P), workload)
+        assert _read(piped) == _read(oracle), \
+            f"trial {trial}: pipelined save differs from oracle at P={P}"
+
+
+def test_save_byte_identity_compressed_fuzzed(tmp_path):
+    rng = np.random.default_rng(7)
+    for trial in range(4):
+        tree = _fuzz_tree(rng)
+        chunk = int(rng.integers(1, 3)) << int(rng.integers(10, 14))
+        a = str(tmp_path / f"o{trial}.scda")
+        b = str(tmp_path / f"p{trial}.scda")
+        pytree_io.save(a, tree, compressed=True, chunk_bytes=chunk,
+                       write_window=0)
+        pytree_io.save(b, tree, compressed=True, chunk_bytes=chunk,
+                       write_window=WW)
+        assert _read(a) == _read(b), f"trial {trial} chunk={chunk}"
+        out, _ = pytree_io.restore(b)
+        for k, v in tree.items():
+            if isinstance(v, np.ndarray):
+                np.testing.assert_array_equal(out[k], v)
+
+
+def test_write_pipeline_env_knob(tmp_path, monkeypatch):
+    tree = {"w": np.arange(10000, dtype=np.float32)}
+    monkeypatch.setenv("REPRO_SCDA_WRITE_PIPELINE", "0")
+    assert write_pipeline_window() == 0
+    a = str(tmp_path / "a.scda")
+    pytree_io.save(a, tree)
+    monkeypatch.setenv("REPRO_SCDA_WRITE_PIPELINE", str(WW))
+    assert write_pipeline_window() == WW
+    b = str(tmp_path / "b.scda")
+    pytree_io.save(b, tree)
+    assert _read(a) == _read(b)
+
+
+def test_short_write_parity_checkpoint(tmp_path, monkeypatch):
+    """Partial pwritev returns mid-save: both modes must still produce
+    the identical (correct) file — the resume path is byte-transparent
+    under the pipeline too."""
+    real = os.pwritev
+    tree = {"w": np.arange(30000, dtype=np.float32),
+            "b": np.ones((100,), np.float64)}
+
+    def clipped(fd, bufs, off):
+        return real(fd, [memoryview(bufs[0])[:1024]], off)
+
+    files = {}
+    for ww in (0, WW):
+        path = str(tmp_path / f"ck{ww}.scda")
+        monkeypatch.setattr(os, "pwritev", clipped)
+        pytree_io.save(path, tree, write_window=ww)
+        monkeypatch.undo()
+        files[ww] = _read(path)
+    assert files[0] == files[WW]
+    out, _ = pytree_io.restore(str(tmp_path / f"ck{WW}.scda"))
+    np.testing.assert_array_equal(out["w"], tree["w"])
+
+
+@pytest.mark.parametrize("compressed", [False, True])
+@pytest.mark.parametrize("ww", [0, WW])
+def test_write_error_parity_and_tmp_cleanup(tmp_path, monkeypatch,
+                                            compressed, ww):
+    """An injected device failure mid-save must (a) raise the same
+    FS_WRITE ScdaError in serial and pipelined modes, (b) leave no
+    visible checkpoint and no .tmp file behind, (c) leak no futures."""
+    real = os.pwritev
+    calls = [0]
+
+    def failing(fd, bufs, off):
+        calls[0] += 1
+        if calls[0] > 2:  # let the status/manifest through, then die
+            raise OSError(28, "No space left on device")
+        return real(fd, bufs, off)
+
+    monkeypatch.setenv("REPRO_SCDA_WRITE_PIPELINE", str(ww))
+    mgr = CheckpointManager(str(tmp_path / "ckpts"), compressed=compressed)
+    tree = {"w": np.arange(200000, dtype=np.float32)}
+    monkeypatch.setattr(os, "pwritev", failing)
+    with pytest.raises(ScdaError) as ei:
+        mgr.save(5, tree, blocking=True)
+    monkeypatch.undo()
+    assert ei.value.code == ScdaErrorCode.FS_WRITE
+    assert mgr.all_steps() == []  # atomic-rename invariant held
+    leftovers = [n for n in os.listdir(str(tmp_path / "ckpts"))
+                 if n.endswith(".tmp")]
+    assert leftovers == []  # failed save cleans its temp file
+
+
+def test_interrupted_save_leaves_no_visible_checkpoint(tmp_path):
+    """A save that dies mid-pipeline (after the data is written, before
+    the commit) must not surface a visible checkpoint."""
+    mgr = CheckpointManager(str(tmp_path / "ckpts"))
+    mgr._crash_before_commit = True
+    with pytest.raises(RuntimeError):
+        mgr.save(3, {"w": np.arange(1000, dtype=np.float32)},
+                 blocking=True)
+    assert mgr.all_steps() == []
+    mgr._crash_before_commit = False
+    mgr.save(4, {"w": np.arange(1000, dtype=np.float32)}, blocking=True)
+    assert mgr.all_steps() == [4]
+
+
+# --------------------------------------------------------------------------
+# Save under pressure
+# --------------------------------------------------------------------------
+
+def test_concurrent_save_and_restore_same_manager(tmp_path):
+    """An async (pipelined) save of step N+1 racing restores of step N on
+    the same manager: the restore must see only complete checkpoints and
+    every byte must verify after the dust settles."""
+    mgr = CheckpointManager(str(tmp_path / "ckpts"), keep=5)
+    trees = {s: {"w": np.full((50000,), s, np.float32),
+                 "m": np.arange(s * 1000 + 1, dtype=np.float64)}
+             for s in (1, 2, 3)}
+    mgr.save(1, trees[1], blocking=True)
+
+    stop = threading.Event()
+    failures = []
+
+    def reader():
+        while not stop.is_set():
+            try:
+                out, step = mgr.restore_latest()
+            except ScdaError as e:  # never acceptable: files are atomic
+                failures.append(repr(e))
+                return
+            w = out["w"]
+            if not (w == w[0]).all() or int(w[0]) != step:
+                failures.append(f"torn read at step {step}")
+                return
+
+    t = threading.Thread(target=reader)
+    t.start()
+    try:
+        for s in (2, 3):
+            mgr.save(s, trees[s])  # async, overlapped engine
+            mgr.wait()
+    finally:
+        stop.set()
+        t.join()
+    assert failures == []
+    for s in (1, 2, 3):
+        out, step = mgr.restore(s)
+        assert step == s
+        np.testing.assert_array_equal(out["w"], trees[s]["w"])
+        np.testing.assert_array_equal(out["m"], trees[s]["m"])
+
+
+def test_save_while_restoring_same_file_contents(tmp_path):
+    """Pipelined save and pipelined restore share the codec pool; a save
+    running while a restore streams the previous checkpoint must corrupt
+    neither."""
+    a = str(tmp_path / "a.scda")
+    b = str(tmp_path / "b.scda")
+    tree_a = {"w": np.arange(100000, dtype=np.float32)}
+    tree_b = {"w": np.arange(100000, dtype=np.float32) * 2.0}
+    pytree_io.save(a, tree_a, compressed=True, chunk_bytes=1 << 14)
+
+    out = {}
+
+    def saver():
+        pytree_io.save(b, tree_b, compressed=True, chunk_bytes=1 << 14,
+                       write_window=WW)
+
+    def restorer():
+        out["a"], _ = pytree_io.restore(a)
+
+    ts = [threading.Thread(target=saver), threading.Thread(target=restorer)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    np.testing.assert_array_equal(out["a"]["w"], tree_a["w"])
+    got, _ = pytree_io.restore(b)
+    np.testing.assert_array_equal(got["w"], tree_b["w"])
+    # and the racing save still produced oracle bytes
+    oracle = str(tmp_path / "oracle.scda")
+    pytree_io.save(oracle, tree_b, compressed=True, chunk_bytes=1 << 14,
+                   write_window=0)
+    assert _read(b) == _read(oracle)
