@@ -1,0 +1,78 @@
+"""Append-path costs (the mode-'a' subsystem):
+
+  * journal append rate — records/s end-to-end through ``ScdaJournal``:
+    buffered ``log`` → framed-varray flush via ``fopen_append`` (tail
+    validation included), with and without the incremental atomic
+    ``.scdax`` refresh each flush performs;
+  * reopen-validate latency — what ``fopen_append`` pays before the first
+    appended byte, full header walk vs the sidecar fast path (which
+    re-validates only the last section).
+"""
+import os
+import statistics
+import tempfile
+import time
+
+from repro.core import ScdaIndex, fopen_append, fopen_write
+from repro.journal import ScdaJournal
+
+
+def _time(fn, n=10):
+    fn()  # warmup
+    samples = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        samples.append(time.perf_counter() - t0)
+    return statistics.median(samples) * 1e6
+
+
+def _journal_rate(path, nrec, flush, update_sidecar):
+    j = ScdaJournal(path, flush_records=flush,
+                    update_sidecar=update_sidecar)
+    rec = {"loss": 1.0, "lr": 1e-3, "step_time": 0.123, "tokens": 4096}
+    t0 = time.perf_counter()
+    for s in range(nrec):
+        j.log(s, rec)
+    j.flush()
+    dt = time.perf_counter() - t0
+    return dt / nrec * 1e6, nrec / dt
+
+
+def run(quick=False):
+    rows = []
+    nsec = 50 if quick else 300
+    nrec = 200 if quick else 2000
+    flush = 50
+    with tempfile.TemporaryDirectory() as d:
+        # -- journal append rate ------------------------------------------
+        path = os.path.join(d, "journal.scda")
+        with fopen_write(None, path, user_string=b"bench append") as f:
+            f.write_block(b"base", b"x" * 1024)
+        us, rate = _journal_rate(path, nrec, flush, update_sidecar=False)
+        rows.append(("append.journal_log_flush", us,
+                     f"{rate:.0f}records/s flush_every={flush}"))
+        ScdaIndex.build(path).write_sidecar()
+        us, rate = _journal_rate(path, nrec, flush, update_sidecar=True)
+        rows.append(("append.journal_log_flush_sidecar", us,
+                     f"{rate:.0f}records/s incl. incremental .scdax "
+                     f"refresh"))
+
+        # -- reopen-validate latency --------------------------------------
+        many = os.path.join(d, "many.scda")
+        with fopen_write(None, many, user_string=b"bench append") as f:
+            for i in range(nsec):
+                f.write_block(b"sec %06d" % i, b"y" * 256)
+
+        def reopen():
+            fopen_append(None, many).close()
+
+        scan_us = _time(reopen)
+        rows.append((f"append.reopen_scan_{nsec}", scan_us,
+                     "full header walk"))
+        ScdaIndex.build(many).write_sidecar()
+        sidecar_us = _time(reopen)
+        rows.append((f"append.reopen_sidecar_{nsec}", sidecar_us,
+                     f"last-section check only, speedup="
+                     f"{scan_us / max(sidecar_us, 1e-9):.1f}x"))
+    return rows

@@ -39,6 +39,7 @@ def _distill(rows, quick: bool) -> dict:
         "index": {},
         "restore_MBps": {},
         "save_MBps": {},
+        "append": {},
     }
     for name, us, derived in rows:
         m = re.match(r"parallel_io\.(write|read|write_sync)_p(\d+)", name)
@@ -69,6 +70,16 @@ def _distill(rows, quick: bool) -> dict:
             if m2:
                 out[f"{group}_MBps"][key.split("_")[-1]
                                      + "_speedup_x"] = float(m2.group(1))
+        elif name.startswith("append."):
+            # strip the section-count suffix so quick/full keys align
+            key = re.sub(r"_\d+$", "", name.split(".", 1)[1])
+            out["append"][key + "_us"] = round(us, 1)
+            m2 = re.search(r"(\d+(?:\.\d+)?)records/s", derived)
+            if m2:
+                out["append"][key + "_records_s"] = float(m2.group(1))
+            m2 = re.search(r"speedup=(\d+(?:\.\d+)?)x", derived)
+            if m2:
+                out["append"]["reopen_speedup_x"] = float(m2.group(1))
         elif name.startswith("index."):
             # strip the section-count suffix so quick/full keys align
             key = re.sub(r"_\d+$", "", name.split(".", 1)[1])
@@ -89,10 +100,10 @@ def main() -> None:
                     help="also write the I/O trajectory (BENCH_io schema)")
     args = ap.parse_args()
 
-    from benchmarks import (bench_checkpoint, bench_compression,
-                            bench_format, bench_index, bench_iovec,
-                            bench_parallel_io, bench_restore, bench_save,
-                            bench_roofline)
+    from benchmarks import (bench_append, bench_checkpoint,
+                            bench_compression, bench_format, bench_index,
+                            bench_iovec, bench_parallel_io, bench_restore,
+                            bench_save, bench_roofline)
     suites = [
         ("format", bench_format.run),
         ("parallel_io", bench_parallel_io.run),
@@ -102,6 +113,7 @@ def main() -> None:
         ("checkpoint", bench_checkpoint.run),
         ("restore", bench_restore.run),
         ("save", bench_save.run),
+        ("append", bench_append.run),
         ("roofline", bench_roofline.run),
     ]
     only = [s for s in args.only.split(",") if s]

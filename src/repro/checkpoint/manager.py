@@ -16,6 +16,11 @@ errors should never crash the simulation"):
     file does not know or care how many hosts wrote it.
   * **Retention**: keep the newest ``keep`` checkpoints (always ≥ 1), so a
     corrupted latest file can fall back to an older one.
+  * **Journaled**: :meth:`CheckpointManager.journal` streams training
+    telemetry (loss/lr/eval scalars) into the newest committed checkpoint
+    file via mode-'a' appends; buffered records are flushed right after
+    every commit (flush-on-commit ordering), so the archive that holds
+    the state also holds the metrics that led to it.
 """
 from __future__ import annotations
 
@@ -67,6 +72,7 @@ class CheckpointManager:
         self.index_sidecar = index_sidecar
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
+        self._journal = None  # lazy ScdaJournal (see journal())
         self._crash_before_commit = False  # test hook: simulated node death
         if self.comm.rank == 0:
             os.makedirs(directory, exist_ok=True)
@@ -88,6 +94,30 @@ class CheckpointManager:
 
     def path_for(self, step: int) -> str:
         return os.path.join(self.directory, _ckpt_name(step))
+
+    # -- journaling ----------------------------------------------------------
+    def journal(self):
+        """The run's telemetry journal (:class:`repro.journal.ScdaJournal`).
+
+        ``journal().log(step, scalars)`` buffers records; they are
+        appended to the newest *committed* checkpoint file — immediately
+        when the auto-flush threshold trips, and in any case right after
+        every commit, re-targeted at the fresh file (flush-on-commit:
+        telemetry logged before ``save(step)`` is on disk inside
+        ``step``'s archive once that save commits).  Before the first
+        commit records simply buffer.  Rank 0 only, like the sidecars —
+        metrics are replicated, the file needs them once, so every other
+        rank gets an inert journal (log is a no-op there) and replicated
+        training code may log unconditionally.  Note retention applies:
+        journal history lives in the retained checkpoint files.
+        """
+        if self._journal is None:
+            from repro.journal import ScdaJournal
+            latest = self.latest_step()
+            self._journal = ScdaJournal(
+                self.path_for(latest) if latest is not None else None,
+                enabled=self.comm.rank == 0)
+        return self._journal
 
     # -- saving ----------------------------------------------------------------
     def save(self, step: int, tree, *, blocking: bool = False,
@@ -146,6 +176,17 @@ class CheckpointManager:
                 # header scan when the sidecar is missing or stale.
                 try:
                     ScdaIndex.build(final).write_sidecar()
+                except (ScdaError, OSError):
+                    pass
+            if self._journal is not None:
+                # Flush-on-commit: buffered telemetry follows the newest
+                # checkpoint into its file (and refreshes the sidecar it
+                # just grew past, atomically).  Best-effort like the
+                # sidecar — a failed flush keeps the records buffered
+                # for the next commit, never un-commits the checkpoint.
+                self._journal.retarget(final)
+                try:
+                    self._journal.flush()
                 except (ScdaError, OSError):
                     pass
             self._apply_retention()

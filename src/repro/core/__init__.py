@@ -23,7 +23,8 @@ from repro.core import spec, encode, codec, partition, pipeline
 from repro.core.comm import (Communicator, SerialComm, ThreadComm,
                              JaxProcessComm, run_ranks)
 from repro.core.io_backend import FileBackend
-from repro.core.writer import ScdaWriter, fopen_write, DEFAULT_VENDOR
+from repro.core.writer import (ScdaWriter, fopen_write, fopen_append,
+                               DEFAULT_VENDOR)
 from repro.core.reader import (ScdaReader, SectionHeader, fopen_read,
                                scan_sections)
 from repro.core.index import IndexEntry, ScdaIndex
@@ -33,7 +34,7 @@ __all__ = [
     "spec", "encode", "codec", "partition", "pipeline",
     "Communicator", "SerialComm", "ThreadComm", "JaxProcessComm",
     "run_ranks", "FileBackend",
-    "ScdaWriter", "fopen_write", "DEFAULT_VENDOR",
+    "ScdaWriter", "fopen_write", "fopen_append", "DEFAULT_VENDOR",
     "ScdaReader", "SectionHeader", "fopen_read", "scan_sections",
     "IndexEntry", "ScdaIndex",
 ]

@@ -70,15 +70,30 @@ _ERROR_STRINGS = {
 
 
 class ScdaError(Exception):
-    """Exception carrying an scda error code (paper §A.6)."""
+    """Exception carrying an scda error code (paper §A.6).
 
-    def __init__(self, code: ScdaErrorCode, detail: str = ""):
+    ``offset``, when known, is the absolute file offset of the first byte
+    that failed validation — ``scdatool fsck`` and the mode-'a' tail
+    validation surface it so "trailing garbage" findings point at the
+    exact boundary instead of just the enclosing section.
+    """
+
+    def __init__(self, code: ScdaErrorCode, detail: str = "",
+                 offset: "int | None" = None):
         self.code = ScdaErrorCode(code)
         self.detail = detail
+        self.offset = offset
         msg = ferror_string(self.code)
         if detail:
             msg = f"{msg}: {detail}"
         super().__init__(msg)
+
+    def at(self, offset: int) -> "ScdaError":
+        """Attach ``offset`` if none is recorded yet (callers lower in the
+        stack know the tighter position; never overwrite it)."""
+        if self.offset is None:
+            self.offset = offset
+        return self
 
     @property
     def group(self) -> int:

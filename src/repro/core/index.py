@@ -145,8 +145,16 @@ class ScdaIndex:
     @classmethod
     def _build_from(cls, r) -> "ScdaIndex":
         r._backend.advise(0, r._file_size, "sequential")
-        entries: List[IndexEntry] = []
+        r._pending = None
         r.cursor = spec.FILE_HEADER_BYTES
+        return cls(path=r.path, file_size=r._file_size,
+                   scda_version=r.version, vendor=r.vendor,
+                   user_string=r.user_string, entries=cls._scan_entries(r))
+
+    @staticmethod
+    def _scan_entries(r) -> List[IndexEntry]:
+        """Header-only walk from the reader's current cursor to EOF."""
+        entries: List[IndexEntry] = []
         while not r.at_eof:
             start = r.cursor
             hdr = r.read_section_header(decode=True)
@@ -160,9 +168,68 @@ class ScdaIndex:
                 v_entries_start=p.v_entries_start,
                 v_data_start=p.v_data_start, raw_E=p.raw_E,
                 payload_bytes=p.total_bytes or 0))
-        return cls(path=r.path, file_size=r._file_size,
-                   scda_version=r.version, vendor=r.vendor,
-                   user_string=r.user_string, entries=entries)
+        return entries
+
+    # -- incremental refresh (the mode-'a' append path) -----------------------
+    def staleness(self) -> str:
+        """Cheap size-probe classification of this index vs. the file now.
+
+        ``"fresh"`` — sizes match (per-seek header checks still guard
+        same-size rewrites, as always); ``"grew"`` — the file gained
+        bytes, so :meth:`extend` can scan just the appended suffix;
+        ``"rewritten"`` — the file shrank or vanished, only a full
+        rebuild can describe it.
+        """
+        try:
+            size = os.stat(self.path).st_size
+        except OSError:
+            return "rewritten"
+        if size == self.file_size:
+            return "fresh"
+        return "grew" if size > self.file_size else "rewritten"
+
+    def extend(self, source=None) -> "ScdaIndex":
+        """Refresh this index against the file as it stands now.
+
+        The incremental mirror of :meth:`build` for appendable archives:
+        a file that merely *grew* (mode-'a' appends, journal flushes) is
+        scanned only over the appended suffix — the existing entries
+        describe bytes that did not move — after re-verifying the last
+        indexed section's on-disk header, so a rewrite that happens to be
+        larger can never smuggle stale offsets through.  A shrunk,
+        rewritten, or header-changed file falls back to a full rebuild.
+        Returns ``self`` unchanged when the file did not change size, a
+        new :class:`ScdaIndex` otherwise; existing entries (checksums
+        included) are preserved across a suffix scan.  Raises the
+        reader's CORRUPT_* errors if the appended suffix is invalid.
+        """
+        from repro.core.reader import ScdaReader, fopen_read
+        if source is None or not isinstance(source, ScdaReader):
+            with fopen_read(None, source or self.path) as r:
+                return self._extend_from(r)
+        return self._extend_from(source)
+
+    def _extend_from(self, r) -> "ScdaIndex":
+        if (r._file_size < self.file_size
+                or r.version != self.scda_version
+                or r.vendor != self.vendor
+                or r.user_string != self.user_string):
+            return ScdaIndex._build_from(r)
+        if self.entries:
+            last = self.entries[-1]
+            try:
+                r.verify_index_entry(len(self.entries) - 1, last)
+            except ScdaError:
+                return ScdaIndex._build_from(r)
+        if r._file_size == self.file_size:
+            return self
+        r._pending = None
+        r.cursor = self.entries[-1].end if self.entries \
+            else spec.FILE_HEADER_BYTES
+        suffix = self._scan_entries(r)
+        out = dataclasses.replace(self, file_size=r._file_size,
+                                  entries=self.entries + suffix)
+        return out
 
     # -- lookup ---------------------------------------------------------------
     def find(self, user_string: bytes, occurrence: int = 0) -> int:
@@ -197,9 +264,11 @@ class ScdaIndex:
             raise ScdaError(ScdaErrorCode.FS_READ,
                             f"{self.path}: {e}") from e
         if size != self.file_size:
+            how = "grew (extend can re-scan the suffix)" if \
+                size > self.file_size else "was rewritten or truncated"
             raise ScdaError(ScdaErrorCode.CORRUPT_TRUNCATED,
                             f"stale index: file is {size} bytes, index "
-                            f"recorded {self.file_size}")
+                            f"recorded {self.file_size} — the file {how}")
         if deep:
             fresh = ScdaIndex.build(self.path)
             if fresh.entries != self.entries:
@@ -244,20 +313,27 @@ class ScdaIndex:
                 crc = zlib.crc32(chunk, crc)
         return crc
 
-    def with_checksums(self, reader=None) -> "ScdaIndex":
+    def with_checksums(self, reader=None,
+                       only_missing: bool = False) -> "ScdaIndex":
         """A copy of this index with every entry's ``crc32`` computed.
 
         ``scdatool index --checksums`` writes the result as the sidecar:
         a checksum manifest that lets ``scdatool verify`` validate the
         archive later without a reference copy (ROADMAP open item).
+
+        ``only_missing`` re-checksums nothing that already has a CRC —
+        after :meth:`extend` only the appended sections lack one, so an
+        incremental sidecar refresh costs one decode pass over the
+        *suffix*, not the archive.
         """
         from repro.core.reader import fopen_read
         if reader is None:
             with fopen_read(None, self.path) as r:
-                return self.with_checksums(r)
+                return self.with_checksums(r, only_missing=only_missing)
         reader.set_index(self)
-        entries = [dataclasses.replace(e,
-                                       crc32=self._section_crc(reader, i))
+        entries = [e if only_missing and e.crc32 is not None
+                   else dataclasses.replace(
+                       e, crc32=self._section_crc(reader, i))
                    for i, e in enumerate(self.entries)]
         return dataclasses.replace(self, entries=entries)
 
@@ -400,20 +476,58 @@ class ScdaIndex:
         return idx
 
     @classmethod
+    def refresh_sidecar(cls, path: str, sidecar: Optional[str] = None,
+                        checksums: Optional[bool] = None) \
+            -> Optional["ScdaIndex"]:
+        """Incrementally refresh ``path``'s sidecar after an append.
+
+        Returns the refreshed index, or None when no sidecar exists (an
+        archive that never had one keeps not having one — readers scan).
+        A sidecar stale because the file *grew* is extended by a suffix
+        scan; a rewritten file gets a full rebuild; the replacement write
+        is atomic (temp + rename), so concurrent readers only ever see a
+        complete sidecar.  ``checksums=None`` preserves the manifest
+        property: if the old sidecar recorded payload CRCs, the appended
+        sections are checksummed too (suffix-only decode pass), so
+        ``scdatool verify`` keeps covering the whole file.
+        """
+        sp = sidecar or path + SIDECAR_SUFFIX
+        if not os.path.exists(sp):
+            return None
+        old = cls.load_sidecar(path, sidecar, verify=False)
+        idx = old.extend()
+        want_crcs = checksums if checksums is not None \
+            else (bool(old.entries) and old.has_checksums())
+        if want_crcs and not idx.has_checksums():
+            idx = idx.with_checksums(only_missing=True)
+        idx.write_sidecar(sidecar)
+        return idx
+
+    @classmethod
     def cached(cls, path: str, comm: Optional[Communicator] = None,
                write: bool = True,
                sidecar: Optional[str] = None) -> "ScdaIndex":
         """The standard entry point: sidecar if fresh, else scan (and cache).
 
-        A missing, stale, or corrupt sidecar silently falls back to a fresh
-        header-only scan; with ``write``, rank 0 then refreshes the sidecar
-        best-effort (an unwritable directory never fails the read path).
+        A sidecar stale only because the file grew (mode-'a' appends) is
+        extended with a suffix-only scan; a missing, rewritten, or
+        corrupt sidecar falls back to a fresh header-only scan.  With
+        ``write``, rank 0 then refreshes the sidecar best-effort (an
+        unwritable directory never fails the read path).
         """
         try:
             return cls.load_sidecar(path, sidecar)
         except (ScdaError, OSError):
             pass
-        idx = cls.build(path)
+        idx = None
+        try:
+            # Suffix-scan fast path for grown files; extend() degrades to
+            # a full rebuild for rewritten ones all by itself.
+            idx = cls.load_sidecar(path, sidecar, verify=False).extend()
+        except (ScdaError, OSError):
+            idx = None
+        if idx is None:
+            idx = cls.build(path)
         if write and (comm is None or comm.rank == 0):
             try:
                 idx.write_sidecar(sidecar)

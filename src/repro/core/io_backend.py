@@ -137,6 +137,13 @@ class FileBackend:
             flags = os.O_RDWR | os.O_CREAT
             if create:
                 flags |= os.O_TRUNC
+        elif mode == "a":
+            # fopen('a') semantics: the file must already exist and is
+            # never truncated at open — the writer validates the tail and
+            # resumes its cursor there.  Reads (tail checks, probes) and
+            # positioned writes both work on the one descriptor; the
+            # writeback executor is available exactly as in mode 'w'.
+            flags = os.O_RDWR
         try:
             self.fd = os.open(path, flags, 0o644)
         except OSError as e:
@@ -413,7 +420,8 @@ class FileBackend:
             if len(cache) < n:
                 raise ScdaError(
                     ScdaErrorCode.CORRUPT_TRUNCATED,
-                    f"{self.path}: EOF at {offset + len(cache)}, wanted {n}")
+                    f"{self.path}: EOF at {offset + len(cache)}, wanted {n}",
+                    offset=offset + len(cache))
             return cache[:n]
         return self._pread_exact(offset, n)
 
@@ -422,7 +430,8 @@ class FileBackend:
         if len(out) < n:
             raise ScdaError(
                 ScdaErrorCode.CORRUPT_TRUNCATED,
-                f"{self.path}: EOF at {offset + len(out)}, wanted {n}")
+                f"{self.path}: EOF at {offset + len(out)}, wanted {n}",
+                offset=offset + len(out))
         return out
 
     def _pread_upto(self, offset: int, n: int) -> bytes:
@@ -511,7 +520,8 @@ class FileBackend:
         if got < total:
             raise ScdaError(
                 ScdaErrorCode.CORRUPT_TRUNCATED,
-                f"{self.path}: EOF at {offset + got}, wanted {total}")
+                f"{self.path}: EOF at {offset + got}, wanted {total}",
+                offset=offset + got)
 
     def read_extents(self, extents: Sequence[Tuple[int, int]]) \
             -> List[BytesLike]:

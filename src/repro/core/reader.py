@@ -79,6 +79,25 @@ class ScdaReader:
     def at_eof(self) -> bool:
         return self._pending is None and self.cursor >= self._file_size
 
+    # -- parse helpers carrying exact offsets ---------------------------------
+    def _header_at(self, off: int):
+        """Parse the 64-byte section header at ``off``; a parse failure
+        carries the exact byte offset (``ScdaError.offset``) so fsck and
+        mode-'a' tail validation can point at the failing byte."""
+        try:
+            return spec.parse_section_header(
+                self._backend.pread(off, spec.SECTION_HEADER_BYTES))
+        except ScdaError as e:
+            raise e.at(off)
+
+    def _entry_at(self, off: int, letter: bytes) -> int:
+        """Parse the 32-byte count entry at ``off``, offset-attributed."""
+        try:
+            return spec.parse_count_entry(
+                self._backend.pread(off, spec.COUNT_ENTRY_BYTES), letter)
+        except ScdaError as e:
+            raise e.at(off)
+
     # -- section header (§A.5.1) --------------------------------------------
     def read_section_header(self, decode: bool = True) -> SectionHeader:
         self._check_open()
@@ -87,11 +106,11 @@ class ScdaReader:
                             "previous section's data not consumed")
         if self.at_eof:
             raise ScdaError(ScdaErrorCode.ARG_SEQUENCE, "at end of file")
-        letter, user = spec.parse_section_header(
-            self._backend.pread(self.cursor, spec.SECTION_HEADER_BYTES))
+        letter, user = self._header_at(self.cursor)
         t = letter.decode("ascii")
         if letter not in spec.SECTION_TYPES:
-            raise ScdaError(ScdaErrorCode.CORRUPT_SECTION_TYPE, repr(letter))
+            raise ScdaError(ScdaErrorCode.CORRUPT_SECTION_TYPE, repr(letter),
+                            offset=self.cursor)
         if decode and letter == b"I" and user in (codec.MAGIC_BLOCK,
                                                   codec.MAGIC_ARRAY):
             return self._begin_decoded_inline(user)
@@ -105,23 +124,18 @@ class ScdaReader:
             hdr = SectionHeader("I", user)
             self._pending = _Pending("I", hdr, data_start=cur)
         elif t == "B":
-            E = spec.parse_count_entry(
-                self._backend.pread(cur, spec.COUNT_ENTRY_BYTES), b"E")
+            E = self._entry_at(cur, b"E")
             hdr = SectionHeader("B", user, E=E)
             self._pending = _Pending(
                 "B", hdr, data_start=cur + spec.COUNT_ENTRY_BYTES)
         elif t == "A":
-            N = spec.parse_count_entry(
-                self._backend.pread(cur, spec.COUNT_ENTRY_BYTES), b"N")
-            E = spec.parse_count_entry(
-                self._backend.pread(cur + spec.COUNT_ENTRY_BYTES,
-                                    spec.COUNT_ENTRY_BYTES), b"E")
+            N = self._entry_at(cur, b"N")
+            E = self._entry_at(cur + spec.COUNT_ENTRY_BYTES, b"E")
             hdr = SectionHeader("A", user, N=N, E=E)
             self._pending = _Pending(
                 "A", hdr, data_start=cur + 2 * spec.COUNT_ENTRY_BYTES)
         else:  # V
-            N = spec.parse_count_entry(
-                self._backend.pread(cur, spec.COUNT_ENTRY_BYTES), b"N")
+            N = self._entry_at(cur, b"N")
             hdr = SectionHeader("V", user, N=N)
             entries = cur + spec.COUNT_ENTRY_BYTES
             self._pending = _Pending(
@@ -135,24 +149,23 @@ class ScdaReader:
             self.cursor + spec.SECTION_HEADER_BYTES, spec.INLINE_DATA_BYTES)
         U = codec.parse_uncompressed_size_entry(udata)
         second = self.cursor + spec.INLINE_SECTION_BYTES
-        letter, user = spec.parse_section_header(
-            self._backend.pread(second, spec.SECTION_HEADER_BYTES))
+        letter, user = self._header_at(second)
         cur = second + spec.SECTION_HEADER_BYTES
         if magic == codec.MAGIC_BLOCK:
             if letter != b"B":
                 raise ScdaError(ScdaErrorCode.CORRUPT_ENCODING,
-                                f"expected B after {magic!r}, got {letter!r}")
-            cE = spec.parse_count_entry(
-                self._backend.pread(cur, spec.COUNT_ENTRY_BYTES), b"E")
+                                f"expected B after {magic!r}, got {letter!r}",
+                                offset=second)
+            cE = self._entry_at(cur, b"E")
             hdr = SectionHeader("B", user, E=U, decoded=True)
             self._pending = _Pending(
                 "zB", hdr, data_start=cur + spec.COUNT_ENTRY_BYTES, raw_E=cE)
         else:  # MAGIC_ARRAY → logical fixed-size array carried by a V
             if letter != b"V":
                 raise ScdaError(ScdaErrorCode.CORRUPT_ENCODING,
-                                f"expected V after {magic!r}, got {letter!r}")
-            N = spec.parse_count_entry(
-                self._backend.pread(cur, spec.COUNT_ENTRY_BYTES), b"N")
+                                f"expected V after {magic!r}, got {letter!r}",
+                                offset=second)
+            N = self._entry_at(cur, b"N")
             hdr = SectionHeader("A", user, N=N, E=U, decoded=True)
             entries = cur + spec.COUNT_ENTRY_BYTES
             self._pending = _Pending(
@@ -163,28 +176,26 @@ class ScdaReader:
     def _begin_decoded_varray(self) -> SectionHeader:
         """§3.4 — A(magic, N, 32, U-entries) followed by the carrier V."""
         cur = self.cursor + spec.SECTION_HEADER_BYTES
-        N = spec.parse_count_entry(
-            self._backend.pread(cur, spec.COUNT_ENTRY_BYTES), b"N")
-        E = spec.parse_count_entry(
-            self._backend.pread(cur + spec.COUNT_ENTRY_BYTES,
-                                spec.COUNT_ENTRY_BYTES), b"E")
+        N = self._entry_at(cur, b"N")
+        E = self._entry_at(cur + spec.COUNT_ENTRY_BYTES, b"E")
         if E != spec.COUNT_ENTRY_BYTES:
             raise ScdaError(ScdaErrorCode.CORRUPT_ENCODING,
-                            f"U-entry array has E={E}, expected 32")
+                            f"U-entry array has E={E}, expected 32",
+                            offset=cur + spec.COUNT_ENTRY_BYTES)
         u_entries = cur + 2 * spec.COUNT_ENTRY_BYTES
         second = u_entries + spec.padded_data_bytes(
             N * spec.COUNT_ENTRY_BYTES)
-        letter, user = spec.parse_section_header(
-            self._backend.pread(second, spec.SECTION_HEADER_BYTES))
+        letter, user = self._header_at(second)
         if letter != b"V":
             raise ScdaError(ScdaErrorCode.CORRUPT_ENCODING,
-                            f"expected V after U-entry array, got {letter!r}")
+                            f"expected V after U-entry array, got {letter!r}",
+                            offset=second)
         vcur = second + spec.SECTION_HEADER_BYTES
-        vN = spec.parse_count_entry(
-            self._backend.pread(vcur, spec.COUNT_ENTRY_BYTES), b"N")
+        vN = self._entry_at(vcur, b"N")
         if vN != N:
             raise ScdaError(ScdaErrorCode.CORRUPT_ENCODING,
-                            f"carrier V has N={vN}, metadata says {N}")
+                            f"carrier V has N={vN}, metadata says {N}",
+                            offset=vcur)
         hdr = SectionHeader("V", user, N=N, decoded=True)
         v_entries = vcur + spec.COUNT_ENTRY_BYTES
         self._pending = _Pending(
@@ -641,14 +652,31 @@ class ScdaReader:
         return out, data_start + spec.padded_data_bytes(total)
 
     def _parse_entries(self, entries_start: int, first: int, n: int,
-                       letter: bytes) -> List[int]:
-        """One buffered read + vectorized batch parse of n count entries."""
+                       letter: Optional[bytes]) -> List[int]:
+        """One buffered read + vectorized batch parse of n count entries.
+
+        A malformed entry's error carries the exact 32-byte-entry offset:
+        the batch parser reports only that *some* entry failed, so the
+        scalar oracle re-locates the first bad one.
+        """
         if n == 0:
             return []
-        raw = self._backend.pread(
-            entries_start + first * spec.COUNT_ENTRY_BYTES,
-            n * spec.COUNT_ENTRY_BYTES)
-        return spec.parse_count_entries(raw, letter, n)
+        start = entries_start + first * spec.COUNT_ENTRY_BYTES
+        raw = self._backend.pread(start, n * spec.COUNT_ENTRY_BYTES)
+        try:
+            return spec.parse_count_entries(raw, letter, n)
+        except ScdaError as e:
+            if e.offset is None:
+                for i in range(n):
+                    entry = raw[i * spec.COUNT_ENTRY_BYTES:
+                                (i + 1) * spec.COUNT_ENTRY_BYTES]
+                    try:
+                        spec.parse_count_entry(
+                            entry, entry[0:1] if letter is None else letter)
+                    except ScdaError:
+                        e.offset = start + i * spec.COUNT_ENTRY_BYTES
+                        break
+            raise
 
     def _sum_entries(self, entries_start: int, N: int,
                      chunk: int = 8192) -> int:
@@ -656,12 +684,9 @@ class ScdaReader:
         total = 0
         for first in range(0, N, chunk):
             n = min(chunk, N - first)
-            raw = self._backend.pread(
-                entries_start + first * spec.COUNT_ENTRY_BYTES,
-                n * spec.COUNT_ENTRY_BYTES)
             # letter=None: accept each entry's own letter, as the lenient
             # skip path always has.
-            total += sum(spec.parse_count_entries(raw, None, n))
+            total += sum(self._parse_entries(entries_start, first, n, None))
         return total
 
     def _require(self, *kinds: str, keep: bool = False) -> _Pending:
@@ -680,7 +705,8 @@ class ScdaReader:
         if new_cursor > self._file_size:
             raise ScdaError(ScdaErrorCode.CORRUPT_TRUNCATED,
                             f"section extends to {new_cursor}, file is "
-                            f"{self._file_size} bytes")
+                            f"{self._file_size} bytes",
+                            offset=self._file_size)
         self.cursor = new_cursor
         self._pending = None
 

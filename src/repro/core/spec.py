@@ -439,6 +439,28 @@ class FileHeader:
     user_string: bytes
 
 
+def detect_style(header: bytes) -> str:
+    """Infer the writer's line-break style from a 128-byte file header.
+
+    §2.1 leaves the style to the writer and makes reading independent of
+    it — but mode-'a' appends must *reproduce* the original choice so the
+    grown file stays byte-identical to a single serial session.  The
+    vendor field's terminal bytes (q = "-\\n" Unix, "\\r\\n" MIME) carry
+    exactly that bit.
+    """
+    if len(header) < VENDOR_FIELD + 8:
+        raise ScdaError(ScdaErrorCode.CORRUPT_TRUNCATED,
+                        f"file header is {len(header)} bytes")
+    q = header[VENDOR_FIELD + 8 - 2:VENDOR_FIELD + 8]
+    if q == _FIXED_Q[MIME]:
+        return MIME
+    if q == _FIXED_Q[UNIX]:
+        return UNIX
+    raise ScdaError(ScdaErrorCode.CORRUPT_PADDING,
+                    f"vendor field terminal bytes {q!r} match neither "
+                    f"line-break style")
+
+
 def parse_file_header(buf: bytes) -> FileHeader:
     """Parse and validate the 128-byte file header."""
     if len(buf) != FILE_HEADER_BYTES:

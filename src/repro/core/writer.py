@@ -25,9 +25,16 @@ closing a file does *not* imply fsync.  Pass ``sync=True`` to
 :func:`fopen_write`/:meth:`ScdaWriter.close` (or set ``REPRO_SCDA_FSYNC=1``)
 for a collective close where every rank fsyncs after the final barrier —
 the checkpoint layer does this before its atomic rename.
+
+Mode 'a' (:func:`fopen_append`) reopens an existing archive, validates
+its tail, and resumes the cursor so appended sections are byte-identical
+to having written the longer file in one serial session — the journal
+subsystem (:mod:`repro.journal`) streams training telemetry into the
+same file a checkpoint lives in through exactly this path.
 """
 from __future__ import annotations
 
+import dataclasses
 import os
 from typing import List, Optional, Sequence, Tuple, Union
 
@@ -54,18 +61,144 @@ Frag = Tuple[int, BytesLike]
 _as_bytes = as_byte_view
 
 
+@dataclasses.dataclass(frozen=True)
+class _TailInfo:
+    """What mode-'a' tail validation learned about an existing archive."""
+    end: int                 # resume cursor: one past the last valid section
+    sections: int            # number of logical sections before the append
+    style: str               # line-break style the original writer chose
+    version: int
+    vendor: bytes
+    user_string: bytes
+    truncate_to: Optional[int] = None  # recover=True: drop a torn tail here
+
+
+def _validate_append_tail(path: str, recover: bool = False) -> _TailInfo:
+    """Validate an archive's tail before appending (rank-local).
+
+    Fast path: a fresh ``.scdax`` sidecar pins every section boundary, so
+    only the *last* section needs re-validation — its on-disk header is
+    re-read (stale sidecars fail loudly, as on every seek), its count
+    entries and extent arithmetic are re-walked, and the section must end
+    exactly on end of file.  Without a usable sidecar the whole stream is
+    walked header-only (which also discovers the resume cursor).
+
+    A truncated or garbage tail raises the exact :class:`ScdaError` the
+    reader taxonomy defines (CORRUPT_TRUNCATED / CORRUPT_* with the
+    failing byte offset attached); with ``recover`` the validated prefix
+    boundary is returned in ``truncate_to`` instead, so the caller may
+    drop a torn tail (the journal's self-healing append) — a corrupt
+    *file header* is never recoverable.
+    """
+    from repro.core.index import ScdaIndex
+    from repro.core.reader import fopen_read
+    with fopen_read(None, path) as r:
+        style = spec.detect_style(
+            r._backend.pread(0, spec.FILE_HEADER_BYTES))
+
+        def info(end: int, sections: int,
+                 truncate_to: Optional[int] = None) -> _TailInfo:
+            return _TailInfo(end=end, sections=sections, style=style,
+                             version=r.version, vendor=r.vendor,
+                             user_string=r.user_string,
+                             truncate_to=truncate_to)
+
+        idx = None
+        try:
+            idx = ScdaIndex.load_sidecar(path)  # size-verified
+        except (ScdaError, OSError):
+            idx = None
+        if idx is not None and (idx.scda_version != r.version
+                                or idx.vendor != r.vendor
+                                or idx.user_string != r.user_string):
+            idx = None  # same-size rewrite: fall back to the full walk
+        if idx is not None:
+            if not idx.entries:
+                # Sidecar verified the size; an empty table means a bare
+                # file header, which fopen_read above already validated.
+                return info(spec.FILE_HEADER_BYTES, 0)
+            try:
+                r.set_index(idx)
+                r.seek_section(len(idx.entries) - 1)  # on-disk header check
+                r.skip_data()  # count entries + extent arithmetic
+            except ScdaError:
+                idx = None  # stale in a way the size probe missed
+            else:
+                if r.cursor != r._file_size:
+                    if recover:
+                        return info(r.cursor, len(idx.entries),
+                                    truncate_to=r.cursor)
+                    raise ScdaError(
+                        ScdaErrorCode.CORRUPT_TRUNCATED,
+                        f"{path}: {r._file_size - r.cursor} trailing bytes "
+                        f"past the last section", offset=r.cursor)
+                return info(r.cursor, len(idx.entries))
+        # Full header-only walk: finds the resume cursor and validates
+        # every section boundary on the way.
+        r._pending = None
+        r.cursor = spec.FILE_HEADER_BYTES
+        sections = 0
+        while not r.at_eof:
+            boundary = r.cursor
+            try:
+                r.read_section_header(decode=True)
+                r.skip_data()
+            except ScdaError as e:
+                if not recover:
+                    raise e.at(boundary)
+                return info(boundary, sections, truncate_to=boundary)
+            sections += 1
+        return info(r.cursor, sections)
+
+
 class ScdaWriter:
-    """File context for mode 'w' (create new / overwrite, fopen semantics)."""
+    """File context for modes 'w' (create/overwrite) and 'a' (append —
+    reserved by the paper's fopen, implemented here): both resume the
+    same positioned-write fast path, differing only in how the starting
+    cursor is established."""
 
     def __init__(self, comm: Communicator, path: str,
                  user_string: bytes = b"",
                  vendor: bytes = DEFAULT_VENDOR,
                  style: str = spec.UNIX,
-                 sync: Optional[bool] = None) -> None:
+                 sync: Optional[bool] = None,
+                 mode: str = "w",
+                 recover: bool = False) -> None:
         self.comm = comm
-        self.style = style
         self.sync = DEFAULT_SYNC if sync is None else sync
         self._closed = False
+        self.mode = mode
+        if mode == "a":
+            # Every rank validates the tail rank-locally (identical bytes
+            # ⇒ identical verdicts, the §A.5.1 metadata pattern); only
+            # then is the writable descriptor opened, so a corrupt file
+            # is never opened for writing at all.  The original style is
+            # detected from the file header: appended padding must match
+            # it or the grown file would not be byte-identical to one
+            # serial session.
+            tail = _validate_append_tail(path, recover=recover)
+            self._backend = FileBackend(path, "a", create=False)
+            self.style = tail.style
+            self.version = tail.version
+            self.vendor = tail.vendor
+            self.user_string = tail.user_string
+            self.base_sections = tail.sections
+            self.base_size = tail.end
+            comm.barrier()
+            if tail.truncate_to is not None and comm.rank == 0:
+                self._backend.truncate(tail.truncate_to)
+            self.cursor = tail.end
+            comm.barrier()
+            return
+        if mode != "w":
+            raise ScdaError(ScdaErrorCode.ARG_MODE,
+                            f"unsupported open mode {mode!r}")
+        self.style = style
+        self.version = spec.FORMAT_VERSION
+        self.vendor = vendor
+        self.user_string = user_string
+        self.base_sections = 0
+        self.base_size = spec.FILE_HEADER_BYTES
         self._backend = FileBackend(path, "w", create=(comm.rank == 0))
         self.cursor = 0
         # Root lays down the file header (Fig. 1); everyone syncs before any
@@ -524,3 +657,27 @@ def fopen_write(comm: Optional[Communicator], path: str,
     """``scda_fopen(..., 'w')`` — collective create/overwrite."""
     return ScdaWriter(comm or SerialComm(), path, user_string, vendor, style,
                       sync=sync)
+
+
+def fopen_append(comm: Optional[Communicator], path: str,
+                 sync: Optional[bool] = None,
+                 recover: bool = False) -> ScdaWriter:
+    """``scda_fopen(..., 'a')`` — collective append to an existing archive.
+
+    The file's tail is validated first (magic, the last section's header,
+    count entries, and extent/padding arithmetic; a fresh ``.scdax``
+    sidecar makes this O(last section) instead of a full header walk) and
+    the cursor resumes exactly where a single longer serial session would
+    stand.  New sections then go through the identical planner/iovec fast
+    path, so the grown file is byte-for-byte what one session writing all
+    sections would have produced — under *any* appending partition.
+
+    Vendor, user string, line-break style, and format version are
+    inherited from the existing file header (they are already on disk).
+    A truncated or garbage tail raises the reader's CORRUPT_* error with
+    the failing byte offset; ``recover=True`` instead truncates a torn
+    tail back to the last valid section boundary (never past the file
+    header) before appending — the journal's self-healing mode.
+    """
+    return ScdaWriter(comm or SerialComm(), path, sync=sync, mode="a",
+                      recover=recover)

@@ -10,6 +10,10 @@ Subcommands::
     scdatool verify FILE...          # re-check payloads against the checksums
     scdatool copy SRC DST            # rewrite; --recompress / --decompress
     scdatool diff A B                # leaf-wise compare via the indexes
+    scdatool append DST SRC...       # grow DST in place (mode 'a') with
+                                     # SRC's sections; sidecar refreshed
+    scdatool tail FILE               # print journal records; -f follows
+                                     # new sections as they land
 
 ``SECTION`` is a section number (as printed by ``ls``) or a user string.
 Installed as a console script via ``pyproject.toml``; equivalently
@@ -18,11 +22,13 @@ Installed as a console script via ``pyproject.toml``; equivalently
 from __future__ import annotations
 
 import argparse
+import json
 import sys
+import time
 from typing import List, Optional
 
-from repro.core import (ScdaError, ScdaErrorCode, ScdaIndex, fopen_read,
-                        fopen_write)
+from repro.core import (ScdaError, ScdaErrorCode, ScdaIndex, fopen_append,
+                        fopen_read, fopen_write)
 from repro.core.index import SIDECAR_SUFFIX
 from repro.tools.fsck import fsck_file
 
@@ -191,39 +197,122 @@ def cmd_verify(args) -> int:
     return status
 
 
-# -- copy --------------------------------------------------------------------
+# -- copy / append -----------------------------------------------------------
+
+def _pump_sections(r, w, idx: ScdaIndex, recompress: bool,
+                   decompress: bool) -> int:
+    """Re-emit every section of ``r`` (indexed by ``idx``) through writer
+    ``w`` — the shared engine of ``copy`` (mode 'w') and ``append``
+    (mode 'a'); both produce sections byte-equivalent to writing the
+    logical content directly."""
+    for i, e in enumerate(idx):
+        hdr = r.seek_section(i)
+        if recompress:
+            enc = True
+        elif decompress:
+            enc = False
+        else:
+            enc = e.decoded   # preserve each section's encoding
+        if hdr.type == "I":
+            w.write_inline(hdr.user_string, r.read_inline_data())
+        elif hdr.type == "B":
+            w.write_block(hdr.user_string, r.read_block_data(),
+                          encode=enc)
+        elif hdr.type == "A":
+            data = r.read_array_data([hdr.N])
+            w.write_array(hdr.user_string, data, [hdr.N], hdr.E,
+                          indirect=True, encode=enc)
+        else:  # V
+            sizes = r.read_varray_sizes([hdr.N])
+            data = r.read_varray_data([hdr.N], sizes)
+            w.write_varray(hdr.user_string, data, [hdr.N], sizes,
+                           encode=enc)
+    return len(idx)
+
 
 def cmd_copy(args) -> int:
     with fopen_read(None, args.src) as r:
         idx = r.index()
         with fopen_write(None, args.dst, user_string=r.user_string,
                          vendor=r.vendor) as w:
-            for i, e in enumerate(idx):
-                hdr = r.seek_section(i)
-                if args.recompress:
-                    enc = True
-                elif args.decompress:
-                    enc = False
-                else:
-                    enc = e.decoded   # preserve each section's encoding
-                if hdr.type == "I":
-                    w.write_inline(hdr.user_string, r.read_inline_data())
-                elif hdr.type == "B":
-                    w.write_block(hdr.user_string, r.read_block_data(),
-                                  encode=enc)
-                elif hdr.type == "A":
-                    data = r.read_array_data([hdr.N])
-                    w.write_array(hdr.user_string, data, [hdr.N], hdr.E,
-                                  indirect=True, encode=enc)
-                else:  # V
-                    sizes = r.read_varray_sizes([hdr.N])
-                    data = r.read_varray_data([hdr.N], sizes)
-                    w.write_varray(hdr.user_string, data, [hdr.N], sizes,
-                                   encode=enc)
+            _pump_sections(r, w, idx, args.recompress, args.decompress)
     if args.index:
         ScdaIndex.build(args.dst).write_sidecar()
     print(f"copied {len(idx)} sections: {args.src} -> {args.dst}")
     return 0
+
+
+def cmd_append(args) -> int:
+    """Grow DST in place: every section of each SRC is re-emitted through
+    a mode-'a' writer, tail-validated first, so the result is identical
+    to having written DST's and SRC's sections in one serial session.
+    An existing ``.scdax`` sidecar is refreshed incrementally and
+    atomically (suffix-only scan; payload CRCs are computed for the new
+    sections iff the old sidecar recorded them, so ``scdatool verify``
+    keeps passing)."""
+    total = 0
+    with fopen_append(None, args.dst, recover=args.recover) as w:
+        base = w.base_sections
+        for src in args.srcs:
+            with fopen_read(None, src) as r:
+                total += _pump_sections(r, w, r.index(),
+                                        args.recompress, args.decompress)
+    if args.index:
+        ScdaIndex.build(args.dst).write_sidecar()
+        refreshed = True
+    else:
+        refreshed = ScdaIndex.refresh_sidecar(args.dst) is not None
+    print(f"appended {total} sections onto {args.dst} "
+          f"({base} -> {base + total}"
+          f"{', sidecar refreshed' if refreshed else ''})")
+    return 0
+
+
+# -- tail --------------------------------------------------------------------
+
+def cmd_tail(args) -> int:
+    """Print journal records (``repro.journal``) as JSON lines.
+
+    Default: dump every record currently in the file and exit (the CI
+    smoke mode).  ``--follow`` keeps polling: the index is extended
+    incrementally (suffix-only scans) and records from newly landed
+    sections stream out as the producer flushes them — ``tail -f`` for
+    an archive that is being journaled."""
+    from repro.journal import iter_records
+    idx = ScdaIndex.cached(args.file, write=False)
+    shown = 0
+    for _, rec in iter_records(args.file, index=idx):
+        print(json.dumps(rec, sort_keys=True))
+        shown += 1
+    if not args.follow:
+        if not shown:
+            _err(f"{args.file}: no journal records")
+        return 0
+    try:
+        seen = len(idx.entries)
+        while True:
+            sys.stdout.flush()
+            time.sleep(args.interval)
+            if idx.staleness() == "fresh":
+                continue
+            try:
+                idx = idx.extend()  # suffix scan; full rebuild on rewrite
+                # A rebuild that SHRANK the table means the file was
+                # rewritten (or a torn tail was truncated): re-stream the
+                # new file's records rather than skipping unseen ones.
+                if len(idx.entries) < seen:
+                    seen = 0
+                for _, rec in iter_records(args.file, start_section=seen,
+                                           index=idx):
+                    print(json.dumps(rec, sort_keys=True))
+                seen = len(idx.entries)
+            except (ScdaError, OSError):
+                # tail -f semantics: a mid-append torn tail, a retention
+                # delete, or a rewrite in progress is a reason to wait
+                # for the next poll, not to die.
+                continue
+    except KeyboardInterrupt:
+        return 0
 
 
 # -- diff --------------------------------------------------------------------
@@ -496,6 +585,34 @@ def build_parser() -> argparse.ArgumentParser:
                    help="list every difference instead of stopping at the "
                         "first")
     p.set_defaults(fn=cmd_diff)
+
+    p = sub.add_parser("append",
+                       help="append SRC archives' sections onto DST in "
+                            "place (mode 'a'; tail-validated)")
+    p.add_argument("dst")
+    p.add_argument("srcs", nargs="+", metavar="src")
+    g = p.add_mutually_exclusive_group()
+    g.add_argument("--recompress", action="store_true",
+                   help="§3-encode every appended B/A/V payload")
+    g.add_argument("--decompress", action="store_true",
+                   help="store every appended payload raw")
+    p.add_argument("--recover", action="store_true",
+                   help="truncate a torn tail back to the last valid "
+                        "section boundary instead of failing")
+    p.add_argument("--index", action="store_true",
+                   help="(re)write the destination's .scdax sidecar even "
+                        "if none exists")
+    p.set_defaults(fn=cmd_append)
+
+    p = sub.add_parser("tail",
+                       help="print journal records as JSON lines; "
+                            "-f follows new sections as they land")
+    p.add_argument("file")
+    p.add_argument("-f", "--follow", action="store_true",
+                   help="poll for appended journal sections forever")
+    p.add_argument("--interval", type=float, default=1.0,
+                   help="poll interval for --follow (seconds, default 1)")
+    p.set_defaults(fn=cmd_tail)
     return ap
 
 

@@ -12,7 +12,12 @@ reader must, and checks everything the format makes checkable:
   compressed payload is actually inflated (unless ``deep=False``);
 * truncation: no section may extend past end of file, and the final
   section's padding must land exactly ON end of file (trailing garbage
-  fails the next header parse and is reported as corruption);
+  fails the next header parse and is reported as corruption at the
+  EXACT byte offset where validation failed — the reader attaches
+  ``ScdaError.offset`` to parse failures, so a valid prefix followed by
+  garbage points at the failing entry/byte, not just at the section
+  boundary; mode-'a' appends rely on this to make tail-validation
+  errors actionable);
 * data padding: the length is normative and enforced by offset
   arithmetic; the pad *bytes* are only advisory per §2.1.2 ("may consist
   of p arbitrary bytes"), so a pad matching neither the Unix nor the
@@ -159,7 +164,16 @@ def fsck_file(path: str, deep: bool = True,
                     findings.append(Finding("warning", data_region + payload,
                                             sec, warn))
             except ScdaError as e:
-                findings.append(Finding("error", start, sec, str(e)))
+                # Anchor the finding at the exact failing byte when the
+                # reader pinned one (malformed entry, EOF position, bad
+                # header) — "trailing garbage exists" becomes "validation
+                # failed at byte X, section started at Y".
+                at = e.offset if e.offset is not None else start
+                msg = str(e)
+                if e.offset is not None and e.offset != start:
+                    msg += (f" (validation failed at byte {e.offset}; "
+                            f"section started at {start})")
+                findings.append(Finding("error", at, sec, msg))
                 return findings  # a stream format cannot resync
             sec += 1
     if check_sidecar and os.path.exists(path + SIDECAR_SUFFIX):

@@ -1,0 +1,759 @@
+"""Appendable archives: fopen mode 'a', incremental index refresh, and the
+streaming journal subsystem.
+
+The core contract under test is serial equivalence ACROSS the append
+boundary: a file produced by write → close → ``fopen_append`` → write →
+close must be byte-identical to the same sections written in one serial
+session, under any partition P ∈ {1, 2, 4, 8} on either side of the
+boundary, raw and §3-compressed alike.  On top of that: tail validation
+fails loudly (with exact offsets) on truncated/garbage tails, the
+``.scdax`` sidecar refresh is incremental and atomic, and the journal
+layer streams telemetry into the same file a checkpoint lives in.
+"""
+import json
+import os
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import (ScdaError, ScdaErrorCode, ScdaIndex, ScdaWriter,
+                        SerialComm, ThreadComm, fopen_append, fopen_read,
+                        fopen_write, run_ranks, spec)
+from repro.core.reader import ScdaReader
+from repro.journal import (JOURNAL_USER_STRING, ScdaJournal, read_records)
+from repro.tools.fsck import fsck_file
+
+
+# --------------------------------------------------------------------------
+# Random section scripts (deterministic fuzz without a hypothesis dep)
+# --------------------------------------------------------------------------
+
+def _rand_partition(seed, n, P):
+    rng = random.Random(repr(seed))
+    cuts = sorted(rng.randint(0, n) for _ in range(P - 1))
+    return [b - a for a, b in zip([0] + cuts, cuts + [n])]
+
+
+def _random_sections(rng, n):
+    secs = []
+    for i in range(n):
+        t = rng.choice("IBAV")
+        if t == "I":
+            secs.append(("I", rng.randbytes(32)))
+        elif t == "B":
+            secs.append(("B", rng.randbytes(rng.randint(0, 200)),
+                         rng.random() < 0.5))
+        elif t == "A":
+            enc = rng.random() < 0.5
+            E = rng.randint(1, 16)
+            N = rng.randint(1, 40) if enc else rng.randint(0, 40)
+            secs.append(("A", rng.randbytes(N * E), N, E, enc))
+        else:
+            enc = rng.random() < 0.5
+            k = rng.randint(1, 8) if enc else rng.randint(0, 8)
+            sizes = [rng.randint(0, 100) for _ in range(k)]
+            secs.append(("V", [rng.randbytes(s) for s in sizes], enc))
+    return secs
+
+
+def _emit(f, i, sec):
+    """Write one scripted section collectively (any communicator size)."""
+    comm, kind = f.comm, sec[0]
+    user = b"sec %04d" % i
+    if kind == "I":
+        f.write_inline(user, sec[1] if comm.rank == 0 else None)
+    elif kind == "B":
+        f.write_block(user, sec[1] if comm.rank == 0 else None,
+                      encode=sec[2])
+    elif kind == "A":
+        _, data, N, E, enc = sec
+        counts = _rand_partition((i, comm.size), N, comm.size)
+        off = sum(counts[:comm.rank]) * E
+        local = data[off:off + counts[comm.rank] * E]
+        f.write_array(user, local, counts, E, encode=enc)
+    else:
+        _, elements, enc = sec
+        counts = _rand_partition((i, comm.size, "v"), len(elements),
+                                 comm.size)
+        off = sum(counts[:comm.rank])
+        local = elements[off:off + counts[comm.rank]]
+        f.write_varray(user, local, counts, [len(e) for e in local],
+                       encode=enc)
+
+
+def _write_all(path, secs, comm=None, first=0):
+    with fopen_write(comm, path, user_string=b"user",
+                     vendor=b"vendor") as f:
+        for i, sec in enumerate(secs):
+            _emit(f, first + i, sec)
+
+
+def _parallel(P, path, secs, first, opener):
+    def workload(comm):
+        with opener(comm, path) as f:
+            for i, sec in enumerate(secs):
+                _emit(f, first + i, sec)
+    run_ranks(ThreadComm.group(P), workload)
+
+
+# --------------------------------------------------------------------------
+# fopen_append — the tentpole
+# --------------------------------------------------------------------------
+
+class TestFopenAppend:
+    def test_serial_byte_identity(self, tmp_path):
+        rng = random.Random(7)
+        secs = _random_sections(rng, 8)
+        one, two = str(tmp_path / "one.scda"), str(tmp_path / "two.scda")
+        _write_all(one, secs)
+        _write_all(two, secs[:3])
+        with fopen_append(None, two) as f:
+            assert f.base_sections == 3
+            assert f.base_size == os.path.getsize(two)
+            assert (f.version, f.vendor, f.user_string) == \
+                (spec.FORMAT_VERSION, b"vendor", b"user")
+            for i, sec in enumerate(secs[3:]):
+                _emit(f, 3 + i, sec)
+        assert open(one, "rb").read() == open(two, "rb").read()
+
+    @pytest.mark.parametrize("P", [1, 2, 4, 8])
+    def test_partition_independence_across_boundary(self, tmp_path, P):
+        """Fuzzed: prefix written at P ranks, suffix APPENDED at P ranks,
+        bytes equal the one-session serial oracle (raw + compressed)."""
+        for seed in (11, 23):
+            rng = random.Random(seed)
+            secs = _random_sections(rng, 6)
+            oracle = str(tmp_path / f"oracle_{P}_{seed}.scda")
+            grown = str(tmp_path / f"grown_{P}_{seed}.scda")
+            _write_all(oracle, secs)
+            _parallel(P, grown, secs[:3], 0, fopen_write_user)
+            _parallel(P, grown, secs[3:], 3,
+                      lambda comm, path: fopen_append(comm, path))
+            assert open(oracle, "rb").read() == open(grown, "rb").read(), \
+                f"P={P} seed={seed}"
+
+    def test_mixed_partitions_across_boundary(self, tmp_path):
+        """The appending partition need not match the writing one."""
+        rng = random.Random(3)
+        secs = _random_sections(rng, 6)
+        oracle = str(tmp_path / "oracle.scda")
+        grown = str(tmp_path / "grown.scda")
+        _write_all(oracle, secs)
+        _parallel(4, grown, secs[:3], 0, fopen_write_user)
+        _parallel(2, grown, secs[3:], 3,
+                  lambda comm, path: fopen_append(comm, path))
+        assert open(oracle, "rb").read() == open(grown, "rb").read()
+
+    def test_multiple_appends(self, tmp_path):
+        rng = random.Random(5)
+        secs = _random_sections(rng, 9)
+        one, two = str(tmp_path / "one.scda"), str(tmp_path / "two.scda")
+        _write_all(one, secs)
+        _write_all(two, secs[:3])
+        for lo in (3, 6):
+            with fopen_append(None, two) as f:
+                for i, sec in enumerate(secs[lo:lo + 3]):
+                    _emit(f, lo + i, sec)
+        assert open(one, "rb").read() == open(two, "rb").read()
+
+    def test_append_to_bare_header(self, tmp_path):
+        one, two = str(tmp_path / "one.scda"), str(tmp_path / "two.scda")
+        secs = [("B", b"payload", False)]
+        _write_all(one, secs)
+        _write_all(two, [])
+        with fopen_append(None, two) as f:
+            assert f.base_sections == 0
+            _emit(f, 0, secs[0])
+        assert open(one, "rb").read() == open(two, "rb").read()
+
+    def test_mime_style_preserved(self, tmp_path):
+        one, two = str(tmp_path / "one.scda"), str(tmp_path / "two.scda")
+        for path, upto in ((one, 2), (two, 1)):
+            with fopen_write(None, path, user_string=b"m",
+                             style=spec.MIME) as f:
+                for i in range(upto):
+                    f.write_block(b"b%d" % i, b"data %d" % i)
+        with fopen_append(None, two) as f:
+            assert f.style == spec.MIME
+            f.write_block(b"b1", b"data 1")
+        assert open(one, "rb").read() == open(two, "rb").read()
+
+    def test_save_engine_fast_path_across_boundary(self, tmp_path):
+        """Appended sections may ride the overlapped save engine's
+        planner + background writeback; bytes still match the oracle."""
+        data = os.urandom(1 << 16)
+        one, two = str(tmp_path / "one.scda"), str(tmp_path / "two.scda")
+        with fopen_write(None, one, user_string=b"user") as f:
+            f.write_block(b"head", b"prefix")
+            f.write_array_windows(b"leaf", [(0, data)], N=len(data), E=1)
+        with fopen_write(None, two, user_string=b"user") as f:
+            f.write_block(b"head", b"prefix")
+        with fopen_append(None, two) as f:
+            frags, f.cursor = f.plan_array_windows(
+                b"leaf", [(0, data)], N=len(data), E=1)
+            f._backend.submit_write_gather(frags, 1 << 20)
+        assert open(one, "rb").read() == open(two, "rb").read()
+
+    # -- tail validation failures -----------------------------------------
+    def test_missing_file(self, tmp_path):
+        with pytest.raises(ScdaError) as ei:
+            fopen_append(None, str(tmp_path / "nope.scda"))
+        assert ei.value.code == ScdaErrorCode.FS_OPEN
+
+    def test_bad_magic(self, tmp_path):
+        p = str(tmp_path / "bad.scda")
+        with open(p, "wb") as fh:
+            fh.write(b"NOTSCDA" + b"x" * 121)
+        with pytest.raises(ScdaError) as ei:
+            fopen_append(None, p)
+        assert ei.value.code == ScdaErrorCode.CORRUPT_MAGIC
+
+    def test_truncated_tail(self, tmp_path):
+        p = str(tmp_path / "t.scda")
+        _write_all(p, [("B", b"x" * 100, False)])
+        with open(p, "r+b") as fh:
+            fh.truncate(os.path.getsize(p) - 40)
+        with pytest.raises(ScdaError) as ei:
+            fopen_append(None, p)
+        assert ei.value.code == ScdaErrorCode.CORRUPT_TRUNCATED
+        assert ei.value.offset is not None
+
+    def test_garbage_tail_exact_offset(self, tmp_path):
+        p = str(tmp_path / "g.scda")
+        _write_all(p, [("B", b"x" * 100, False)])
+        boundary = os.path.getsize(p)
+        with open(p, "ab") as fh:
+            fh.write(b"\x00garbage past the last section\x00" * 4)
+        with pytest.raises(ScdaError) as ei:
+            fopen_append(None, p)
+        assert ei.value.code.name.startswith("CORRUPT")
+        assert ei.value.offset == boundary
+
+    def test_garbage_tail_with_stale_sidecar(self, tmp_path):
+        """A sidecar stale against the garbage-grown file must not let the
+        garbage through, nor break the loud failure."""
+        p = str(tmp_path / "g.scda")
+        _write_all(p, [("B", b"x" * 100, False)])
+        ScdaIndex.build(p).write_sidecar()
+        with open(p, "ab") as fh:
+            fh.write(b"!" * 80)
+        with pytest.raises(ScdaError):
+            fopen_append(None, p)
+
+    def test_recover_truncates_torn_tail(self, tmp_path):
+        one, two = str(tmp_path / "one.scda"), str(tmp_path / "two.scda")
+        secs = [("B", b"first", False), ("B", b"second", False)]
+        _write_all(one, secs)
+        _write_all(two, secs[:1])
+        with open(two, "ab") as fh:
+            fh.write(b"torn partial section write")
+        with fopen_append(None, two, recover=True) as f:
+            assert f.base_sections == 1
+            _emit(f, 1, secs[1])
+        assert open(one, "rb").read() == open(two, "rb").read()
+
+    def test_recover_never_eats_the_file_header(self, tmp_path):
+        p = str(tmp_path / "hdr.scda")
+        with open(p, "wb") as fh:
+            fh.write(b"scdata0 truncated-mid-header")
+        with pytest.raises(ScdaError):
+            fopen_append(None, p, recover=True)
+
+    def test_bad_mode_rejected(self, tmp_path):
+        with pytest.raises(ScdaError) as ei:
+            ScdaWriter(SerialComm(), str(tmp_path / "x.scda"), mode="r+")
+        assert ei.value.code == ScdaErrorCode.ARG_MODE
+
+    # -- sidecar fast path -------------------------------------------------
+    def test_sidecar_skips_full_walk(self, tmp_path, monkeypatch):
+        p = str(tmp_path / "many.scda")
+        _write_all(p, [("B", b"x%d" % i, False) for i in range(20)])
+        ScdaIndex.build(p).write_sidecar()
+        calls = []
+        orig = ScdaReader.read_section_header
+
+        def counting(self, decode=True):
+            if self.path == p:  # the sidecar is itself an scda file
+                calls.append(1)
+            return orig(self, decode)
+
+        monkeypatch.setattr(ScdaReader, "read_section_header", counting)
+        with fopen_append(None, p) as f:
+            assert f.base_sections == 20
+        assert len(calls) == 0  # sidecar: only the last section re-checked
+        os.remove(p + ".scdax")
+        with fopen_append(None, p) as f:
+            assert f.base_sections == 20
+        assert len(calls) == 20  # no sidecar: full header walk
+
+    def test_appended_archive_fscks_clean(self, tmp_path):
+        p = str(tmp_path / "clean.scda")
+        rng = random.Random(1)
+        secs = _random_sections(rng, 6)
+        _write_all(p, secs[:3])
+        with fopen_append(None, p) as f:
+            for i, sec in enumerate(secs[3:]):
+                _emit(f, 3 + i, sec)
+        assert fsck_file(p) == []
+
+
+def fopen_write_user(comm, path):
+    return fopen_write(comm, path, user_string=b"user", vendor=b"vendor")
+
+
+# --------------------------------------------------------------------------
+# ScdaIndex.extend — incremental, atomic sidecar refresh
+# --------------------------------------------------------------------------
+
+class TestIndexExtend:
+    def _grown(self, tmp_path, n1=3, n2=3):
+        p = str(tmp_path / "g.scda")
+        rng = random.Random(42)
+        secs = _random_sections(rng, n1 + n2)
+        _write_all(p, secs[:n1])
+        idx = ScdaIndex.build(p)
+        with fopen_append(None, p) as f:
+            for i, sec in enumerate(secs[n1:]):
+                _emit(f, n1 + i, sec)
+        return p, idx
+
+    def test_extend_matches_fresh_build(self, tmp_path):
+        p, idx = self._grown(tmp_path)
+        ext, fresh = idx.extend(), ScdaIndex.build(p)
+        assert ext.entries == fresh.entries
+        assert ext.file_size == fresh.file_size
+        assert ext.entries[:3] == idx.entries  # prefix preserved verbatim
+
+    def test_extend_fresh_is_self(self, tmp_path):
+        p, idx = self._grown(tmp_path, n2=0)
+        assert idx.staleness() == "fresh"
+        assert idx.extend() is idx
+
+    def test_staleness_classification(self, tmp_path):
+        p, idx = self._grown(tmp_path)
+        assert idx.staleness() == "grew"
+        with open(p, "r+b") as fh:
+            fh.truncate(idx.file_size - 1)
+        assert idx.staleness() == "rewritten"
+        os.remove(p)
+        assert idx.staleness() == "rewritten"
+
+    def test_extend_after_rewrite_rebuilds(self, tmp_path):
+        p, idx = self._grown(tmp_path)
+        with fopen_write(None, p, user_string=b"other") as f:
+            f.write_block(b"fresh", b"rewritten content")
+        ext = idx.extend()
+        assert ext.entries == ScdaIndex.build(p).entries
+        assert len(ext.entries) == 1
+
+    def test_extend_same_size_grow_with_changed_prefix_rebuilds(
+            self, tmp_path):
+        """A larger file whose last indexed section no longer matches is a
+        rewrite, not a grow — extend must notice via the header check."""
+        p, idx = self._grown(tmp_path, n1=2, n2=0)
+        size = os.path.getsize(p)
+        with fopen_write(None, p, user_string=b"user") as f:
+            f.write_block(b"zz", os.urandom(400))  # different, larger
+        assert os.path.getsize(p) > size
+        ext = idx.extend()
+        assert ext.entries == ScdaIndex.build(p).entries
+
+    def test_extend_preserves_checksums_and_adds_new(self, tmp_path):
+        p = str(tmp_path / "c.scda")
+        _write_all(p, [("B", b"one", False)])
+        idx = ScdaIndex.build(p).with_checksums()
+        idx.write_sidecar()
+        with fopen_append(None, p) as f:
+            f.write_block(b"two", b"appended", encode=True)
+        refreshed = ScdaIndex.refresh_sidecar(p)
+        assert refreshed.has_checksums()
+        assert refreshed.entries[0].crc32 == idx.entries[0].crc32
+        assert ScdaIndex.load_sidecar(p).verify_checksums() == []
+
+    def test_refresh_sidecar_absent_is_none(self, tmp_path):
+        p, _ = self._grown(tmp_path)
+        assert ScdaIndex.refresh_sidecar(p) is None
+        assert not os.path.exists(p + ".scdax")
+
+    def test_refresh_sidecar_atomic_no_tmp_left(self, tmp_path):
+        p, idx = self._grown(tmp_path)
+        idx.write_sidecar()  # stale: recorded before the append
+        ScdaIndex.refresh_sidecar(p)
+        assert not os.path.exists(p + ".scdax.tmp")
+        assert ScdaIndex.load_sidecar(p).entries == \
+            ScdaIndex.build(p).entries
+
+    def test_cached_takes_suffix_scan(self, tmp_path, monkeypatch):
+        p, idx = self._grown(tmp_path, n1=10, n2=2)
+        idx.write_sidecar()  # describes only the 10-section prefix
+        calls = []
+        orig = ScdaReader.read_section_header
+
+        def counting(self, decode=True):
+            if self.path == p:  # the sidecar is itself an scda file
+                calls.append(1)
+            return orig(self, decode)
+
+        monkeypatch.setattr(ScdaReader, "read_section_header", counting)
+        got = ScdaIndex.cached(p)
+        scanned = len(calls)
+        assert got.entries == ScdaIndex.build(p).entries
+        assert len(got.entries) == 12
+        assert scanned == 2  # only the appended suffix was parsed
+
+    # -- satellite: out-of-band append staleness ---------------------------
+    def test_out_of_band_append_fails_loudly_and_extend_recovers(
+            self, tmp_path):
+        p = str(tmp_path / "oob.scda")
+        _write_all(p, [("B", b"base", False)])
+        ScdaIndex.build(p).write_sidecar()
+        # grow the file WITHOUT refreshing .scdax
+        with fopen_append(None, p) as f:
+            f.write_block(b"extra", b"out of band")
+        with pytest.raises(ScdaError) as ei:
+            ScdaIndex.load_sidecar(p)
+        assert ei.value.code == ScdaErrorCode.CORRUPT_TRUNCATED
+        assert "grew" in str(ei.value)
+        stale = ScdaIndex.load_sidecar(p, verify=False)
+        recovered = stale.extend()
+        assert recovered.entries == ScdaIndex.build(p).entries
+
+    def test_stale_index_never_serves_wrong_bytes(self, tmp_path):
+        """Force-adopting a stale sidecar after a REWRITE still fails at
+        the per-seek header check (the existing loud-failure contract,
+        re-asserted across the new grow/rewrite distinction)."""
+        p = str(tmp_path / "rw.scda")
+        _write_all(p, [("B", b"base", False)])
+        ScdaIndex.build(p).write_sidecar()
+        stale = ScdaIndex.load_sidecar(p)
+        with fopen_write(None, p, user_string=b"user") as f:
+            f.write_varray(b"vvv", [b"abc"], [1], [3])
+            f.write_block(b"bbb", b"tail")
+        with fopen_read(None, p) as r:
+            r.set_index(stale)
+            with pytest.raises(ScdaError) as ei:
+                r.seek_section(0)
+            assert ei.value.code == ScdaErrorCode.CORRUPT_ENCODING
+
+
+# --------------------------------------------------------------------------
+# Journal subsystem
+# --------------------------------------------------------------------------
+
+class TestJournal:
+    def _archive(self, tmp_path, name="j.scda"):
+        p = str(tmp_path / name)
+        _write_all(p, [("B", b"payload", False)])
+        return p
+
+    def test_log_flush_read_roundtrip(self, tmp_path):
+        p = self._archive(tmp_path)
+        j = ScdaJournal(p, flush_records=0)
+        j.log(1, {"loss": 2.5, "opt": {"lr": 1e-3, "beta": [0.9, 0.999]}})
+        j.log(2, {"loss": np.float32(1.25), "n": np.int64(7)})
+        assert j.pending == 2
+        assert j.flush() == 2
+        assert j.pending == 0
+        recs = read_records(p)
+        assert [r["step"] for r in recs] == [1, 2]
+        assert recs[0]["data"] == {"loss": 2.5, "opt/beta/0": 0.9,
+                                   "opt/beta/1": 0.999, "opt/lr": 1e-3}
+        assert recs[1]["data"] == {"loss": 1.25, "n": 7}
+
+    def test_each_flush_is_one_section(self, tmp_path):
+        p = self._archive(tmp_path)
+        j = ScdaJournal(p, flush_records=0)
+        for batch in ((1, 2), (3,)):
+            for s in batch:
+                j.log(s, {"v": s})
+            j.flush()
+        idx = ScdaIndex.build(p)
+        journal_secs = [e for e in idx
+                        if e.user_string == JOURNAL_USER_STRING]
+        assert [e.N for e in journal_secs] == [2, 1]
+
+    def test_autoflush_threshold(self, tmp_path):
+        p = self._archive(tmp_path)
+        j = ScdaJournal(p, flush_records=3)
+        j.log(1, {"a": 1})
+        j.log(2, {"a": 2})
+        assert read_records(p) == []
+        j.log(3, {"a": 3})
+        assert len(read_records(p)) == 3 and j.pending == 0
+
+    def test_env_knob(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("REPRO_SCDA_JOURNAL_FLUSH", "2")
+        p = self._archive(tmp_path)
+        j = ScdaJournal(p)
+        assert j.flush_records == 2
+        j.log(1, {"a": 1})
+        j.log(2, {"a": 2})
+        assert len(read_records(p)) == 2
+
+    def test_no_target_buffers(self, tmp_path):
+        j = ScdaJournal(None, flush_records=1)
+        j.log(1, {"a": 1})  # would auto-flush if it had a target
+        assert j.flush() == 0 and j.pending == 1
+        p = self._archive(tmp_path)
+        j.retarget(p)
+        assert j.flush() == 1
+        assert len(read_records(p)) == 1
+
+    def test_non_scalar_rejected(self, tmp_path):
+        j = ScdaJournal(self._archive(tmp_path))
+        with pytest.raises(ScdaError) as ei:
+            j.log(1, {"w": np.zeros(4)})
+        assert ei.value.code == ScdaErrorCode.ARG_SEQUENCE
+
+    def test_flush_refreshes_sidecar(self, tmp_path):
+        p = self._archive(tmp_path)
+        ScdaIndex.build(p).write_sidecar()
+        j = ScdaJournal(p, flush_records=0)
+        j.log(1, {"a": 1})
+        j.flush()
+        idx = ScdaIndex.load_sidecar(p)  # would raise if stale
+        assert idx.entries[-1].user_string == JOURNAL_USER_STRING
+
+    def test_torn_flush_self_heals(self, tmp_path):
+        p = self._archive(tmp_path)
+        j = ScdaJournal(p, flush_records=0, update_sidecar=False)
+        j.log(1, {"a": 1})
+        j.flush()
+        with open(p, "r+b") as fh:
+            fh.truncate(os.path.getsize(p) - 9)  # tear the flushed section
+        j.log(2, {"a": 2})
+        j.flush()
+        assert [r["step"] for r in read_records(p)] == [2]
+        assert fsck_file(p) == []
+
+    def test_recompressed_journal_still_reads(self, tmp_path):
+        """`copy --recompress` turns journal sections into zV; records
+        must decode transparently, not vanish."""
+        from repro.tools.cli import main
+        p = self._archive(tmp_path)
+        with ScdaJournal(p, flush_records=0) as j:
+            j.log(1, {"loss": 0.5})
+            j.log(2, {"loss": 0.25})
+        z = str(tmp_path / "z.scda")
+        assert main(["copy", "--recompress", p, z]) == 0
+        assert [r["step"] for r in read_records(z)] == [1, 2]
+
+    def test_concurrent_log_and_flush(self, tmp_path):
+        """The manager flushes from its async save thread while training
+        keeps logging: no record may be dropped, no flush may tear the
+        file (the journal lock serializes appends)."""
+        import threading
+        p = self._archive(tmp_path)
+        j = ScdaJournal(p, flush_records=5, update_sidecar=False)
+        per_thread, threads = 40, 4
+
+        def hammer(tid):
+            for k in range(per_thread):
+                j.log(tid * per_thread + k, {"t": tid})
+
+        ts = [threading.Thread(target=hammer, args=(t,))
+              for t in range(threads)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        j.flush()
+        recs = read_records(p)
+        assert len(recs) == per_thread * threads
+        assert sorted(r["step"] for r in recs) == \
+            list(range(per_thread * threads))
+        assert fsck_file(p) == []
+
+    def test_journaled_archive_fsck_clean(self, tmp_path):
+        p = self._archive(tmp_path)
+        with ScdaJournal(p, flush_records=2) as j:
+            for s in range(5):
+                j.log(s, {"loss": 1.0 / (s + 1)})
+        assert len(read_records(p)) == 5  # context exit flushed the tail
+        assert fsck_file(p) == []
+
+
+class TestManagerJournal:
+    def test_flush_on_commit(self, tmp_path):
+        from repro.checkpoint import CheckpointManager
+        mgr = CheckpointManager(str(tmp_path), keep=3)
+        tree = {"w": np.arange(8, dtype=np.float32)}
+        j = mgr.journal()
+        j.log(1, {"loss": 2.0})
+        j.log(2, {"loss": 1.0})
+        assert j.pending == 2  # no committed file yet: records buffer
+        mgr.save(2, tree, blocking=True)
+        assert j.pending == 0
+        recs = read_records(mgr.path_for(2))
+        assert [r["step"] for r in recs] == [1, 2]
+        # telemetry follows the NEXT commit into the new file
+        j.log(3, {"loss": 0.5})
+        mgr.save(4, tree, blocking=True)
+        assert [r["step"] for r in read_records(mgr.path_for(4))] == [3]
+        # the journaled checkpoints still restore + fsck + seek cleanly
+        out, step = mgr.restore_latest()
+        np.testing.assert_array_equal(out["w"], tree["w"])
+        assert step == 4
+        assert fsck_file(mgr.path_for(4)) == []
+        ScdaIndex.load_sidecar(mgr.path_for(4))  # sidecar kept fresh
+
+    def test_non_root_journal_is_inert(self, tmp_path):
+        """Replicated training code logs on every rank; only rank 0's
+        journal may buffer or append (no double records, no unbounded
+        non-root buffers)."""
+        from repro.checkpoint import CheckpointManager
+        P = 2
+        comms = ThreadComm.group(P)
+
+        def workload(comm):
+            mgr = CheckpointManager(str(tmp_path), keep=3, comm=comm)
+            j = mgr.journal()
+            j.log(1, {"loss": 2.0})  # every rank logs the replicated value
+            assert j.pending == (1 if comm.rank == 0 else 0)
+            mgr.save(1, {"w": np.ones(8, np.float32)}, blocking=True)
+            assert j.pending == 0
+            return mgr.path_for(1)
+
+        paths = run_ranks(comms, workload)
+        recs = read_records(paths[0])
+        assert [r["step"] for r in recs] == [1]  # exactly once
+
+    def test_journal_binds_to_latest_existing(self, tmp_path):
+        from repro.checkpoint import CheckpointManager
+        mgr = CheckpointManager(str(tmp_path), keep=3)
+        mgr.save(7, {"w": np.ones(4, np.float32)}, blocking=True)
+        mgr2 = CheckpointManager(str(tmp_path), keep=3)  # fresh process
+        j = mgr2.journal()
+        j.log(8, {"loss": 0.1})
+        j.flush()
+        assert [r["step"] for r in read_records(mgr2.path_for(7))] == [8]
+
+
+# --------------------------------------------------------------------------
+# scdatool append / tail + fsck exact offsets
+# --------------------------------------------------------------------------
+
+class TestCliAppendTail:
+    def _two_archives(self, tmp_path):
+        from repro.tools.cli import main
+        a, b = str(tmp_path / "a.scda"), str(tmp_path / "b.scda")
+        rng = random.Random(9)
+        _write_all(a, _random_sections(rng, 3))
+        _write_all(b, _random_sections(rng, 4))
+        return main, a, b
+
+    def test_append_then_fsck_verify(self, tmp_path, capsys):
+        main, a, b = self._two_archives(tmp_path)
+        ScdaIndex.build(a).with_checksums().write_sidecar()
+        assert main(["append", a, b]) == 0
+        out = capsys.readouterr().out
+        assert "appended 4 sections" in out and "3 -> 7" in out
+        assert main(["fsck", a]) == 0
+        assert main(["verify", a]) == 0  # incremental CRCs cover the suffix
+        assert len(ScdaIndex.load_sidecar(a).entries) == 7
+
+    def test_append_no_sidecar_stays_sidecarless(self, tmp_path, capsys):
+        main, a, b = self._two_archives(tmp_path)
+        assert main(["append", a, b]) == 0
+        assert not os.path.exists(a + ".scdax")
+        assert main(["append", "--index", a, b]) == 0
+        assert os.path.exists(a + ".scdax")
+        assert main(["fsck", a]) == 0
+
+    def test_append_matches_serial_copy(self, tmp_path):
+        """append == copy of the concatenation, leaf-wise."""
+        from repro.tools.cli import main
+        rng = random.Random(13)
+        s1, s2 = _random_sections(rng, 2), _random_sections(rng, 2)
+        a = str(tmp_path / "a.scda")
+        oracle = str(tmp_path / "oracle.scda")
+        _write_all(a, s1)
+        # The pump preserves SRC's own user strings, so the oracle numbers
+        # each script from 0 (not consecutively across the two).
+        with fopen_write(None, oracle, user_string=b"user",
+                         vendor=b"vendor") as f:
+            for i, sec in enumerate(s1):
+                _emit(f, i, sec)
+            for i, sec in enumerate(s2):
+                _emit(f, i, sec)
+        src = str(tmp_path / "src.scda")
+        _write_all(src, s2)
+        assert main(["append", a, src]) == 0
+        assert main(["diff", a, oracle]) == 0
+
+    def test_tail_prints_json_lines(self, tmp_path, capsys):
+        from repro.tools.cli import main
+        p = str(tmp_path / "t.scda")
+        _write_all(p, [("B", b"x", False)])
+        with ScdaJournal(p, flush_records=0) as j:
+            j.log(1, {"loss": 0.5})
+            j.log(2, {"loss": 0.25})
+        assert main(["tail", p]) == 0
+        lines = [json.loads(ln) for ln
+                 in capsys.readouterr().out.strip().splitlines()]
+        assert [r["step"] for r in lines] == [1, 2]
+        assert lines[1]["data"]["loss"] == 0.25
+
+    def test_tail_without_journal(self, tmp_path, capsys):
+        from repro.tools.cli import main
+        p = str(tmp_path / "nj.scda")
+        _write_all(p, [("B", b"x", False)])
+        assert main(["tail", p]) == 0
+        assert capsys.readouterr().out.strip() == ""
+
+    def test_append_recover_flag(self, tmp_path, capsys):
+        from repro.tools.cli import main
+        a = str(tmp_path / "a.scda")
+        src = str(tmp_path / "s.scda")
+        secs = [("B", b"one", False)]
+        _write_all(a, secs)
+        _write_all(src, secs)
+        with open(a, "ab") as fh:
+            fh.write(b"torn")
+        assert main(["append", a, src]) == 1  # refuses by default
+        assert main(["append", "--recover", a, src]) == 0
+        assert main(["fsck", a]) == 0
+
+
+class TestFsckExactOffset:
+    def _base(self, tmp_path):
+        p = str(tmp_path / "f.scda")
+        _write_all(p, [("B", b"valid payload", False)])
+        return p, os.path.getsize(p)
+
+    def test_short_garbage_offset_is_eof(self, tmp_path):
+        p, boundary = self._base(tmp_path)
+        with open(p, "ab") as fh:
+            fh.write(b"short!")
+        f = fsck_file(p)
+        assert f and f[0].severity == "error"
+        assert f[0].offset == boundary + 6  # EOF mid-header read
+        assert "validation failed at byte" in f[0].message
+
+    def test_garbage_header_offset_is_boundary(self, tmp_path):
+        p, boundary = self._base(tmp_path)
+        with open(p, "ab") as fh:
+            fh.write(b"\x00" * 64)
+        f = fsck_file(p)
+        assert f and f[0].offset == boundary
+
+    def test_plausible_header_bad_entry_offset_is_entry(self, tmp_path):
+        """Garbage that parses as an A header but carries a malformed
+        count entry anchors at the ENTRY, not the section start."""
+        p, boundary = self._base(tmp_path)
+        with open(p, "ab") as fh:
+            fh.write(spec.section_header(b"A", b"fake"))
+            fh.write(b"N zz" + b"-" * 27 + b"\n")
+        f = fsck_file(p)
+        assert f and f[0].offset == boundary + spec.SECTION_HEADER_BYTES
+        assert str(boundary + 64) in f[0].message
+
+    def test_truncated_payload_offset_is_file_end(self, tmp_path):
+        p = str(tmp_path / "trunc.scda")
+        _write_all(p, [("A", os.urandom(4096), 4096, 1, False)])
+        size = os.path.getsize(p) - 100
+        with open(p, "r+b") as fh:
+            fh.truncate(size)
+        f = fsck_file(p)
+        assert f and f[0].offset == size
