@@ -1,0 +1,143 @@
+"""Full vs incremental (delta) checkpoint saves — the PR-6 claim that
+save cost is proportional to CHANGED bytes, not total bytes.
+
+A base checkpoint is saved with chunk digests recorded, then trees with
+1% / 10% / 50% of their chunks dirtied are saved as deltas against it
+and compared to a full (equally hash-recording) save of the same state:
+
+* the full save rewrites every byte to disk (and digests every byte:
+  CRC32 + the 128-bit SHA-256 prefix);
+* the delta save hashes every byte (the content-addressing floor — one
+  hardware-SHA pass) but checksums and writes only the dirty chunks,
+  so its advantage grows as the changed fraction shrinks.
+
+The second half quantifies the read-side cost of chaining: restoring
+the head of a depth-3 chain (chunks gathered from four archives via one
+overlapped pipeline per source) vs restoring the equivalent flat
+archive.  Byte-identity of the two is pinned by tests/test_delta.py;
+this file only measures the cost.
+
+Methodology mirrors bench_save: random float32 leaves (checkpoint-like
+payloads), ``os.sync()`` between timed regions; full and delta legs are
+interleaved within each rep and reported as per-leg medians so both
+sides of every ratio see the same disk conditions.
+"""
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.checkpoint import pytree_io
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    fn()
+    dt = time.perf_counter() - t0
+    os.sync()
+    return dt
+
+
+def _median(xs):
+    s = sorted(xs)
+    return s[len(s) // 2]
+
+
+def _make_tree(total_mb, nleaves=8):
+    rng = np.random.default_rng(42)
+    per_elems = total_mb * (1 << 20) // nleaves // 4
+    return {f"leaf{i:02d}": rng.standard_normal(per_elems)
+            .astype(np.float32) for i in range(nleaves)}
+
+
+def _dirty_fraction(tree, frac, chunk_bytes, seed=7):
+    """Copy ``tree`` with ~``frac`` of every leaf's chunks changed (one
+    element per dirty chunk — content-addressing cares about which
+    chunks changed, not how much inside each)."""
+    rng = np.random.default_rng(seed)
+    per_chunk = chunk_bytes // 4
+    out = {}
+    for k, v in tree.items():
+        a = v.copy()
+        flat = a.reshape(-1)
+        nchunks = max(1, -(-flat.size * 4 // chunk_bytes))
+        dirty = max(1, int(round(frac * nchunks))) if frac else 0
+        for c in rng.choice(nchunks, size=dirty, replace=False):
+            flat[int(c) * per_chunk] += 1.0
+        out[k] = a
+    return out
+
+
+def run(quick=False):
+    rows = []
+    total_mb = 16 if quick else 64
+    # keep >= 32 chunks per leaf so the 1%/10% dirty fractions do not
+    # both round up to the same single chunk at the quick size
+    chunk_bytes = (64 if quick else 256) << 10
+    # the fsync'd write legs ride shared-host disk weather that varies
+    # several-fold minute to minute, so every rep times the full save
+    # AND every delta save back to back (same conditions for both sides
+    # of the ratio) and the reported figure is the per-leg median
+    reps = 3 if quick else 5
+    tree = _make_tree(total_mb)
+    muts = {pct: _dirty_fraction(tree, pct / 100, chunk_bytes)
+            for pct in (1, 10, 50)}
+    with tempfile.TemporaryDirectory() as d:
+        base = os.path.join(d, "base.scda")
+        base_doc = pytree_io.save(base, tree, step=0,
+                                  chunk_bytes=chunk_bytes,
+                                  record_hashes=True)
+
+        full = os.path.join(d, "full.scda")
+        t_full, t_pct = [], {1: [], 10: [], 50: []}
+        for _ in range(reps):
+            t_full.append(_timed(
+                lambda: pytree_io.save(full, tree, step=1,
+                                       chunk_bytes=chunk_bytes,
+                                       record_hashes=True)))
+            for pct, mut in muts.items():
+                path = os.path.join(d, f"delta_{pct}.scda")
+                t_pct[pct].append(_timed(
+                    lambda: pytree_io.save(path, mut, step=1,
+                                           chunk_bytes=chunk_bytes,
+                                           record_hashes=True,
+                                           delta_base=(base_doc,
+                                                       "base.scda"))))
+        tf = _median(t_full)
+        rows.append(("delta.save_full", tf * 1e6,
+                     f"{total_mb / tf:.0f}MB/s"))
+        for pct in (1, 10, 50):
+            t = _median(t_pct[pct])
+            size_mb = os.path.getsize(
+                os.path.join(d, f"delta_{pct}.scda")) / (1 << 20)
+            rows.append((f"delta.save_{pct}pct", t * 1e6,
+                         f"{total_mb / t:.0f}MB/s "
+                         f"speedup={tf / t:.1f}x "
+                         f"wrote={size_mb:.1f}MB"))
+
+        # depth-3 chain restore vs the equivalent flat restore
+        cur, doc, prev = tree, base_doc, "base.scda"
+        head = base
+        for k in range(3):
+            cur = _dirty_fraction(cur, 0.10, chunk_bytes, seed=k)
+            head = os.path.join(d, f"chain_{k}.scda")
+            doc = pytree_io.save(head, cur, step=k + 1,
+                                 chunk_bytes=chunk_bytes,
+                                 record_hashes=True,
+                                 delta_base=(doc, prev))
+            prev = os.path.basename(head)
+        flat = os.path.join(d, "flat.scda")
+        pytree_io.save(flat, cur, step=3, chunk_bytes=chunk_bytes,
+                       record_hashes=True)
+        t_flat, t_chain = [], []
+        for _ in range(reps):
+            t_flat.append(_timed(lambda: pytree_io.restore(flat)))
+            t_chain.append(_timed(lambda: pytree_io.restore(head)))
+        tr, tc = _median(t_flat), _median(t_chain)
+        rows.append(("delta.restore_flat", tr * 1e6,
+                     f"{total_mb / tr:.0f}MB/s"))
+        rows.append(("delta.restore_chain3", tc * 1e6,
+                     f"{total_mb / tc:.0f}MB/s "
+                     f"cost={tc / tr:.1f}x"))
+    return rows

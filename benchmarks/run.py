@@ -40,6 +40,7 @@ def _distill(rows, quick: bool) -> dict:
         "restore_MBps": {},
         "save_MBps": {},
         "append": {},
+        "delta": {},
     }
     for name, us, derived in rows:
         m = re.match(r"parallel_io\.(write|read|write_sync)_p(\d+)", name)
@@ -80,6 +81,15 @@ def _distill(rows, quick: bool) -> dict:
             m2 = re.search(r"speedup=(\d+(?:\.\d+)?)x", derived)
             if m2:
                 out["append"]["reopen_speedup_x"] = float(m2.group(1))
+        elif name.startswith("delta."):
+            key = name.split(".", 1)[1]
+            out["delta"][key + "_MBps"] = _mbps(derived)
+            m2 = re.search(r"speedup=(\d+(?:\.\d+)?)x", derived)
+            if m2:
+                out["delta"][key + "_speedup_x"] = float(m2.group(1))
+            m2 = re.search(r"cost=(\d+(?:\.\d+)?)x", derived)
+            if m2:
+                out["delta"][key + "_cost_x"] = float(m2.group(1))
         elif name.startswith("index."):
             # strip the section-count suffix so quick/full keys align
             key = re.sub(r"_\d+$", "", name.split(".", 1)[1])
@@ -101,9 +111,9 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_append, bench_checkpoint,
-                            bench_compression, bench_format, bench_index,
-                            bench_iovec, bench_parallel_io, bench_restore,
-                            bench_save, bench_roofline)
+                            bench_compression, bench_delta, bench_format,
+                            bench_index, bench_iovec, bench_parallel_io,
+                            bench_restore, bench_save, bench_roofline)
     suites = [
         ("format", bench_format.run),
         ("parallel_io", bench_parallel_io.run),
@@ -113,6 +123,7 @@ def main() -> None:
         ("checkpoint", bench_checkpoint.run),
         ("restore", bench_restore.run),
         ("save", bench_save.run),
+        ("delta", bench_delta.run),
         ("append", bench_append.run),
         ("roofline", bench_roofline.run),
     ]

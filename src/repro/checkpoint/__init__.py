@@ -10,10 +10,11 @@ first-class framework feature.
         if step % 500 == 0:
             mgr.save(step, state)          # async, atomic, serial-equivalent
 """
+from repro.checkpoint.delta import (verify_chain, squash, checkpoint_diff)
 from repro.checkpoint.layout import (shard_runs, chunk_sizes,
                                      chunks_for_runs, runs_cover_exactly)
 from repro.checkpoint.manifest import (MANIFEST_USER_STRING,
-                                       STATUS_USER_STRING)
+                                       STATUS_USER_STRING, content_id)
 from repro.checkpoint.pytree_io import (save, restore, restore_leaf,
                                         read_manifest, flatten_named,
                                         leaf_name, DEFAULT_CHUNK_BYTES)
@@ -21,8 +22,8 @@ from repro.checkpoint.manager import CheckpointManager, snapshot_to_host
 
 __all__ = [
     "shard_runs", "chunk_sizes", "chunks_for_runs", "runs_cover_exactly",
-    "MANIFEST_USER_STRING", "STATUS_USER_STRING",
+    "MANIFEST_USER_STRING", "STATUS_USER_STRING", "content_id",
     "save", "restore", "restore_leaf", "read_manifest", "flatten_named",
     "leaf_name", "DEFAULT_CHUNK_BYTES", "CheckpointManager",
-    "snapshot_to_host",
+    "snapshot_to_host", "verify_chain", "squash", "checkpoint_diff",
 ]

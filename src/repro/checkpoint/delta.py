@@ -1,0 +1,661 @@
+"""Content-addressed incremental checkpoints — save cost ∝ changed bytes.
+
+A delta checkpoint stores only the leaf chunks whose content changed
+since a base checkpoint, and records every unchanged chunk as a by-hash
+reference into the base archive.  The moving parts:
+
+* **Digests** (:func:`repro.checkpoint.manifest.chunk_strong_hashes`):
+  every leaf's byte stream is chunked deterministically
+  (:func:`layout.chunk_sizes`) and each chunk hashed at snapshot time
+  with a 128-bit SHA-256 prefix over the *uncompressed* bytes, so a
+  chunk's identity survives a compression-setting change.  The strong
+  hash alone keys the dedup decision; the manifest's CRC32 column is a
+  read-side integrity checksum — computed for stored chunks, inherited
+  from the base for unchanged ones — and a CRC32 collision alone can
+  never mark a chunk unchanged.
+* **Planning** (:func:`plan_refs`): the fresh digest tables are compared
+  against the base manifest's.  Unchanged chunks become ``(src, elem)``
+  references — fully *flattened* at save time (a chunk the base itself
+  borrowed from its own base is referenced at its true home), so a
+  chained restore needs only the newest manifest, never a recursive
+  walk.  Changed chunks ride the normal pipelined snapshot → deflate →
+  pwritev path into a V/zV varray holding just the present subset — the
+  archive stays byte-valid scda end to end.
+* **Identity** (:func:`repro.checkpoint.manifest.content_id`): each
+  referenced base is pinned by a deterministic content id recomputed
+  when the base is opened; a base rewritten in place since the delta was
+  saved fails loudly (CORRUPT_CHECKSUM) instead of assembling silently
+  wrong tensors.  Mode-'a' appends (the journal) do not disturb the id —
+  references resolve through the base's own index by user string, never
+  by remembered offsets.
+* **Resolution** (:class:`ChainResolver` / :func:`restore_chained`):
+  restore walks the newest manifest, groups every assembly unit's chunks
+  by source archive, and drives one overlapped read pipeline per archive
+  (``prefetch_bytes <= 0`` is the serial oracle, as everywhere).  Every
+  chunk is CRC32-verified against the manifest on the way in, with the
+  exact failing byte offset attached on mismatch.
+
+Tooling on top: :func:`verify_chain` (digest-verify every chunk across
+the chain), :func:`squash` (materialize a self-contained archive,
+byte-identical to a direct full save of the same state), and
+:func:`checkpoint_diff` (logical chain-aware diff).
+"""
+from __future__ import annotations
+
+import os
+import zlib
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.checkpoint import layout, manifest as mf
+from repro.core import codec, partition, spec
+from repro.core.errors import ScdaError, ScdaErrorCode
+from repro.core.pipeline import ReadItem, run_pipeline
+from repro.core.reader import fopen_read
+
+#: Enable incremental saves in :class:`CheckpointManager` by default.
+DELTA_ENV = "REPRO_SCDA_DELTA"
+#: Maximum chain depth before the manager forces a full save (bounds
+#: restore fan-in and lets retention eventually drop old bases).
+CHAIN_ENV = "REPRO_SCDA_DELTA_CHAIN"
+DEFAULT_CHAIN = 8
+
+
+def delta_enabled_default() -> bool:
+    return os.environ.get(DELTA_ENV, "0") not in ("0", "", "no")
+
+
+def chain_limit() -> int:
+    try:
+        return max(1, int(os.environ.get(CHAIN_ENV, DEFAULT_CHAIN)))
+    except ValueError:
+        return DEFAULT_CHAIN
+
+
+def base_usable(doc: Dict[str, Any]) -> bool:
+    """Can ``doc``'s archive serve as a delta base?  It must carry chunk
+    digests for at least one leaf (pre-delta archives hash nothing —
+    a delta against them would store every byte for zero benefit)."""
+    return any(l.get("chunks") for l in doc.get("leaves", []))
+
+
+# --------------------------------------------------------------------------
+# Save-side planning
+# --------------------------------------------------------------------------
+
+def plan_refs(specs: List[mf.LeafSpec], base_doc: Dict[str, Any],
+              base_file: str,
+              views: Optional[List[Any]] = None) -> Dict[str, Any]:
+    """Annotate ``specs`` (which already carry fresh ``chunks`` hash
+    tables) with cross-archive chunk references against ``base_doc``.
+
+    The dedup decision is keyed on the 128-bit strong hash alone (plus
+    full geometry comparability) — the standard content-addressing
+    assumption.  CRC32 is a read-side integrity checksum, never a dedup
+    key, so a CRC32 collision alone can never mark a chunk unchanged.
+    When ``views`` (per-spec byte views, aligned with ``specs``) are
+    given, missing CRC32 tables are completed here: stored chunks are
+    checksummed from the bytes in hand, unchanged chunks inherit the
+    base's CRC32 (their bytes are identical by hash equality) — the
+    incremental save never CRCs the unchanged fraction.
+
+    Mutates each spec in place — ``store="delta"``, ``present`` (chunk
+    indices stored in this archive), ``src`` (per chunk: 0 = this
+    archive, k ≥ 1 = the k-th entry of the returned ``bases`` list),
+    ``elem`` (element index in the source section; for src 0 the
+    position within ``present``), and ``sections`` (per referenced base,
+    the leaf's section user string there) — and returns the manifest's
+    top-level delta table ``{"bases": [...], "depth": k}``.
+
+    References are flattened: a chunk the base itself borrowed resolves
+    to its true home archive, so the table is transitive-closure-free
+    and restore never recurses.
+    """
+    bases: List[Dict[str, str]] = []
+    interned: Dict[Tuple[str, str], int] = {}
+
+    def intern(file: str, cid: str) -> int:
+        key = (file, cid)
+        if key not in interned:
+            bases.append({"file": file, "id": cid})
+            interned[key] = len(bases)
+        return interned[key]
+
+    base_by_name = {bl["name"]: (bi, bl)
+                    for bi, bl in enumerate(base_doc.get("leaves", []))}
+    base_id = mf.content_id(base_doc)
+    base_bases = (base_doc.get("delta") or {}).get("bases", [])
+
+    for si, spec_ in enumerate(specs):
+        table = spec_["chunks"]
+        cb = int(table["bytes"])
+        hashes = table["hash"]
+        sizes = layout.chunk_sizes(spec_["nbytes"], cb)
+        view = views[si] if views is not None else None
+        crcs: Optional[List[int]] = \
+            None if table.get("crc32") is not None else []
+        if crcs is not None and view is None:
+            raise ValueError(
+                f"leaf {spec_['name']}: chunk table has no crc32 and no "
+                f"byte view was supplied to complete it")
+        src: List[int] = []
+        elem: List[int] = []
+        present: List[int] = []
+        sections: Dict[str, str] = {}
+        hit = base_by_name.get(spec_["name"])
+        btable = hit[1].get("chunks") if hit else None
+        comparable = (
+            btable is not None
+            and hit[1].get("shape") == spec_["shape"]
+            and hit[1].get("dtype") == spec_["dtype"]
+            and hit[1].get("nbytes") == spec_["nbytes"]
+            and int(btable.get("bytes", -1)) == cb
+            and len(btable.get("hash", ())) == len(hashes))
+        for c in range(len(hashes)):
+            unchanged = comparable and btable["hash"][c] == hashes[c]
+            if not unchanged:
+                src.append(0)
+                elem.append(len(present))
+                present.append(c)
+                if crcs is not None:
+                    pos = c * cb
+                    crcs.append(zlib.crc32(
+                        view[pos:pos + sizes[c]]) & 0xFFFFFFFF)
+                continue
+            if crcs is not None:
+                crcs.append(btable["crc32"][c])
+            bi, bl = hit
+            if bl.get("store") == "delta" and bl["src"][c] != 0:
+                bb = base_bases[bl["src"][c] - 1]
+                sid = intern(bb["file"], bb["id"])
+                user = bl["sections"][str(bl["src"][c])]
+            elif bl.get("store") == "delta":
+                sid = intern(base_file, base_id)
+                user = mf.leaf_user_string(bi).decode("ascii")
+            else:
+                sid = intern(base_file, base_id)
+                user = mf.leaf_user_string(bi).decode("ascii")
+            belem = bl["elem"][c] if bl.get("store") == "delta" else c
+            src.append(sid)
+            elem.append(belem)
+            sections[str(sid)] = user
+        if crcs is not None:
+            table["crc32"] = crcs
+        spec_["store"] = "delta"
+        spec_["present"] = present
+        spec_["src"] = src
+        spec_["elem"] = elem
+        if sections:
+            spec_["sections"] = sections
+    depth = int((base_doc.get("delta") or {}).get("depth", 0)) + 1
+    return {"bases": bases, "depth": depth}
+
+
+# --------------------------------------------------------------------------
+# Restore-side resolution
+# --------------------------------------------------------------------------
+
+class _SrcSection:
+    """One leaf's section in one source archive, parsed for chunk reads."""
+
+    __slots__ = ("entry", "kind", "esizes", "usizes", "csizes", "offs",
+                 "path")
+
+    def __init__(self, r, sec: int) -> None:
+        e = r.index().entries[sec]
+        r.verify_index_entry(sec, e)
+        self.entry = e
+        self.kind = e.kind
+        self.path = r.path
+        self.esizes = self.usizes = self.csizes = self.offs = None
+        if e.kind == "V":
+            self.esizes = r._parse_entries(e.entries_start, 0, e.N, b"E")
+            self.offs = partition.offsets(self.esizes)
+        elif e.kind == "zV":
+            self.usizes = r._parse_entries(e.entries_start, 0, e.N, b"U")
+            self.csizes = r._parse_entries(e.v_entries_start, 0, e.N, b"E")
+            self.offs = partition.offsets(self.csizes)
+        elif e.kind != "A":
+            raise ScdaError(
+                ScdaErrorCode.CORRUPT_SECTION_TYPE,
+                f"{r.path}: section {sec} has kind {e.kind}, cannot hold "
+                f"leaf chunks", offset=e.start)
+
+    def chunk_read(self, elemi: int, usize: int, chunk_bytes: int,
+                   leaf: str) -> Tuple[Tuple[int, int], bool, Optional[int]]:
+        """Locate one chunk: ``((offset, length), inflate, expected)``.
+
+        ``elemi`` is the element index the manifest recorded for the
+        chunk in this section (for A sections, the chunk index itself);
+        a source whose element table disagrees with the manifest's chunk
+        geometry is corrupt — CORRUPT_CHECKSUM at the failing entry.
+        """
+        e = self.entry
+        if self.kind == "A":
+            off = elemi * chunk_bytes
+            if off + usize > e.N * e.E:
+                raise ScdaError(
+                    ScdaErrorCode.CORRUPT_CHECKSUM,
+                    f"leaf {leaf}: chunk element {elemi} extends past the "
+                    f"source section in {self.path}",
+                    offset=e.data_start + off)
+            return (e.data_start + off, usize), False, None
+        if elemi >= e.N:
+            raise ScdaError(
+                ScdaErrorCode.CORRUPT_CHECKSUM,
+                f"leaf {leaf}: chunk element {elemi} out of range "
+                f"(section holds {e.N}) in {self.path}",
+                offset=e.entries_start)
+        entry_off = e.entries_start + elemi * spec.COUNT_ENTRY_BYTES
+        if self.kind == "V":
+            if self.esizes[elemi] != usize:
+                raise ScdaError(
+                    ScdaErrorCode.CORRUPT_CHECKSUM,
+                    f"leaf {leaf}: source element {elemi} holds "
+                    f"{self.esizes[elemi]} bytes, chunk geometry needs "
+                    f"{usize} ({self.path})", offset=entry_off)
+            return ((e.data_start + self.offs[elemi], usize), False, None)
+        if self.usizes[elemi] != usize:
+            raise ScdaError(
+                ScdaErrorCode.CORRUPT_CHECKSUM,
+                f"leaf {leaf}: source element {elemi} inflates to "
+                f"{self.usizes[elemi]} bytes, chunk geometry needs "
+                f"{usize} ({self.path})", offset=entry_off)
+        return ((e.v_data_start + self.offs[elemi], self.csizes[elemi]),
+                True, usize)
+
+
+class ChainResolver:
+    """Lazy, content-id-verified access to a delta chain's archives.
+
+    Source 0 is the primary reader (already open); sources k ≥ 1 open
+    the manifest's k-th base on first use, recompute its content id from
+    its own manifest, and refuse a mismatch — the stale-base guard.
+    Base readers are rank-local (plain positioned reads on a shared
+    file), so chained restores stay partition-independent.
+    """
+
+    def __init__(self, r, doc: Dict[str, Any]) -> None:
+        self.primary = r
+        self.doc = doc
+        self.base_dir = os.path.dirname(r.path)
+        self.bases = (doc.get("delta") or {}).get("bases", [])
+        self._readers: Dict[int, Any] = {0: r}
+        self._sections: Dict[Tuple[int, bytes], _SrcSection] = {}
+
+    def base_file(self, sid: int) -> str:
+        if sid == 0:
+            return os.path.basename(self.primary.path)
+        return self.bases[sid - 1]["file"]
+
+    def reader(self, sid: int):
+        r = self._readers.get(sid)
+        if r is not None:
+            return r
+        from repro.checkpoint import pytree_io
+        if not 1 <= sid <= len(self.bases):
+            raise ScdaError(
+                ScdaErrorCode.CORRUPT_ENCODING,
+                f"chunk reference to base #{sid}, manifest lists "
+                f"{len(self.bases)}")
+        b = self.bases[sid - 1]
+        path = os.path.join(self.base_dir, b["file"])
+        try:
+            r = fopen_read(None, path)
+        except ScdaError as e:
+            raise ScdaError(
+                e.code, f"delta base {b['file']} unreadable: {e}",
+                offset=e.offset) from e
+        try:
+            bdoc = pytree_io._read_header_sections(r)
+            got = mf.content_id(bdoc)
+            if got != b.get("id"):
+                raise ScdaError(
+                    ScdaErrorCode.CORRUPT_CHECKSUM,
+                    f"delta base {b['file']}: content id {got} != recorded "
+                    f"{b.get('id')} — the base archive was rewritten since "
+                    f"this delta was saved", offset=0)
+            pytree_io._adopt_sidecar(r)
+        except BaseException:
+            r.close()
+            raise
+        self._readers[sid] = r
+        return r
+
+    def section(self, sid: int, user: bytes) -> _SrcSection:
+        key = (sid, user)
+        s = self._sections.get(key)
+        if s is None:
+            r = self.reader(sid)
+            sec = r.index().find(user)
+            if sec < 0:
+                raise ScdaError(
+                    ScdaErrorCode.CORRUPT_ENCODING,
+                    f"{self.base_file(sid)}: no section with user string "
+                    f"{user!r} (delta chunk source)")
+            s = _SrcSection(r, sec)
+            self._sections[key] = s
+        return s
+
+    def close(self) -> None:
+        for sid, r in list(self._readers.items()):
+            if sid != 0:
+                try:
+                    r.close()
+                except ScdaError:
+                    pass
+        self._readers = {0: self.primary}
+        self._sections.clear()
+
+
+def _scatter_subset(runs, chunks: Dict[int, Any], chunk_bytes: int,
+                    arr: np.ndarray) -> None:
+    """Scatter a chunk *subset* into a unit buffer — the per-source half
+    of :func:`pytree_io._scatter_chunks_np`, tolerating absent chunks
+    (they arrive from a different source archive's pipeline)."""
+    for goff, loff, n in runs:
+        for c, data in chunks.items():
+            cstart = c * chunk_bytes
+            lo = max(goff, cstart)
+            hi = min(goff + n, cstart + len(data))
+            if lo >= hi:
+                continue
+            arr[loff + (lo - goff):loff + (hi - goff)] = \
+                np.frombuffer(data, np.uint8, hi - lo, lo - cstart)
+
+
+def restore_chained(r, doc: Dict[str, Any], wanted, prefetch_bytes: int, *,
+                    resolver: Optional[ChainResolver] = None,
+                    strong: bool = False) -> Dict[str, Any]:
+    """Restore ``wanted`` leaves of a delta checkpoint across its chain.
+
+    ``wanted``: ``(name, manifest_index, spec, target)`` tuples as in
+    :func:`pytree_io._restore_pipelined`.  Every assembly unit's chunks
+    are grouped by source archive and each archive is drained through
+    one overlapped read pipeline (serial when ``prefetch_bytes <= 0``).
+    Every chunk is CRC32-verified against the manifest digest table —
+    corruption anywhere in the chain surfaces as CORRUPT_CHECKSUM with
+    the absolute failing byte offset in the archive that holds the
+    chunk.  ``strong`` additionally checks the 128-bit SHA-256 (the
+    ``verify --chain`` mode).
+    """
+    from repro.checkpoint import pytree_io as pio
+    own = resolver is None
+    resolver = resolver or ChainResolver(r, doc)
+    try:
+        return _restore_chained(pio, resolver, wanted, prefetch_bytes,
+                                strong)
+    finally:
+        if own:
+            resolver.close()
+
+
+def _restore_chained(pio, resolver: ChainResolver, wanted,
+                     prefetch_bytes: int, strong: bool) -> Dict[str, Any]:
+    leaves: List[Dict[str, Any]] = []
+    items_by_src: Dict[int, List[ReadItem]] = {}
+    for leaf_pos, (name, i, spec_, target) in enumerate(wanted):
+        table = spec_.get("chunks")
+        if spec_.get("store") != "delta" or table is None:
+            raise ScdaError(
+                ScdaErrorCode.CORRUPT_ENCODING,
+                f"leaf {name}: delta manifest entry lacks chunk references")
+        leaf = pio._leaf_layout(name, spec_, target)
+        cb = int(table["bytes"])
+        usizes = layout.chunk_sizes(spec_["nbytes"], cb)
+        src, elem = spec_["src"], spec_["elem"]
+        if not (len(src) == len(elem) == len(usizes)
+                == len(table["crc32"]) == len(table["hash"])):
+            raise ScdaError(
+                ScdaErrorCode.CORRUPT_ENCODING,
+                f"leaf {name}: chunk reference tables disagree with the "
+                f"leaf geometry")
+        for ui, unit in enumerate(leaf["units"]):
+            needed = layout.chunks_for_runs(unit.runs, cb)
+            by_sid: Dict[int, List[int]] = {}
+            for c in needed:
+                by_sid.setdefault(src[c], []).append(c)
+            for sid, cs in sorted(by_sid.items()):
+                user = (mf.leaf_user_string(i) if sid == 0
+                        else spec_["sections"][str(sid)].encode("ascii"))
+                sect = resolver.section(sid, user)
+                plan = []
+                inflate = False
+                for c in cs:
+                    ext, inf, _exp = sect.chunk_read(elem[c], usizes[c],
+                                                     cb, name)
+                    inflate = inf
+                    plan.append((c, ext))
+                plan.sort(key=lambda p: p[1][0])
+                order = [c for c, _ in plan]
+                extents = [ext for _, ext in plan]
+                items_by_src.setdefault(sid, []).append(ReadItem(
+                    (leaf_pos, ui, order, sid, extents), extents,
+                    inflate=inflate,
+                    expected_sizes=([usizes[c] for c in order]
+                                    if inflate else None)))
+                leaf["pending"] += 1
+        leaves.append(leaf)
+
+    values: Dict[str, Any] = {}
+    for leaf in leaves:  # zero-byte / fully-absent leaves
+        if leaf["pending"] == 0:
+            values[leaf["name"]] = pio._finalize_leaf(leaf)
+    for sid in sorted(items_by_src):
+        rr = resolver.reader(sid)
+        items = sorted(items_by_src[sid], key=lambda it: it.start())
+        try:
+            _drain_source(pio, resolver, leaves, values, rr, items,
+                          prefetch_bytes, strong)
+        except ScdaError as e:
+            if e.offset is not None:
+                raise
+            # the codec pool raises without a position — re-find the
+            # failing stream serially so the error names the exact byte
+            raise _localize_failure(rr, items, e)
+    return values
+
+
+def _localize_failure(rr, items: List[ReadItem], err: ScdaError) \
+        -> ScdaError:
+    """Pin an offset-less inflate failure to the first bad stream —
+    corruption reports must carry the exact byte, not just 'a deflate
+    stream somewhere in this archive broke'."""
+    for it in items:
+        if not it.inflate:
+            continue
+        for j, (off, n) in enumerate(it.extents):
+            try:
+                raw = codec.decompress(rr._backend.pread(off, n))
+            except ScdaError:
+                return err.at(off)
+            if it.expected_sizes is not None \
+                    and len(raw) != it.expected_sizes[j]:
+                return err.at(off)
+    return err
+
+
+def _drain_source(pio, resolver: ChainResolver, leaves, values, rr,
+                  items: List[ReadItem], prefetch_bytes: int,
+                  strong: bool) -> None:
+    for key, res in run_pipeline(rr._backend, items, prefetch_bytes):
+        leaf_pos, ui, order, sid_, extents = key
+        leaf = leaves[leaf_pos]
+        table = leaf["spec"]["chunks"]
+        cb = int(table["bytes"])
+        chunks: Dict[int, Any] = {}
+        for c, payload, ext in zip(order, res, extents):
+            if (zlib.crc32(payload) & 0xFFFFFFFF) != table["crc32"][c]:
+                raise ScdaError(
+                    ScdaErrorCode.CORRUPT_CHECKSUM,
+                    f"leaf {leaf['name']}: chunk {c} from "
+                    f"{resolver.base_file(sid_)} fails its recorded "
+                    f"CRC32", offset=ext[0])
+            if strong:
+                got = mf.chunk_hash(bytes(payload))
+                if got != table["hash"][c]:
+                    raise ScdaError(
+                        ScdaErrorCode.CORRUPT_CHECKSUM,
+                        f"leaf {leaf['name']}: chunk {c} from "
+                        f"{resolver.base_file(sid_)} fails its recorded "
+                        f"content hash", offset=ext[0])
+            chunks[c] = payload
+        unit = leaf["units"][ui]
+        _scatter_subset(unit.runs, chunks, cb, unit.arr)
+        leaf["pending"] -= 1
+        if leaf["pending"] == 0:
+            values[leaf["name"]] = pio._finalize_leaf(leaf)
+
+
+# --------------------------------------------------------------------------
+# Chain tooling: verify / squash / diff
+# --------------------------------------------------------------------------
+
+def verify_chain(path: str) -> List[str]:
+    """Digest-verify every chunk of a checkpoint across its delta chain.
+
+    For delta archives each leaf is resolved through the chain with both
+    the CRC32 and the strong hash checked per chunk; full archives with
+    recorded digest tables are re-hashed leaf by leaf.  Returns problem
+    strings (empty = clean); collection is per leaf, so one bad leaf
+    does not mask the rest.
+    """
+    from repro.checkpoint import pytree_io as pio
+    problems: List[str] = []
+    with fopen_read(None, path) as r:
+        doc = pio._read_header_sections(r)
+        pio._adopt_sidecar(r)
+        resolver = ChainResolver(r, doc)
+        try:
+            for i, spec_ in enumerate(doc["leaves"]):
+                name = spec_["name"]
+                table = spec_.get("chunks")
+                if table is None:
+                    if doc.get("delta"):
+                        problems.append(
+                            f"leaf {name}: no chunk digests recorded")
+                    continue
+                try:
+                    if doc.get("delta"):
+                        restore_chained(r, doc, [(name, i, spec_, None)], 0,
+                                        resolver=resolver, strong=True)
+                    else:
+                        values = pio._restore_pipelined(
+                            r, [(name, i, spec_, None)], 0)
+                        host = np.asarray(values[name])
+                        view = pio._byte_view(host)
+                        sizes = layout.chunk_sizes(spec_["nbytes"],
+                                                   int(table["bytes"]))
+                        crcs, hashes = mf.chunk_digests(view, sizes)
+                        for c, (crc, h) in enumerate(zip(crcs, hashes)):
+                            if (crc != table["crc32"][c]
+                                    or h != table["hash"][c]):
+                                problems.append(
+                                    f"leaf {name}: chunk {c} fails its "
+                                    f"recorded digest")
+                except ScdaError as e:
+                    problems.append(f"leaf {name}: {e}")
+        finally:
+            resolver.close()
+    return problems
+
+
+def squash(src_path: str, dst_path: str, *, comm=None,
+           write_window: Optional[int] = None,
+           prefetch_bytes: Optional[int] = None) -> Dict[str, Any]:
+    """Materialize a self-contained full checkpoint from a delta chain.
+
+    Leaves are resolved through the chain (overlapped, digest-checked)
+    and rewritten in manifest order with fresh digest tables — the
+    output is byte-identical to a direct full ``save(...,
+    record_hashes=True)`` of the same state, so a squashed archive can
+    seed a new chain.  Works on full archives too (a digest-recording
+    rewrite).  Returns the new manifest document.
+    """
+    from repro.checkpoint import pytree_io as pio
+    pf = pio._effective_prefetch(prefetch_bytes)
+    with fopen_read(None, src_path) as r:
+        doc = pio._read_header_sections(r)
+        pio._adopt_sidecar(r)
+        wanted = [(s["name"], i, s, None)
+                  for i, s in enumerate(doc["leaves"])]
+        if doc.get("delta"):
+            values = restore_chained(r, doc, wanted, pf)
+        elif wanted:
+            values = pio._restore_pipelined(r, wanted, pf)
+        else:
+            values = {}
+    compressed = any(bool(s.get("compressed")) for s in doc["leaves"])
+    chunk_bytes = pio.DEFAULT_CHUNK_BYTES
+    for s in doc["leaves"]:
+        if s.get("chunks"):
+            chunk_bytes = int(s["chunks"]["bytes"])
+            break
+        if s.get("chunk_bytes"):
+            chunk_bytes = int(s["chunk_bytes"])
+            break
+    arrays: List[Any] = []
+    leaves: List[mf.LeafSpec] = []
+    for s in doc["leaves"]:
+        arrays.append(values[s["name"]])
+        leaves.append(mf.LeafSpec.make(
+            s["name"], tuple(s["shape"]), mf.dtype_from_name(s["dtype"]),
+            compressed, chunk_bytes))
+    return pio._write_checkpoint(
+        dst_path, comm=comm, step=doc.get("step"), leaves=leaves,
+        arrays=arrays, aux=doc.get("aux", {}), compressed=compressed,
+        chunk_bytes=chunk_bytes, write_window=write_window,
+        record_hashes=True)
+
+
+def checkpoint_diff(path_a: str, path_b: str) -> List[str]:
+    """Logical diff of two checkpoints, chain-aware.
+
+    Compares step, aux, and leaf geometry from the manifests; leaf
+    payloads compare by digest table when both sides recorded one under
+    the same chunking (no payload reads at all), and by resolved bytes
+    otherwise — so a delta archive diffs against a full one without ever
+    materializing the unchanged fraction.  Returns difference lines
+    (empty = logically identical).
+    """
+    from repro.checkpoint import pytree_io as pio
+    da, db = pio.read_manifest(path_a), pio.read_manifest(path_b)
+    lines: List[str] = []
+    if da.get("step") != db.get("step"):
+        lines.append(f"step: {da.get('step')} != {db.get('step')}")
+    aux_a, aux_b = da.get("aux", {}), db.get("aux", {})
+    for k in sorted(set(aux_a) | set(aux_b)):
+        if (k in aux_a) != (k in aux_b) or aux_a.get(k) != aux_b.get(k):
+            lines.append(f"aux {k}: {aux_a.get(k, '<absent>')!r} != "
+                         f"{aux_b.get(k, '<absent>')!r}")
+    la = {l["name"]: l for l in da["leaves"]}
+    lb = {l["name"]: l for l in db["leaves"]}
+    for n in sorted(set(la) | set(lb)):
+        if n not in lb:
+            lines.append(f"leaf {n}: only in {os.path.basename(path_a)}")
+            continue
+        if n not in la:
+            lines.append(f"leaf {n}: only in {os.path.basename(path_b)}")
+            continue
+        a, b = la[n], lb[n]
+        if a["shape"] != b["shape"] or a["dtype"] != b["dtype"]:
+            lines.append(
+                f"leaf {n}: geometry {a['shape']}/{a['dtype']} != "
+                f"{b['shape']}/{b['dtype']}")
+            continue
+        ta, tb = a.get("chunks"), b.get("chunks")
+        if ta and tb and int(ta["bytes"]) == int(tb["bytes"]):
+            if ta["hash"] != tb["hash"] or ta["crc32"] != tb["crc32"]:
+                diff = [c for c in range(len(ta["hash"]))
+                        if ta["hash"][c] != tb["hash"][c]
+                        or ta["crc32"][c] != tb["crc32"][c]]
+                lines.append(f"leaf {n}: {len(diff)}/{len(ta['hash'])} "
+                             f"chunks differ (first: chunk "
+                             f"{diff[0] if diff else '?'})")
+            continue
+        va = np.asarray(pio.restore_leaf(path_a, n))
+        vb = np.asarray(pio.restore_leaf(path_b, n))
+        if bytes(pio._byte_view(va)) != bytes(pio._byte_view(vb)):
+            lines.append(f"leaf {n}: payload bytes differ")
+    return lines

@@ -16,6 +16,12 @@ errors should never crash the simulation"):
     file does not know or care how many hosts wrote it.
   * **Retention**: keep the newest ``keep`` checkpoints (always ≥ 1), so a
     corrupted latest file can fall back to an older one.
+  * **Incremental**: with ``delta=True`` (or ``REPRO_SCDA_DELTA=1``) a
+    save stores only the leaf chunks whose content changed since the
+    newest committed checkpoint; unchanged chunks become by-hash
+    references into earlier archives.  Retention is chain-aware — every
+    base a retained delta still references (transitively) is protected,
+    so dropping old steps never strands a chain.
   * **Journaled**: :meth:`CheckpointManager.journal` streams training
     telemetry (loss/lr/eval scalars) into the newest committed checkpoint
     file via mode-'a' appends; buffered records are flushed right after
@@ -32,6 +38,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
+from repro.checkpoint import delta as _delta
 from repro.checkpoint import pytree_io
 from repro.core import ScdaError
 from repro.core.comm import Communicator, SerialComm
@@ -63,13 +70,24 @@ class CheckpointManager:
                  compressed: bool = False,
                  comm: Optional[Communicator] = None,
                  chunk_bytes: int = pytree_io.DEFAULT_CHUNK_BYTES,
-                 index_sidecar: bool = True) -> None:
+                 index_sidecar: bool = True,
+                 delta: Optional[bool] = None,
+                 delta_chain: Optional[int] = None) -> None:
         self.directory = directory
         self.keep = max(1, keep)
         self.compressed = compressed
         self.comm = comm or SerialComm()
         self.chunk_bytes = chunk_bytes
         self.index_sidecar = index_sidecar
+        # Incremental (delta) saves: None defers to REPRO_SCDA_DELTA; the
+        # chain depth cap (REPRO_SCDA_DELTA_CHAIN) forces a periodic full
+        # save so restore fan-in stays bounded and retention can
+        # eventually drop old bases.
+        self.delta = (_delta.delta_enabled_default()
+                      if delta is None else bool(delta))
+        self.delta_chain = (_delta.chain_limit()
+                            if delta_chain is None else max(1, delta_chain))
+        self._last_doc: Optional[Tuple[Dict[str, Any], str]] = None
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
         self._journal = None  # lazy ScdaJournal (see journal())
@@ -121,18 +139,28 @@ class CheckpointManager:
 
     # -- saving ----------------------------------------------------------------
     def save(self, step: int, tree, *, blocking: bool = False,
-             aux_extra: Optional[Dict[str, Any]] = None) -> None:
+             aux_extra: Optional[Dict[str, Any]] = None,
+             delta: Optional[bool] = None) -> None:
         """Snapshot now; serialize + write in the background.
+
+        ``delta=True`` saves incrementally against the newest committed
+        checkpoint: unchanged chunks become by-hash references, save cost
+        is proportional to the changed bytes (``None`` defers to the
+        manager's / ``REPRO_SCDA_DELTA``'s default).  Falls back to a
+        full save when no usable base exists or the chain depth cap is
+        reached.
 
         Raises any error from the *previous* async save (so failures are
         observed, but off the hot path).
         """
         self.wait()  # one in-flight save at a time; surfaces prior errors
         host_tree = snapshot_to_host(tree)
+        use_delta = self.delta if delta is None else bool(delta)
 
         def _write() -> None:
             try:
-                self._write_and_commit(step, host_tree, aux_extra)
+                self._write_and_commit(step, host_tree, aux_extra,
+                                       use_delta)
             except BaseException as e:  # noqa: BLE001 - stored, not raised
                 self._error = e
 
@@ -144,15 +172,52 @@ class CheckpointManager:
                                             name=f"ckpt-save-{step}")
             self._thread.start()
 
+    def _delta_base(self, step: int) \
+            -> Optional[Tuple[Dict[str, Any], str]]:
+        """The ``(manifest_doc, file_name)`` the next delta should
+        reference, or ``None`` to force a full save.
+
+        ``None`` when: no prior checkpoint exists, the newest one carries
+        no chunk digests (pre-delta archive), re-saving ``step`` would
+        make the archive reference itself, or the chain depth cap is
+        reached (periodic full save keeps restore fan-in bounded and
+        lets retention eventually drop old bases).
+        """
+        target = _ckpt_name(step)
+        cand: Optional[Tuple[Dict[str, Any], str]] = None
+        if self._last_doc is not None and self._last_doc[1] != target:
+            cand = self._last_doc
+        else:
+            for s in reversed(self.all_steps()):
+                name = _ckpt_name(s)
+                if name == target:
+                    continue  # never self-reference on a same-step re-save
+                try:
+                    doc = pytree_io.read_manifest(self.path_for(s))
+                except (ScdaError, OSError, ValueError):
+                    continue  # unreadable base: fall further back
+                cand = (doc, name)
+                break
+        if cand is None or not _delta.base_usable(cand[0]):
+            return None
+        depth = int((cand[0].get("delta") or {}).get("depth", 0))
+        if depth + 1 > self.delta_chain:
+            return None
+        return cand
+
     def _write_and_commit(self, step: int, host_tree,
-                          aux_extra: Optional[Dict[str, Any]]) -> None:
+                          aux_extra: Optional[Dict[str, Any]],
+                          use_delta: bool = False) -> None:
         final = self.path_for(step)
         tmp = final + ".tmp"
+        base = self._delta_base(step) if use_delta else None
         try:
-            pytree_io.save(tmp, host_tree, comm=self.comm, step=step,
-                           compressed=self.compressed,
-                           chunk_bytes=self.chunk_bytes,
-                           aux_extra=aux_extra)
+            doc = pytree_io.save(tmp, host_tree, comm=self.comm, step=step,
+                                 compressed=self.compressed,
+                                 chunk_bytes=self.chunk_bytes,
+                                 aux_extra=aux_extra,
+                                 record_hashes=use_delta or self.delta,
+                                 delta_base=base)
         except BaseException:
             # A failed save must not leave its half-written tmp around
             # until the next retention sweep: remove it now (best-effort
@@ -190,18 +255,46 @@ class CheckpointManager:
                 except (ScdaError, OSError):
                     pass
             self._apply_retention()
+        # Cache the exact doc a re-read of the fresh archive would parse —
+        # the next delta save references it without touching the disk.
+        self._last_doc = (doc, _ckpt_name(step))
         self.comm.barrier()
+
+    def _referenced_files(self, kept_steps: List[int]) -> set:
+        """Transitive closure of delta-base files the kept checkpoints
+        still reference — retention must not delete them, or every
+        surviving delta becomes unrestorable."""
+        protected: set = set()
+        queue = [_ckpt_name(s) for s in kept_steps]
+        seen = set(queue)
+        while queue:
+            name = queue.pop()
+            try:
+                doc = pytree_io.read_manifest(
+                    os.path.join(self.directory, name))
+            except (ScdaError, OSError, ValueError):
+                continue  # unreadable: nothing to protect through it
+            for b in (doc.get("delta") or {}).get("bases", []):
+                f = b.get("file")
+                if f and f not in seen:
+                    seen.add(f)
+                    protected.add(f)
+                    queue.append(f)
+        return protected
 
     def _apply_retention(self) -> None:
         steps = self.all_steps()
+        protected = self._referenced_files(steps[-self.keep:])
         for s in steps[:-self.keep]:
+            if _ckpt_name(s) in protected:
+                continue  # an alive delta chain still needs this base
             for path in (self.path_for(s), self.path_for(s) + SIDECAR_SUFFIX):
                 try:
                     os.remove(path)
                 except OSError:
                     pass  # retention is best-effort
         # sweep stale tmp files from crashed attempts and orphaned sidecars
-        keep_names = {_ckpt_name(s) for s in self.all_steps()}
+        keep_names = {_ckpt_name(s) for s in self.all_steps()} | protected
         for n in os.listdir(self.directory):
             stale = (n.endswith(".scda.tmp") or n.endswith(".scdax.tmp")
                      or (n.endswith(".scda" + SIDECAR_SUFFIX)

@@ -8,9 +8,11 @@ and how it is laid out in subsequent array sections.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import sys
-from typing import Any, Dict, List, Optional, Tuple
+import zlib
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -18,6 +20,21 @@ MANIFEST_USER_STRING = b"scda-ckpt manifest"
 STATUS_USER_STRING = b"scda-ckpt status"
 LEAF_USER_PREFIX = "leaf"
 FORMAT_VERSION = 1
+#: Manifests holding cross-archive chunk references (delta checkpoints).
+#: A distinct version so pre-delta readers fail loudly instead of
+#: restoring a partial tree from a delta archive they cannot resolve.
+DELTA_FORMAT_VERSION = 2
+KNOWN_VERSIONS = (FORMAT_VERSION, DELTA_FORMAT_VERSION)
+
+#: Per-chunk content-hash width (SHA-256 prefix, hex).  The 128-bit
+#: strong hash alone keys the delta dedup decision — the standard
+#: content-addressing assumption (collisions are cryptographically
+#: negligible).  The CRC32 travels alongside it as the cheap read-side
+#: integrity checksum; a CRC32 collision alone never marks a chunk
+#: unchanged, because CRC32 is never consulted for that decision.
+#: SHA-256 over blake2b because every x86-64-v3+/ARMv8 host hashes it
+#: in hardware — the digest pass is the incremental save's floor cost.
+CHUNK_HASH_BYTES = 16
 
 
 def leaf_user_string(i: int) -> bytes:
@@ -60,18 +77,102 @@ class LeafSpec(Dict[str, Any]):
         return out
 
 
-def build(step: Optional[int], leaves: List[LeafSpec],
-          aux: Dict[str, Any]) -> bytes:
-    """Serialize the manifest to JSON bytes (raw ASCII, human-readable —
-    in the spirit of the format's human-friendliness goal)."""
+def chunk_hash(chunk) -> str:
+    """The per-chunk strong content hash: a 128-bit SHA-256 prefix, hex."""
+    return hashlib.sha256(chunk).hexdigest()[:2 * CHUNK_HASH_BYTES]
+
+
+def chunk_digests(view, sizes: Sequence[int]) \
+        -> Tuple[List[int], List[str]]:
+    """Per-chunk (CRC32, SHA-256-128) digests of a leaf's byte stream.
+
+    Hashes are taken over the UNCOMPRESSED chunk bytes under the same
+    deterministic chunking as §3 compression (:func:`layout.chunk_sizes`),
+    so raw and compressed archives hash identically and a chunk's identity
+    survives a compression-setting change.
+    """
+    crcs: List[int] = []
+    hashes: List[str] = []
+    pos = 0
+    for s in sizes:
+        chunk = view[pos:pos + s]
+        crcs.append(zlib.crc32(chunk) & 0xFFFFFFFF)
+        hashes.append(chunk_hash(chunk))
+        pos += s
+    return crcs, hashes
+
+
+def chunk_strong_hashes(view, sizes: Sequence[int]) -> List[str]:
+    """Strong hashes only — the delta save's decision pass.
+
+    An incremental save hashes every byte (that is its floor cost) but
+    checksums only what it stores: CRC32s for stored chunks are computed
+    by the planner from the bytes in hand, and unchanged chunks inherit
+    the base's CRC32 (sound because hash equality means the bytes are
+    identical).  Keeping CRC32 out of this pass roughly halves the
+    fixed per-save digest cost on hosts with hardware SHA.
+    """
+    hashes: List[str] = []
+    pos = 0
+    for s in sizes:
+        hashes.append(chunk_hash(view[pos:pos + s]))
+        pos += s
+    return hashes
+
+
+def content_id(doc: Dict[str, Any]) -> str:
+    """Deterministic identity of a checkpoint's logical content.
+
+    A blake2b over every leaf's name/geometry/chunk-hash table plus the
+    aux tree and step — computable both when the archive is written and
+    when it is later opened as a delta base, with no random state (saves
+    stay byte-deterministic).  A base file that was rewritten in place
+    (same name, different content) therefore no longer matches the id its
+    dependents recorded, and chained restores refuse it loudly instead of
+    assembling silently wrong tensors.
+    """
+    payload = {
+        "step": doc.get("step"),
+        "aux": doc.get("aux", {}),
+        "leaves": [[l.get("name"), l.get("shape"), l.get("dtype"),
+                    l.get("nbytes"), (l.get("chunks") or {}).get("hash")]
+                   for l in doc.get("leaves", [])],
+    }
+    blob = json.dumps(payload, sort_keys=True).encode("ascii")
+    return hashlib.blake2b(blob, digest_size=16).hexdigest()
+
+
+def document(step: Optional[int], leaves: List[LeafSpec],
+             aux: Dict[str, Any],
+             delta: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    """The manifest document as a dict — what :func:`build` serializes
+    and :func:`parse` returns, so a writer can hand its caller the exact
+    doc a re-read of the fresh archive would produce (the manager caches
+    it as the next delta's base).
+
+    ``delta``: the cross-archive reference table of an incremental
+    checkpoint (``{"bases": [{"file", "id"}, ...], "depth": k}``); its
+    presence bumps the manifest to :data:`DELTA_FORMAT_VERSION`.
+    """
     doc = {
         "format": "repro-scda-checkpoint",
-        "version": FORMAT_VERSION,
+        "version": DELTA_FORMAT_VERSION if delta else FORMAT_VERSION,
         "step": step,
         "leaves": leaves,
         "aux": aux,   # non-array leaves (python scalars, strings, None)
     }
-    return json.dumps(doc, indent=1, sort_keys=True).encode("ascii")
+    if delta:
+        doc["delta"] = delta
+    return doc
+
+
+def build(step: Optional[int], leaves: List[LeafSpec],
+          aux: Dict[str, Any],
+          delta: Optional[Dict[str, Any]] = None) -> bytes:
+    """Serialize the manifest to JSON bytes (raw ASCII, human-readable —
+    in the spirit of the format's human-friendliness goal)."""
+    return json.dumps(document(step, leaves, aux, delta),
+                      indent=1, sort_keys=True).encode("ascii")
 
 
 def parse(raw: bytes) -> Dict[str, Any]:
@@ -79,7 +180,7 @@ def parse(raw: bytes) -> Dict[str, Any]:
     if doc.get("format") != "repro-scda-checkpoint":
         raise ValueError(f"not a repro checkpoint manifest: "
                          f"{doc.get('format')!r}")
-    if doc.get("version") != FORMAT_VERSION:
+    if doc.get("version") not in KNOWN_VERSIONS:
         raise ValueError(f"unsupported manifest version {doc.get('version')}")
     return doc
 

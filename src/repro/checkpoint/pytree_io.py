@@ -43,10 +43,9 @@ from repro.core import ScdaError, ScdaErrorCode, partition
 from repro.core.comm import Communicator, SerialComm
 from repro.core.index import ScdaIndex
 from repro.core.io_backend import prefetch_window, write_pipeline_window
-from repro.core.pipeline import (ReadItem, WriteItem, run_pipeline,
-                                 run_write_pipeline)
+from repro.core.pipeline import ReadItem, run_pipeline
 from repro.core.reader import ScdaReader, fopen_read
-from repro.core.writer import ScdaWriter, fopen_write
+from repro.core.writer import fopen_write
 
 DEFAULT_CHUNK_BYTES = 1 << 20  # 1 MiB deflate chunks for encoded leaves
 
@@ -146,7 +145,10 @@ def save(path: str, tree, *, comm: Optional[Communicator] = None,
          step: Optional[int] = None, compressed: bool = False,
          chunk_bytes: int = DEFAULT_CHUNK_BYTES,
          aux_extra: Optional[Dict[str, Any]] = None,
-         write_window: Optional[int] = None) -> None:
+         write_window: Optional[int] = None,
+         record_hashes: bool = False,
+         delta_base: Optional[Tuple[Dict[str, Any], str]] = None) \
+        -> Dict[str, Any]:
     """Write ``tree`` to ``path`` as a serial-equivalent scda checkpoint.
 
     Leaf sections go through the overlapped save engine
@@ -159,10 +161,20 @@ def save(path: str, tree, *, comm: Optional[Communicator] = None,
     the pipeline is fuzzed against.  Either way the file bytes depend
     only on the logical tree: serial equivalence is preserved by
     construction, since both paths plan sections with the same writer
-    primitives.
+    primitives (:mod:`repro.checkpoint.planner`).
+
+    ``record_hashes`` adds per-chunk content digests (CRC32 + a 128-bit
+    SHA-256 prefix)
+    to the manifest so the archive can serve as a delta base.
+    ``delta_base`` — a ``(base_manifest_doc, base_file_name)`` pair —
+    switches to an incremental save: chunks whose digests match the base
+    are stored as by-hash references and only changed chunks are
+    written (:mod:`repro.checkpoint.delta`).  Both are single-rank.
+
+    Returns the manifest document (what :func:`read_manifest` of the
+    fresh file would return).
     """
     comm = comm or SerialComm()
-    ww = _effective_write_window(write_window)
     named, _ = flatten_named(tree)
     leaves: List[mf.LeafSpec] = []
     arrays: List[Any] = []
@@ -175,10 +187,108 @@ def save(path: str, tree, *, comm: Optional[Communicator] = None,
             arrays.append(value)
         else:
             aux[name] = _encode_aux(value)
+    return _write_checkpoint(
+        path, comm=comm, step=step, leaves=leaves, arrays=arrays, aux=aux,
+        compressed=compressed, chunk_bytes=chunk_bytes,
+        write_window=write_window, record_hashes=record_hashes,
+        delta_base=delta_base)
+
+
+def _write_checkpoint(path: str, *, comm: Optional[Communicator],
+                      step: Optional[int], leaves: List[mf.LeafSpec],
+                      arrays: List[Any], aux: Dict[str, Any],
+                      compressed: bool, chunk_bytes: int,
+                      write_window: Optional[int],
+                      record_hashes: bool = False,
+                      delta_base: Optional[Tuple[Dict[str, Any], str]]
+                      = None) -> Dict[str, Any]:
+    """The save core shared by :func:`save` and ``scdatool squash``:
+    already-flattened leaves → digests → placement plan → archive.
+
+    Splitting "what bytes does this leaf produce" from "where do they
+    land" lives here: every layout builds :class:`planner.LeafPlacement`
+    objects and one emission loop (:func:`planner.write_placements`)
+    drives them through the serial oracle or the overlapped engine.
+    Given identical inputs the output bytes are identical regardless of
+    the caller — which is what makes a squashed chain byte-equal to a
+    direct full save.
+    """
+    from repro.checkpoint import planner
+    comm = comm or SerialComm()
+    ww = _effective_write_window(write_window)
     if compressed and comm.size > 1:
         raise ScdaError(ScdaErrorCode.ARG_SEQUENCE,
                         "compressed checkpoints require chunk-aligned "
                         "partitions; use comm.size == 1 (async snapshot)")
+    if (record_hashes or delta_base is not None) and comm.size > 1:
+        raise ScdaError(ScdaErrorCode.ARG_SEQUENCE,
+                        "content-hashed / delta checkpoints are "
+                        "single-rank; use comm.size == 1 (async snapshot)")
+
+    if record_hashes or delta_base is not None:
+        # Digesting touches every byte, so snapshot to host eagerly (the
+        # manager pre-snapshots anyway) and reuse the host arrays for
+        # the section payloads — one device→host copy, not two.  The
+        # delta leg computes the strong hash only; CRC32s are filled in
+        # by the planner (computed for stored chunks, inherited from the
+        # base for unchanged ones), so save cost tracks changed bytes.
+        hosts: List[Any] = []
+        for spec_, arr in zip(leaves, arrays):
+            host = np.asarray(arr)
+            sizes = layout.chunk_sizes(spec_["nbytes"], chunk_bytes)
+            view = _byte_view(host)
+            if delta_base is not None:
+                spec_["chunks"] = {
+                    "bytes": int(chunk_bytes),
+                    "hash": mf.chunk_strong_hashes(view, sizes)}
+            else:
+                crcs, hashes = mf.chunk_digests(view, sizes)
+                spec_["chunks"] = {"bytes": int(chunk_bytes),
+                                   "crc32": crcs, "hash": hashes}
+            hosts.append(host)
+        arrays = hosts
+    delta_table: Optional[Dict[str, Any]] = None
+    if delta_base is not None:
+        from repro.checkpoint import delta as _delta
+        base_doc, base_file = delta_base
+        delta_table = _delta.plan_refs(
+            leaves, base_doc, base_file,
+            views=[_byte_view(h) for h in arrays])
+
+    placements: List[planner.LeafPlacement] = []
+    for i, (spec_, arr) in enumerate(zip(leaves, arrays)):
+        user = mf.leaf_user_string(i)
+        sizes = layout.chunk_sizes(spec_["nbytes"], chunk_bytes)
+        if delta_table is not None:
+            present = spec_["present"]
+            if not present:
+                continue  # unchanged leaf: references only, no section
+
+            def snapshot(arr=arr, present=present, sizes=sizes):
+                flat = _byte_view(np.asarray(arr))
+                return [flat[c * chunk_bytes:c * chunk_bytes + sizes[c]]
+                        for c in present]
+
+            placements.append(planner.ChunkPlacement(
+                user, [sizes[c] for c in present], snapshot, compressed,
+                key=i))
+        elif compressed:
+            def snapshot(arr=arr, sizes=sizes):
+                flat = _byte_view(np.asarray(arr))
+                chunks, pos = [], 0
+                for s in sizes:
+                    chunks.append(flat[pos:pos + s])
+                    pos += s
+                return chunks
+
+            placements.append(planner.ChunkPlacement(
+                user, sizes, snapshot, True, key=i))
+        else:
+            def snapshot(arr=arr, spec_=spec_):
+                return _owned_windows(arr, spec_["nbytes"])
+
+            placements.append(planner.WindowPlacement(
+                user, spec_["nbytes"], snapshot, key=i))
 
     # sync=True: checkpoints must be durable before the manager's atomic
     # rename commits them (every rank fsyncs at close).
@@ -186,98 +296,13 @@ def save(path: str, tree, *, comm: Optional[Communicator] = None,
                      sync=True) as f:
         f.write_inline(mf.STATUS_USER_STRING, mf.status_inline(step),
                        root=0)
-        f.write_block(mf.MANIFEST_USER_STRING,
-                      mf.build(step, leaves, aux) if comm.rank == 0 else None,
-                      E=None, root=0)
-        if ww > 0 and leaves:
-            _save_leaves_pipelined(f, leaves, arrays, compressed,
-                                   chunk_bytes, ww)
-            return
-        for i, (spec_, arr) in enumerate(zip(leaves, arrays)):
-            user = mf.leaf_user_string(i)
-            if compressed:
-                _save_leaf_compressed(f, user, arr, spec_, chunk_bytes)
-            else:
-                windows = _owned_windows(arr, spec_["nbytes"])
-                f.write_array_windows(user, windows, N=spec_["nbytes"], E=1)
-
-
-def _save_leaf_compressed(f: ScdaWriter, user: bytes, arr,
-                          spec_: mf.LeafSpec, chunk_bytes: int) -> None:
-    flat = _byte_view(np.asarray(arr))
-    sizes = layout.chunk_sizes(spec_["nbytes"], chunk_bytes)
-    elements, pos = [], 0
-    for s in sizes:
-        elements.append(bytes(flat[pos:pos + s]))
-        pos += s
-    f.write_varray(user, elements, [len(sizes)], sizes, encode=True)
-
-
-# --------------------------------------------------------------------------
-# The overlapped save engine's checkpoint scheduler
-# --------------------------------------------------------------------------
-
-def _save_leaves_pipelined(f: ScdaWriter, leaves: List[mf.LeafSpec],
-                           arrays: List[Any], compressed: bool,
-                           chunk_bytes: int, window: int) -> None:
-    """Emit every leaf section through the overlapped save engine.
-
-    The walk plans one :class:`WriteItem` per leaf up front.  Raw leaf
-    extents are fully determined by the manifest (N = nbytes, E = 1);
-    the §3.4 compressed pair needs each leaf's total compressed size, so
-    ``plan`` callbacks thread a shared cursor in leaf order — exactly
-    the serial writer's cursor discipline, while deflate and writeback
-    float free.  Snapshots (``np.asarray`` per shard — the device→host
-    copy for jax arrays, a no-op for the manager's pre-snapshotted host
-    trees) run one leaf ahead on the codec pool.
-
-    Byte-identity with the serial path is structural: raw leaves plan
-    through :meth:`ScdaWriter.plan_array_windows` (the same method the
-    serial ``write_array_windows`` wraps) and compressed leaves through
-    :meth:`ScdaWriter.plan_encoded_varray` (built on the
-    :mod:`repro.core.encode` byte oracles), with deterministic zlib at
-    the same level.
-    """
-    cursor = [f.cursor]
-    items: List[WriteItem] = []
-    for i, (spec_, arr) in enumerate(zip(leaves, arrays)):
-        user = mf.leaf_user_string(i)
-        if compressed:
-            usizes = layout.chunk_sizes(spec_["nbytes"], chunk_bytes)
-
-            def snapshot(arr=arr, usizes=usizes):
-                flat = _byte_view(np.asarray(arr))
-                chunks, pos = [], 0
-                for s in usizes:
-                    chunks.append(flat[pos:pos + s])
-                    pos += s
-                return chunks
-
-            def plan(streams, user=user, usizes=usizes):
-                frags, cursor[0] = f.plan_encoded_varray(
-                    user, usizes, streams, cursor[0])
-                return frags
-
-            items.append(WriteItem(key=i, snapshot=snapshot, plan=plan,
-                                   deflate=True, style=f.style))
-        else:
-            def snapshot(arr=arr, spec_=spec_):
-                return _owned_windows(arr, spec_["nbytes"])
-
-            def plan(windows, user=user, spec_=spec_):
-                frags, cursor[0] = f.plan_array_windows(
-                    user, windows, N=spec_["nbytes"], E=1,
-                    cursor=cursor[0])
-                return frags
-
-            items.append(WriteItem(key=i, snapshot=snapshot, plan=plan,
-                                   style=f.style))
-    try:
-        run_write_pipeline(f._backend, items, window)
-    finally:
-        # Keep the writer's cursor coherent even on the error path — the
-        # context manager's close (barriers included) runs next.
-        f.cursor = cursor[0]
+        f.write_block(
+            mf.MANIFEST_USER_STRING,
+            mf.build(step, leaves, aux, delta_table)
+            if comm.rank == 0 else None,
+            E=None, root=0)
+        planner.write_placements(f, placements, ww)
+    return mf.document(step, leaves, aux, delta_table)
 
 
 def _encode_aux(value) -> Any:
@@ -360,13 +385,25 @@ def restore(path: str, like=None, *, comm: Optional[Communicator] = None,
     with fopen_read(comm, path) as r:
         doc = _read_header_sections(r)
         step = doc.get("step")
+        chained = bool(doc.get("delta"))
+        if chained:
+            from repro.checkpoint import delta as _delta
         by_name: Dict[str, Any] = {}
         for i, spec_ in enumerate(doc["leaves"]):
             by_name[spec_["name"]] = (i, spec_)
 
         if like is None:
             out: Dict[str, Any] = {}
-            if pf > 0 and doc["leaves"]:
+            if chained:
+                # Incremental checkpoint: every leaf resolves through the
+                # manifest chain (prefetch engine per archive; pf<=0 is
+                # the serial oracle inside the resolver too).
+                _adopt_sidecar(r)
+                wanted = [(spec_["name"], i, spec_, None)
+                          for i, spec_ in enumerate(doc["leaves"])]
+                out = (_delta.restore_chained(r, doc, wanted, pf)
+                       if wanted else {})
+            elif pf > 0 and doc["leaves"]:
                 _adopt_sidecar(r)
                 wanted = [(spec_["name"], i, spec_, None)
                           for i, spec_ in enumerate(doc["leaves"])]
@@ -391,7 +428,12 @@ def restore(path: str, like=None, *, comm: Optional[Communicator] = None,
                             f"leaves missing from checkpoint: {missing[:5]}"
                             f"{'…' if len(missing) > 5 else ''}")
         _adopt_sidecar(r)
-        if pf > 0:
+        if chained:
+            wanted = [(name,) + by_name[name] + (targets[name],)
+                      for name in targets if name in by_name]
+            values = (_delta.restore_chained(r, doc, wanted, pf)
+                      if wanted else {})
+        elif pf > 0:
             wanted = [(name,) + by_name[name] + (targets[name],)
                       for name in targets if name in by_name]
             values = _restore_pipelined(r, wanted, pf)
@@ -435,6 +477,10 @@ def restore_leaf(path: str, name: str, like=None, *,
             if spec_["name"] != name:
                 continue
             _adopt_sidecar(r)
+            if doc.get("delta"):
+                from repro.checkpoint import delta as _delta
+                return _delta.restore_chained(
+                    r, doc, [(name, i, spec_, like)], pf)[name]
             if pf > 0:
                 return _restore_pipelined(
                     r, [(name, i, spec_, like)], pf)[name]
@@ -450,6 +496,12 @@ def restore_leaf(path: str, name: str, like=None, *,
 
 
 def _check_leaf_header(hdr, spec_) -> None:
+    if spec_.get("store") == "delta":
+        # Delta-stored leaves hold only their present chunk subset and
+        # are resolved by the chain resolver, never by the flat readers.
+        raise ScdaError(ScdaErrorCode.CORRUPT_ENCODING,
+                        f"leaf {spec_['name']}: delta-stored leaf outside "
+                        f"the chain resolver")
     if spec_["compressed"]:
         if hdr.type != "V" or hdr.N != len(layout.chunk_sizes(
                 spec_["nbytes"], spec_["chunk_bytes"])):
@@ -489,6 +541,50 @@ def _shard_shape(index, shape) -> Tuple[int, ...]:
                  for sl, dim in zip(index, shape)) if shape else ()
 
 
+def _leaf_layout(name: str, spec_, target) -> Dict[str, Any]:
+    """Target-side layout of one leaf: dtype/shape/sharding plus the
+    assembly units (distinct shard extents, or the whole leaf) with
+    their run decompositions and host buffers.
+
+    Shared by the flat restore scheduler and the delta chain resolver —
+    the *destination* of a leaf is the same regardless of which
+    archive(s) its bytes come from.
+    """
+    dtype = mf.dtype_from_name(spec_["dtype"])
+    shape = tuple(spec_["shape"])
+    sharding = None
+    if target is not None:
+        t_shape = tuple(getattr(target, "shape", np.shape(target)))
+        if t_shape != shape:
+            raise ScdaError(
+                ScdaErrorCode.ARG_SEQUENCE,
+                f"leaf {spec_['name']}: target shape {t_shape} != "
+                f"checkpoint shape {shape}")
+        sharding = getattr(target, "sharding", None)
+    units: List[_Unit] = []
+    per_device: List[Tuple[Any, int]] = []
+    if sharding is None:
+        runs = [(0, 0, spec_["nbytes"])] if spec_["nbytes"] else []
+        units.append(_Unit(runs, shape, spec_["nbytes"]))
+    else:
+        itemsize = np.dtype(dtype).itemsize
+        by_extent: Dict[Tuple, int] = {}
+        for device, index in \
+                sharding.addressable_devices_indices_map(shape).items():
+            key = _index_key(index, shape)
+            if key not in by_extent:
+                runs = layout.shard_runs(shape, index, itemsize)
+                sshape = _shard_shape(index, shape)
+                nbytes = (int(np.prod(sshape, dtype=np.int64)) * itemsize
+                          if sshape else itemsize)
+                by_extent[key] = len(units)
+                units.append(_Unit(runs, sshape, nbytes))
+            per_device.append((device, by_extent[key]))
+    return {"name": name, "spec": spec_, "target": target,
+            "dtype": dtype, "shape": shape, "sharding": sharding,
+            "units": units, "per_device": per_device, "pending": 0}
+
+
 def _restore_pipelined(r: ScdaReader, wanted, prefetch_bytes: int) \
         -> Dict[str, Any]:
     """Restore ``wanted`` leaves through the overlapped engine.
@@ -518,39 +614,8 @@ def _restore_pipelined(r: ScdaReader, wanted, prefetch_bytes: int) \
         e = idx.entries[sec]
         r.verify_index_entry(sec, e)
         _check_leaf_header(e.header(), spec_)
-        dtype = mf.dtype_from_name(spec_["dtype"])
-        shape = tuple(spec_["shape"])
-        sharding = None
-        if target is not None:
-            t_shape = tuple(getattr(target, "shape", np.shape(target)))
-            if t_shape != shape:
-                raise ScdaError(
-                    ScdaErrorCode.ARG_SEQUENCE,
-                    f"leaf {spec_['name']}: target shape {t_shape} != "
-                    f"checkpoint shape {shape}")
-            sharding = getattr(target, "sharding", None)
-        units: List[_Unit] = []
-        per_device: List[Tuple[Any, int]] = []
-        if sharding is None:
-            runs = [(0, 0, spec_["nbytes"])] if spec_["nbytes"] else []
-            units.append(_Unit(runs, shape, spec_["nbytes"]))
-        else:
-            itemsize = np.dtype(dtype).itemsize
-            by_extent: Dict[Tuple, int] = {}
-            for device, index in \
-                    sharding.addressable_devices_indices_map(shape).items():
-                key = _index_key(index, shape)
-                if key not in by_extent:
-                    runs = layout.shard_runs(shape, index, itemsize)
-                    sshape = _shard_shape(index, shape)
-                    nbytes = (int(np.prod(sshape, dtype=np.int64)) * itemsize
-                              if sshape else itemsize)
-                    by_extent[key] = len(units)
-                    units.append(_Unit(runs, sshape, nbytes))
-                per_device.append((device, by_extent[key]))
-        leaf = {"name": name, "spec": spec_, "target": target,
-                "dtype": dtype, "shape": shape, "sharding": sharding,
-                "units": units, "per_device": per_device, "pending": 0}
+        leaf = _leaf_layout(name, spec_, target)
+        units = leaf["units"]
         if spec_["compressed"]:
             chunk = spec_["chunk_bytes"]
             csizes = r._parse_entries(e.v_entries_start, 0, e.N, b"E")

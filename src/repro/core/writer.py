@@ -504,6 +504,54 @@ class ScdaWriter:
             cursor += len(part)
         return frags, cursor
 
+    def plan_varray(self, user_string: bytes,
+                    elements: Sequence[BytesLike],
+                    cursor: Optional[int] = None) \
+            -> Tuple[List[Frag], int]:
+        """Single-rank planning mirror of the raw ``write_varray`` path:
+        one V section holding ``elements`` as ``(frags, next_cursor)``,
+        nothing written.
+
+        The delta-checkpoint placement uses this for the changed-chunk
+        subset of an uncompressed leaf — the same role
+        :meth:`plan_encoded_varray` plays for deflated chunks.  Byte
+        identity with :meth:`write_varray` holds because both derive the
+        entry table and padding from the same :mod:`repro.core.spec`
+        arithmetic.
+        """
+        if self.comm.size != 1:
+            raise ScdaError(ScdaErrorCode.ARG_PARTITION,
+                            "varray planning is single-rank (matching the "
+                            "delta placement's use)")
+        if cursor is None:
+            cursor = self.cursor
+        views = [_as_bytes(e) for e in elements]
+        sizes = [len(v) for v in views]
+        N = len(views)
+        frags: List[Frag] = []
+        entries_start = (cursor + spec.SECTION_HEADER_BYTES
+                         + spec.COUNT_ENTRY_BYTES)
+        data_start = entries_start + N * spec.COUNT_ENTRY_BYTES
+        frags.append((cursor,
+                      spec.section_header(b"V", user_string, self.style)))
+        frags.append((cursor + spec.SECTION_HEADER_BYTES,
+                      spec.count_entry(b"N", N, self.style)))
+        if N:
+            frags.append((entries_start,
+                          spec.count_entries(b"E", sizes, self.style,
+                                             trusted_ints=True)))
+        pos = data_start
+        last: Optional[int] = None
+        for v in views:
+            if len(v):
+                frags.append((pos, v))
+                pos += len(v)
+                last = v[-1]
+        total = sum(sizes)
+        frags.append((data_start + total,
+                      spec.pad_data(total, last, self.style)))
+        return frags, data_start + spec.padded_data_bytes(total)
+
     def _write_u_entry_array(self, counts: Sequence[int],
                              local_sizes: Sequence[int], N: int) -> None:
         """The A("V compressed scda 00", N, 32, U-entries) metadata section."""

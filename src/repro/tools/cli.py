@@ -3,13 +3,23 @@
 Subcommands::
 
     scdatool ls FILE                 # section table (via the seekable index)
+    scdatool ls --json FILE          # same, machine-readable (checkpoint +
+                                     # delta-chain metadata included)
     scdatool cat FILE SECTION        # decoded payload of one section
-    scdatool fsck FILE...            # structural validation, non-zero on corruption
+    scdatool fsck FILE...            # structural validation, non-zero on
+                                     # corruption; delta checkpoints also get
+                                     # their base links checked
     scdatool index FILE...           # build/refresh (or --check) .scdax sidecars
     scdatool index --checksums F...  # sidecar + per-section payload CRC32s
     scdatool verify FILE...          # re-check payloads against the checksums
+    scdatool verify --chain FILE...  # digest-verify a delta checkpoint across
+                                     # its whole base chain (CRC32 + SHA-256)
     scdatool copy SRC DST            # rewrite; --recompress / --decompress
     scdatool diff A B                # leaf-wise compare via the indexes
+    scdatool diff --logical A B      # chain-aware checkpoint compare (a delta
+                                     # chain equals the full state it encodes)
+    scdatool squash SRC DST          # materialize a delta chain into one
+                                     # self-contained archive
     scdatool append DST SRC...       # grow DST in place (mode 'a') with
                                      # SRC's sections; sidecar refreshed
     scdatool tail FILE               # print journal records; -f follows
@@ -44,12 +54,66 @@ def _printable(user: bytes) -> str:
 
 # -- ls ----------------------------------------------------------------------
 
+def _checkpoint_summary(path: str) -> Optional[dict]:
+    """Best-effort checkpoint + delta-chain metadata of a repro
+    checkpoint archive; None when ``path`` is not one (or unreadable).
+    Reads only the manifest block — never jax, never the leaf payloads.
+    """
+    from repro.checkpoint import manifest as mf
+    try:
+        with fopen_read(None, path) as r:
+            idx = r.index()
+            sec = idx.find(mf.MANIFEST_USER_STRING)
+            if sec < 0:
+                return None
+            r.seek_section(sec)
+            doc = mf.parse(r.read_block_data())
+    except (ScdaError, OSError, ValueError):
+        return None
+    out = {"format": doc.get("format"), "version": doc.get("version"),
+           "step": doc.get("step"), "leaves": len(doc.get("leaves", []))}
+    delta = doc.get("delta")
+    if delta:
+        stored = sum(len(l.get("present", []))
+                     for l in doc.get("leaves", []))
+        total = sum(len((l.get("chunks") or {}).get("hash", ()))
+                    for l in doc.get("leaves", []))
+        out["delta"] = {"depth": delta.get("depth"),
+                        "bases": [dict(b) for b in delta.get("bases", [])],
+                        "chunks_stored": stored, "chunks_total": total}
+    return out
+
+
 def cmd_ls(args) -> int:
     idx = ScdaIndex.build(args.file)
+    ckpt = _checkpoint_summary(args.file)
+    if args.json:
+        doc = {
+            "file": args.file,
+            "bytes": idx.file_size,
+            "scda_version": idx.scda_version,
+            "vendor": _printable(idx.vendor),
+            "user": _printable(idx.user_string),
+            "sections": [
+                {"sec": i, "kind": e.kind, "type": e.type, "N": e.N,
+                 "E": e.E, "payload": e.payload_bytes, "offset": e.start,
+                 "user": _printable(e.user_string)}
+                for i, e in enumerate(idx)],
+        }
+        if ckpt is not None:
+            doc["checkpoint"] = ckpt
+        print(json.dumps(doc, indent=1, sort_keys=True))
+        return 0
     print(f"# {args.file}: {len(idx)} sections, {idx.file_size} bytes, "
           f"scda version {idx.scda_version:#x}, "
           f"vendor {_printable(idx.vendor)!r}, "
           f"user {_printable(idx.user_string)!r}")
+    if ckpt is not None and ckpt.get("delta"):
+        d = ckpt["delta"]
+        bases = ", ".join(b["file"] for b in d["bases"])
+        print(f"# delta checkpoint: depth {d['depth']}, "
+              f"{d['chunks_stored']}/{d['chunks_total']} chunks stored, "
+              f"bases: {bases}")
     print(f"{'sec':>4} {'kind':>4} {'N':>10} {'E':>10} {'payload':>12} "
           f"{'offset':>12}  user string")
     for i, e in enumerate(idx):
@@ -170,6 +234,25 @@ def cmd_verify(args) -> int:
     sidecar.
     """
     status = 0
+    if args.chain:
+        from repro.checkpoint.delta import verify_chain
+        for path in args.files:
+            try:
+                problems = verify_chain(path)
+            except (ScdaError, OSError, ValueError) as e:
+                _err(f"{path}: {e}")
+                status = 1
+                continue
+            for p in problems:
+                print(f"{path}: {p}")
+            if problems:
+                status = 1
+                print(f"{path}: FAILED ({len(problems)} problem"
+                      f"{'s' if len(problems) != 1 else ''})")
+            else:
+                print(f"{path}: verified (chunk digests match across "
+                      f"the chain)")
+        return status
     for path in args.files:
         sidecar = path + SIDECAR_SUFFIX
         try:
@@ -450,6 +533,21 @@ def _logical_payload_diff(ra, rb, i) -> Optional[str]:
     return None
 
 
+def cmd_squash(args) -> int:
+    """Materialize a delta chain into one self-contained archive —
+    byte-identical to a direct full (hash-recording) save of the same
+    state, so the output is itself a usable delta base."""
+    from repro.checkpoint.delta import squash
+    src = _checkpoint_summary(args.src)
+    depth = int(((src or {}).get("delta") or {}).get("depth", 0))
+    doc = squash(args.src, args.dst)
+    if args.index:
+        ScdaIndex.build(args.dst).write_sidecar()
+    print(f"squashed {args.src} -> {args.dst} "
+          f"({len(doc.get('leaves', []))} leaves, chain depth {depth} -> 0)")
+    return 0
+
+
 def cmd_diff(args) -> int:
     """Leaf-wise archive comparison via the seekable indexes.
 
@@ -458,7 +556,24 @@ def cmd_diff(args) -> int:
     only when the encodings differ (so a recompressed copy still compares
     equal leaf-wise).  Exit 1 on the first difference; ``--all`` keeps
     going and lists every one.
+
+    ``--logical`` compares two *checkpoints* by the state they encode,
+    resolving delta chains — a delta checkpoint equals the full (or
+    squashed) checkpoint of the same state even though their section
+    tables differ completely.
     """
+    if args.logical:
+        from repro.checkpoint.delta import checkpoint_diff
+        diffs_ = checkpoint_diff(args.a, args.b)
+        for d in diffs_:
+            print(d)
+        if diffs_:
+            print(f"{args.a} and {args.b} differ logically "
+                  f"({len(diffs_)} difference"
+                  f"{'s' if len(diffs_) != 1 else ''} listed)")
+            return 1
+        print(f"{args.a} and {args.b} encode the same checkpoint state")
+        return 0
     diffs = 0
 
     def report(msg: str) -> None:
@@ -527,6 +642,9 @@ def build_parser() -> argparse.ArgumentParser:
 
     p = sub.add_parser("ls", help="list the section table")
     p.add_argument("file")
+    p.add_argument("--json", action="store_true",
+                   help="machine-readable output (includes checkpoint and "
+                        "delta-chain metadata when present)")
     p.set_defaults(fn=cmd_ls)
 
     p = sub.add_parser("cat", help="dump one section's decoded payload")
@@ -563,6 +681,10 @@ def build_parser() -> argparse.ArgumentParser:
                        help="check archives against their sidecar "
                             "checksum manifests (no reference copy)")
     p.add_argument("files", nargs="+")
+    p.add_argument("--chain", action="store_true",
+                   help="digest-verify checkpoint chunk content across the "
+                        "delta chain (CRC32 + SHA-256; follows base "
+                        "archives)")
     p.set_defaults(fn=cmd_verify)
 
     p = sub.add_parser("copy", help="rewrite an archive section by section")
@@ -584,7 +706,19 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--all", action="store_true",
                    help="list every difference instead of stopping at the "
                         "first")
+    p.add_argument("--logical", action="store_true",
+                   help="compare checkpoints by encoded state, resolving "
+                        "delta chains")
     p.set_defaults(fn=cmd_diff)
+
+    p = sub.add_parser("squash",
+                       help="materialize a delta checkpoint chain into one "
+                            "self-contained archive")
+    p.add_argument("src")
+    p.add_argument("dst")
+    p.add_argument("--index", action="store_true",
+                   help="also write the destination's .scdax sidecar")
+    p.set_defaults(fn=cmd_squash)
 
     p = sub.add_parser("append",
                        help="append SRC archives' sections onto DST in "
@@ -622,7 +756,7 @@ def main(argv: Optional[List[str]] = None) -> int:
         return args.fn(args)
     except BrokenPipeError:  # | head etc.
         return 0
-    except (ScdaError, OSError) as e:
+    except (ScdaError, OSError, ValueError) as e:
         _err(str(e))
         return 1
 

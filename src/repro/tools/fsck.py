@@ -23,7 +23,12 @@ reader must, and checks everything the format makes checkable:
   of p arbitrary bytes"), so a pad matching neither the Unix nor the
   MIME discipline is reported as a warning, not an error;
 * an existing ``.scdax`` sidecar, when present, is deep-verified against
-  the file (stale sidecars are findings too).
+  the file (stale sidecars are findings too);
+* delta checkpoints (manifest version 2): every referenced base archive
+  must exist, parse, and still match the content id recorded when the
+  delta was saved — a deleted or rewritten base makes the delta
+  unrestorable and is an error; with ``deep=True`` every chunk across
+  the chain is additionally digest-verified (CRC32 + SHA-256).
 
 Corruption cannot be resynced in a stream format — the walk stops at the
 first structural error; warnings accumulate.
@@ -132,6 +137,71 @@ def _pad_warning(backend, kind: str, data_region: int, payload: int,
             f"(legal per §2.1.2, but unusual): {pad[:16]!r}")
 
 
+def _read_checkpoint_doc(path: str):
+    """The repro-checkpoint manifest of ``path``, or None if it has no
+    manifest section.  Reads only the manifest block (no jax, no leaf
+    payloads) — fsck stays cheap on non-checkpoint archives."""
+    from repro.checkpoint import manifest as mf
+    with fopen_read(None, path) as r:
+        sec = r.index().find(mf.MANIFEST_USER_STRING)
+        if sec < 0:
+            return None
+        r.seek_section(sec)
+        return mf.parse(r.read_block_data())
+
+
+def _check_delta_chain(path: str, deep: bool,
+                       findings: List[Finding]) -> None:
+    """Chain-level findings for delta checkpoints.
+
+    A structurally valid delta archive is still unrestorable if any base
+    it references was deleted or rewritten in place — those are errors
+    anchored at the manifest, not at a byte of this file.  ``deep``
+    additionally digest-verifies every chunk across the chain.
+    """
+    from repro.checkpoint import manifest as mf
+    try:
+        doc = _read_checkpoint_doc(path)
+    except (ScdaError, OSError, ValueError):
+        return  # not a readable checkpoint: nothing chain-level to check
+    if not doc or not doc.get("delta"):
+        return
+    base_dir = os.path.dirname(os.path.abspath(path))
+    ok = True
+    for k, b in enumerate(doc["delta"].get("bases", []), start=1):
+        name = b.get("file", "")
+        bpath = os.path.join(base_dir, name)
+        try:
+            bdoc = _read_checkpoint_doc(bpath)
+        except (ScdaError, OSError, ValueError) as e:
+            findings.append(Finding(
+                "error", 0, None, f"delta base #{k} {name!r}: {e}"))
+            ok = False
+            continue
+        if bdoc is None:
+            findings.append(Finding(
+                "error", 0, None,
+                f"delta base #{k} {name!r}: not a checkpoint archive"))
+            ok = False
+            continue
+        got = mf.content_id(bdoc)
+        if got != b.get("id"):
+            findings.append(Finding(
+                "error", 0, None,
+                f"delta base #{k} {name!r}: content id {got} != recorded "
+                f"{b.get('id')} — base rewritten since this delta was "
+                f"saved"))
+            ok = False
+    if deep and ok:
+        from repro.checkpoint.delta import verify_chain
+        try:
+            for problem in verify_chain(path):
+                findings.append(Finding("error", 0, None,
+                                        f"chain: {problem}"))
+        except (ScdaError, OSError, ValueError) as e:
+            findings.append(Finding("error", 0, None, f"chain: {e}"))
+
+
 def fsck_file(path: str, deep: bool = True,
               check_sidecar: bool = True) -> List[Finding]:
     """Validate ``path``; returns findings (empty = clean)."""
@@ -182,4 +252,5 @@ def fsck_file(path: str, deep: bool = True,
         except ScdaError as e:
             findings.append(Finding("error", 0, None,
                                     f"sidecar {path + SIDECAR_SUFFIX}: {e}"))
+    _check_delta_chain(path, deep, findings)
     return findings

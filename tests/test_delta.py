@@ -1,0 +1,492 @@
+"""Content-addressed incremental (delta) checkpoints.
+
+Acceptance criteria exercised here:
+
+* a delta chain ≥ 3 deep restores byte-identically to the full state,
+  raw and compressed, serial and pipelined, concurrently at
+  P ∈ {1, 2, 4, 8} thread ranks;
+* unchanged chunks are never rewritten (save cost ∝ changed bytes);
+* stale / corrupt / deleted bases fail loudly with CORRUPT_* taxonomy
+  codes and exact byte offsets — never silently wrong tensors;
+* a CRC32 collision alone can never mark a chunk unchanged;
+* retention is chain-aware: bases referenced by retained deltas survive;
+* ``squash`` output is byte-identical to a direct full save;
+* ``scdatool`` chain tooling (ls --json / verify --chain / fsck /
+  diff --logical / squash) observes all of the above.
+"""
+import hashlib
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import delta as ckdelta
+from repro.checkpoint import manifest as mf
+from repro.checkpoint import pytree_io
+from repro.checkpoint.manager import CheckpointManager, _ckpt_name
+from repro.core import (ScdaError, ScdaErrorCode, ScdaIndex, ThreadComm,
+                        fopen_append, run_ranks)
+
+from repro.tools.cli import main as cli_main
+from repro.tools.fsck import fsck_file
+
+PF = 1 << 16   # prefetch window for pipelined restores
+CB = 1 << 12   # 4 KiB chunks: small enough that one edit != whole leaf
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "w": rng.standard_normal((64, 48)).astype(np.float32),
+        "b": np.arange(1 << 13, dtype=np.float64),   # compressible
+        "m": rng.integers(0, 255, (3, 5, 7), dtype=np.uint8),
+        "empty": np.zeros((0, 4), np.int32),
+        "scalar": np.float32(3.25),
+        "lr": 0.125,
+    }
+
+
+def _mutate(tree, seed):
+    """Copy ``tree`` with ONE element of ``w`` changed (one dirty chunk)."""
+    rng = np.random.default_rng(seed)
+    out = {k: (v.copy() if isinstance(v, np.ndarray) else v)
+           for k, v in tree.items()}
+    flat = out["w"].reshape(-1)
+    flat[int(rng.integers(0, flat.size))] += 1.0
+    return out
+
+
+def _save_chain(tmp_path, n, compressed, mutate=_mutate):
+    """``n`` checkpoints: a full base then n-1 deltas.  Returns
+    (paths, trees)."""
+    trees = [_tree(0)]
+    for k in range(1, n):
+        trees.append(mutate(trees[-1], k))
+    paths, doc = [], None
+    for k, t in enumerate(trees):
+        p = str(tmp_path / f"step_{k:010d}.scda")
+        base = (doc, os.path.basename(paths[-1])) if paths else None
+        doc = pytree_io.save(p, t, step=k, compressed=compressed,
+                             chunk_bytes=CB, record_hashes=True,
+                             delta_base=base)
+        paths.append(p)
+    return paths, trees
+
+
+def _assert_tree_equal(got, want):
+    for k in ("w", "b", "m", "empty", "scalar"):
+        np.testing.assert_array_equal(np.asarray(got[k]),
+                                      np.asarray(want[k]))
+    assert got["lr"] == want["lr"]
+
+
+# --------------------------------------------------------------------------
+# Round trips
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("compressed", [False, True])
+def test_delta_roundtrip_serial_and_pipelined(tmp_path, compressed):
+    paths, trees = _save_chain(tmp_path, 2, compressed)
+    doc = pytree_io.read_manifest(paths[1])
+    assert doc["version"] == mf.DELTA_FORMAT_VERSION
+    assert doc["delta"]["depth"] == 1
+    assert [b["file"] for b in doc["delta"]["bases"]] == \
+        [os.path.basename(paths[0])]
+    for spec_ in doc["leaves"]:
+        assert spec_["store"] == "delta"
+    serial, st0 = pytree_io.restore(paths[1], prefetch_bytes=0)
+    piped, st1 = pytree_io.restore(paths[1], prefetch_bytes=PF)
+    assert st0 == st1 == 1
+    _assert_tree_equal(serial, trees[1])
+    _assert_tree_equal(piped, trees[1])
+
+
+@pytest.mark.parametrize("compressed", [False, True])
+def test_delta_stores_only_changed_chunks(tmp_path, compressed):
+    paths, _ = _save_chain(tmp_path, 2, compressed)
+    doc = pytree_io.read_manifest(paths[1])
+    by_name = {l["name"]: l for l in doc["leaves"]}
+    # only w was touched, and only in one chunk
+    assert len(by_name["w"]["present"]) == 1
+    for name in ("b", "m", "empty"):
+        assert by_name[name]["present"] == []
+    # untouched leaves emit no section at all
+    idx = ScdaIndex.build(paths[1])
+    names = [l["name"] for l in doc["leaves"]]
+    for name in ("b", "m"):
+        user = mf.leaf_user_string(names.index(name))
+        assert idx.find(user) < 0
+    # save cost ∝ changed bytes: the delta is far smaller than the base
+    assert os.path.getsize(paths[1]) < os.path.getsize(paths[0]) / 4
+
+
+@pytest.mark.parametrize("compressed", [False, True])
+@pytest.mark.parametrize("P", [1, 2, 4, 8])
+def test_chain_restore_identity_under_thread_ranks(tmp_path, P, compressed):
+    """≥3-deep chain, restored rank-locally at P concurrent thread ranks,
+    pipelined and serial — byte-identical to the final full state."""
+    paths, trees = _save_chain(tmp_path, 4, compressed)
+    assert pytree_io.read_manifest(paths[3])["delta"]["depth"] == 3
+
+    def workload(comm):
+        out = {}
+        out["serial"], _ = pytree_io.restore(paths[3], prefetch_bytes=0)
+        out["piped"], _ = pytree_io.restore(paths[3], prefetch_bytes=PF)
+        return out
+
+    for rank_out in run_ranks(ThreadComm.group(P), workload):
+        _assert_tree_equal(rank_out["serial"], trees[3])
+        _assert_tree_equal(rank_out["piped"], trees[3])
+
+
+@pytest.mark.parametrize("compressed", [False, True])
+def test_restore_leaf_and_like_through_chain(tmp_path, compressed):
+    paths, trees = _save_chain(tmp_path, 3, compressed)
+    for name in ("w", "b", "m", "scalar"):
+        got = pytree_io.restore_leaf(paths[2], name, prefetch_bytes=PF)
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.asarray(trees[2][name]))
+    assert pytree_io.restore_leaf(paths[2], "lr") == 0.125
+    like = {k: v for k, v in trees[0].items()}  # concrete template
+    got, step = pytree_io.restore(paths[2], like, prefetch_bytes=PF)
+    assert step == 2
+    _assert_tree_equal(got, trees[2])
+
+
+def test_append_to_base_keeps_chain_valid(tmp_path):
+    """Mode-'a' appends (journals) on a base must not invalidate deltas:
+    the content id covers the manifest, not the file tail, and chunk
+    references resolve by user string through the index."""
+    paths, trees = _save_chain(tmp_path, 2, compressed=False)
+    with fopen_append(None, paths[0]) as w:
+        w.write_block(b"journal", b"{\"loss\": 1.5}")
+    got, _ = pytree_io.restore(paths[1], prefetch_bytes=PF)
+    _assert_tree_equal(got, trees[1])
+    assert ckdelta.verify_chain(paths[1]) == []
+
+
+# --------------------------------------------------------------------------
+# Failure modes: stale, deleted, corrupt bases
+# --------------------------------------------------------------------------
+
+def test_rewritten_base_refused(tmp_path):
+    paths, trees = _save_chain(tmp_path, 2, compressed=False)
+    # rewrite the base in place: same name, different content
+    pytree_io.save(paths[0], _tree(99), step=0, chunk_bytes=CB,
+                   record_hashes=True)
+    with pytest.raises(ScdaError) as ei:
+        pytree_io.restore(paths[1], prefetch_bytes=PF)
+    assert ei.value.code == ScdaErrorCode.CORRUPT_CHECKSUM
+    assert "rewritten" in str(ei.value)
+    # fsck agrees, without jax-level restores (shallow chain check)
+    findings = fsck_file(paths[1], deep=False)
+    assert any(f.severity == "error" and "content id" in f.message
+               for f in findings)
+
+
+def test_deleted_base_refused(tmp_path):
+    paths, _ = _save_chain(tmp_path, 2, compressed=False)
+    os.remove(paths[0])
+    with pytest.raises(ScdaError):
+        pytree_io.restore(paths[1], prefetch_bytes=0)
+    findings = fsck_file(paths[1], deep=False)
+    assert any(f.severity == "error" for f in findings)
+
+
+@pytest.mark.parametrize("compressed", [False, True])
+@pytest.mark.parametrize("P", [1, 2, 4, 8])
+def test_corrupt_base_chunk_fails_with_offset(tmp_path, P, compressed):
+    """A flipped byte anywhere in a referenced base chunk surfaces as a
+    CORRUPT_* error with an exact byte offset, on every restoring rank,
+    at several fuzzed positions."""
+    from repro.checkpoint import layout
+    from repro.core.reader import fopen_read
+
+    paths, _ = _save_chain(tmp_path, 3, compressed)
+    # pick a chunk of w the newest delta still resolves FROM THE BASE
+    # (a mutated chunk's newest copy lives in a later archive and a flip
+    # under it would legitimately go unread)
+    doc2 = pytree_io.read_manifest(paths[2])
+    spec_w = next(l for l in doc2["leaves"] if l["name"] == "w")
+    sid0 = 1 + [b["file"] for b in doc2["delta"]["bases"]].index(
+        os.path.basename(paths[0]))
+    c = next(i for i, s in enumerate(spec_w["src"]) if s == sid0)
+    usizes = layout.chunk_sizes(spec_w["nbytes"], CB)
+    user = spec_w["sections"][str(sid0)].encode("ascii")
+    with fopen_read(None, paths[0]) as r:
+        sec = r.index().find(user)
+        assert sec >= 0
+        e = r.index().entries[sec]
+        ext, _, _ = ckdelta._SrcSection(r, sec).chunk_read(
+            spec_w["elem"][c], usizes[c], CB, "w")
+    rng = np.random.default_rng(P)
+    with open(paths[0], "rb") as fh:
+        fh.seek(ext[0])
+        stream = fh.read(ext[1])
+    # §3 base64 framing makes line-break bytes content-neutral: flip a
+    # fuzzed *payload-bearing* byte, not an ignorable one
+    start = int(rng.integers(0, ext[1]))
+    rel = next((start + k) % ext[1] for k in range(ext[1])
+               if stream[(start + k) % ext[1]] not in b"\r\n")
+    pos = ext[0] + rel
+    with open(paths[0], "r+b") as fh:
+        fh.seek(pos)
+        fh.write(bytes([stream[rel] ^ 0xFF]))
+    # sidecar would now be stale vs the flipped byte only in content, not
+    # geometry — readers re-verify payloads, which is the point.
+
+    def workload(comm):
+        try:
+            pytree_io.restore(paths[2], prefetch_bytes=PF)
+            return None
+        except ScdaError as err:
+            return (err.code.name, err.offset)
+
+    for got in run_ranks(ThreadComm.group(P), workload):
+        assert got is not None, "corruption went unnoticed"
+        code, offset = got
+        assert code.startswith("CORRUPT_")
+        assert offset is not None
+        assert e.start <= offset <= e.end
+
+
+def test_crc_collision_alone_never_marks_unchanged():
+    """plan_refs: the dedup decision is keyed on the 128-bit strong hash
+    alone — a CRC32 collision alone never marks a chunk unchanged, and
+    unchanged chunks inherit the base's CRC32 into the fresh table."""
+    data = np.arange(CB, dtype=np.uint8).tobytes()
+    crcs, hashes = mf.chunk_digests(memoryview(data), [CB])
+    # the decision hash must be a 128-bit SHA-256 prefix
+    assert len(hashes[0]) == 2 * mf.CHUNK_HASH_BYTES == 32
+    assert hashes[0] == hashlib.sha256(data).hexdigest()[:32]
+    base_leaf = mf.LeafSpec.make("w", (CB,), np.uint8, False, None)
+    base_leaf["chunks"] = {"bytes": CB, "crc32": list(crcs),
+                           "hash": list(hashes)}
+    base_doc = mf.document(0, [base_leaf], {})
+
+    def fresh(h):
+        s = mf.LeafSpec.make("w", (CB,), np.uint8, False, None)
+        s["chunks"] = {"bytes": CB, "hash": [h]}
+        return s
+
+    # hash matches -> referenced, nothing stored; the base's CRC32 is
+    # inherited (no fresh CRC pass over the unchanged fraction)
+    s = fresh(hashes[0])
+    ckdelta.plan_refs([s], base_doc, "base.scda",
+                      views=[memoryview(data)])
+    assert s["present"] == [] and s["src"] == [1]
+    assert s["chunks"]["crc32"] == list(crcs)
+    # CRC32 would collide (same bytes CRC'd) but the content hash
+    # differs -> stored, never referenced: CRC equality is irrelevant
+    # to the decision
+    s = fresh("0" * 2 * mf.CHUNK_HASH_BYTES)
+    ckdelta.plan_refs([s], base_doc, "base.scda",
+                      views=[memoryview(data)])
+    assert s["present"] == [0] and s["src"] == [0]
+    assert s["chunks"]["crc32"] == list(crcs)  # computed from the bytes
+    # a chunk table lacking CRC32s without the bytes to derive them is
+    # a caller error, not a silently CRC-less manifest
+    with pytest.raises(ValueError, match="no crc32"):
+        ckdelta.plan_refs([fresh(hashes[0])], base_doc, "base.scda")
+
+
+def test_manifest_version_taxonomy(tmp_path):
+    paths, _ = _save_chain(tmp_path, 2, compressed=False)
+    assert pytree_io.read_manifest(paths[0])["version"] == 1
+    assert pytree_io.read_manifest(paths[1])["version"] == 2
+    with pytest.raises(ValueError, match="version"):
+        mf.parse(json.dumps({"format": "repro-scda-checkpoint",
+                             "version": 3}).encode())
+
+
+def test_delta_save_requires_single_rank(tmp_path):
+    path = str(tmp_path / "multi.scda")
+    tree = _tree(0)
+
+    def workload(comm):
+        try:
+            pytree_io.save(path, tree, comm=comm, record_hashes=True)
+            return None
+        except ScdaError as err:
+            comm.barrier()
+            return err.code.name
+
+    assert run_ranks(ThreadComm.group(2), workload) == \
+        ["ARG_SEQUENCE", "ARG_SEQUENCE"]
+
+
+# --------------------------------------------------------------------------
+# Manager integration: chain growth, depth cap, chain-aware retention
+# --------------------------------------------------------------------------
+
+def test_manager_delta_chain_and_restore(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=10, delta=True,
+                            chunk_bytes=CB)
+    trees = [_tree(0)]
+    mgr.save(0, trees[0], blocking=True)
+    for k in range(1, 4):
+        trees.append(_mutate(trees[-1], k))
+        mgr.save(k, trees[k], blocking=True)
+    doc = pytree_io.read_manifest(mgr.path_for(3))
+    assert doc["delta"]["depth"] == 3
+    got, step = mgr.restore_latest()
+    assert step == 3
+    _assert_tree_equal(got, trees[3])
+
+
+def test_manager_chain_depth_cap_forces_full_save(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=10, delta=True,
+                            delta_chain=2, chunk_bytes=CB)
+    t = _tree(0)
+    for k in range(4):
+        mgr.save(k, t, blocking=True)
+        t = _mutate(t, k + 1)
+    docs = [pytree_io.read_manifest(mgr.path_for(k)) for k in range(4)]
+    assert "delta" not in docs[0]
+    assert docs[1]["delta"]["depth"] == 1
+    assert docs[2]["delta"]["depth"] == 2
+    assert "delta" not in docs[3]      # cap reached: full (but hashed) save
+    assert mf.content_id(docs[3])      # still a usable future base
+    assert docs[3]["version"] == 1
+
+
+def test_manager_retention_protects_referenced_bases(tmp_path):
+    """Dropping old steps must never strand a retained delta: referenced
+    bases (and their sidecars) survive; unreferenced ones are deleted."""
+    mgr = CheckpointManager(str(tmp_path), keep=2, delta=True,
+                            chunk_bytes=CB)
+    trees = [_tree(0)]
+    mgr.save(0, trees[0], blocking=True)
+    for k in range(1, 5):
+        trees.append(_mutate(trees[-1], k))
+        mgr.save(k, trees[k], blocking=True)
+    kept = mgr.all_steps()
+    assert kept[-2:] == [3, 4]
+    # steps 3 and 4 are deltas referencing step 0 (the bulk of every
+    # leaf still lives there): retention must have kept it
+    doc = pytree_io.read_manifest(mgr.path_for(4))
+    referenced = {b["file"] for b in doc["delta"]["bases"]}
+    assert _ckpt_name(0) in referenced
+    assert os.path.exists(mgr.path_for(0))
+    for name in referenced:
+        assert os.path.exists(os.path.join(str(tmp_path), name))
+    # ... and the chain restores
+    got, step = mgr.restore_latest()
+    assert step == 4
+    _assert_tree_equal(got, trees[4])
+
+
+def test_manager_retention_drops_unreferenced_steps(tmp_path):
+    """A full-rewrite step cuts the chain: older archives fall out of the
+    reference closure and retention reclaims them (sidecars included)."""
+    def fresh(seed):
+        rng = np.random.default_rng(seed)
+        return {"w": rng.standard_normal((64, 48)).astype(np.float32),
+                "b": rng.standard_normal((1 << 13,)),
+                "m": rng.integers(0, 255, (3, 5, 7), dtype=np.uint8),
+                "empty": np.zeros((0, 4), np.int32),
+                "scalar": np.float32(3.25), "lr": 0.125}
+
+    mgr = CheckpointManager(str(tmp_path), keep=2, delta=True,
+                            chunk_bytes=CB)
+    mgr.save(0, _tree(0), blocking=True)
+    mgr.save(1, _mutate(_tree(0), 1), blocking=True)
+    # steps 2..3: every chunk regenerated — deltas that share no chunk
+    # with (and hence do not reference) steps 0..1
+    mgr.save(2, fresh(50), blocking=True)
+    mgr.save(3, _mutate(fresh(50), 60), blocking=True)
+    for b in pytree_io.read_manifest(mgr.path_for(3))["delta"]["bases"]:
+        assert b["file"] != _ckpt_name(0)
+    assert mgr.all_steps() == [2, 3]
+    assert not os.path.exists(mgr.path_for(0))
+    assert not os.path.exists(mgr.path_for(1))
+    assert not os.path.exists(mgr.path_for(0) + ".scdax")
+    got, step = mgr.restore_latest()
+    assert step == 3
+
+
+def test_manager_env_default_enables_delta(tmp_path, monkeypatch):
+    monkeypatch.setenv(ckdelta.DELTA_ENV, "1")
+    monkeypatch.setenv(ckdelta.CHAIN_ENV, "5")
+    mgr = CheckpointManager(str(tmp_path))
+    assert mgr.delta is True and mgr.delta_chain == 5
+    monkeypatch.setenv(ckdelta.DELTA_ENV, "0")
+    assert CheckpointManager(str(tmp_path)).delta is False
+
+
+# --------------------------------------------------------------------------
+# Squash and logical diff
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("compressed", [False, True])
+def test_squash_byte_identical_to_full_save(tmp_path, compressed):
+    paths, trees = _save_chain(tmp_path, 3, compressed)
+    sq = str(tmp_path / "squash.scda")
+    ckdelta.squash(paths[2], sq)
+    direct = str(tmp_path / "direct.scda")
+    pytree_io.save(direct, trees[2], step=2, compressed=compressed,
+                   chunk_bytes=CB, record_hashes=True)
+    with open(sq, "rb") as a, open(direct, "rb") as b:
+        assert a.read() == b.read()
+    assert ckdelta.checkpoint_diff(sq, paths[2]) == []
+
+
+def test_checkpoint_diff_reports_changed_chunks(tmp_path):
+    paths, _ = _save_chain(tmp_path, 2, compressed=False)
+    lines = ckdelta.checkpoint_diff(paths[0], paths[1])
+    assert any(l.startswith("leaf w:") for l in lines)
+    assert not any(l.startswith("leaf b:") for l in lines)
+    assert any("step" in l for l in lines)
+
+
+# --------------------------------------------------------------------------
+# scdatool chain tooling
+# --------------------------------------------------------------------------
+
+class TestCli:
+    def test_ls_json(self, tmp_path, capsys):
+        paths, _ = _save_chain(tmp_path, 2, compressed=False)
+        assert cli_main(["ls", "--json", paths[1]]) == 0
+        doc = json.loads(capsys.readouterr().out)
+        ck = doc["checkpoint"]
+        assert ck["version"] == 2 and ck["step"] == 1
+        assert ck["delta"]["depth"] == 1
+        assert ck["delta"]["bases"][0]["file"] == \
+            os.path.basename(paths[0])
+        assert ck["delta"]["chunks_stored"] < ck["delta"]["chunks_total"]
+        assert {s["user"] for s in doc["sections"]} >= \
+            {"scda-ckpt status", "scda-ckpt manifest"}
+
+    def test_ls_plain_mentions_chain(self, tmp_path, capsys):
+        paths, _ = _save_chain(tmp_path, 2, compressed=False)
+        assert cli_main(["ls", paths[1]]) == 0
+        assert "delta checkpoint: depth 1" in capsys.readouterr().out
+
+    def test_verify_chain_and_fsck_clean(self, tmp_path, capsys):
+        paths, _ = _save_chain(tmp_path, 3, compressed=True)
+        assert cli_main(["verify", "--chain", paths[2]]) == 0
+        assert "verified" in capsys.readouterr().out
+        assert cli_main(["fsck", paths[2]]) == 0
+
+    def test_verify_chain_catches_rewritten_base(self, tmp_path, capsys):
+        paths, _ = _save_chain(tmp_path, 2, compressed=False)
+        pytree_io.save(paths[0], _tree(7), step=0, chunk_bytes=CB,
+                       record_hashes=True)
+        assert cli_main(["verify", "--chain", paths[1]]) == 1
+        assert "rewritten" in capsys.readouterr().out
+        assert cli_main(["fsck", "--fast", paths[1]]) == 1
+
+    def test_squash_then_logical_diff(self, tmp_path, capsys):
+        paths, _ = _save_chain(tmp_path, 3, compressed=False)
+        sq = str(tmp_path / "sq.scda")
+        assert cli_main(["squash", paths[2], sq, "--index"]) == 0
+        assert os.path.exists(sq + ".scdax")
+        assert cli_main(["diff", "--logical", sq, paths[2]]) == 0
+        out = capsys.readouterr().out
+        assert "chain depth 2 -> 0" in out
+        assert "same checkpoint state" in out
+        # physical diff of chain vs squash differs, logical does not
+        assert cli_main(["diff", sq, paths[2]]) == 1
+        capsys.readouterr()
+        assert cli_main(["diff", "--logical", sq, paths[0]]) == 1
