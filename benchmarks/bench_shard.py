@@ -1,0 +1,88 @@
+"""Sharded vs single-file checkpoint bandwidth — the PR-7 claim that a
+multi-file sharded set costs little over the flat archive it replaces.
+
+One checkpoint tree is saved at shard counts N ∈ {1, 2, 4, 8} (each
+shard an independent scda archive written through the overlapped save
+engine, plus the manifest) and restored back through the manifest; a
+flat (``shards=0``) save/restore pair anchors each side's baseline.
+
+What the numbers mean:
+
+* **save** — sharding re-plans the leaf placement and pays one extra
+  ``fsync``'d manifest write plus per-shard file open/close; the leaf
+  bytes themselves go through the identical pipelined write path, so
+  the gap vs flat is pure set-bookkeeping overhead.
+* **restore** — the reader resolves the manifest, then runs one
+  overlapped read pipeline per shard; small N should track the flat
+  archive closely.
+
+Byte-identity of every shard to a serial write of its leaf subset is
+pinned by tests/test_sharding.py; this file only measures the cost.
+
+Methodology mirrors bench_save: random float32 leaves, ``os.sync()``
+between timed regions, best-of-N per leg.
+"""
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.checkpoint import pytree_io
+
+SHARD_COUNTS = (1, 2, 4, 8)
+
+
+def _best_of(fn, reps=2):
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+        os.sync()
+    return best
+
+
+def _make_tree(total_mb, nleaves=8):
+    """Checkpoint-like leaves: random float32 weights, one leaf per
+    potential shard so every shard count divides the set evenly."""
+    rng = np.random.default_rng(42)
+    per_elems = total_mb * (1 << 20) // nleaves // 4
+    return {f"leaf{i:02d}": rng.standard_normal(per_elems)
+            .astype(np.float32) for i in range(nleaves)}
+
+
+def run(quick=False):
+    rows = []
+    total_mb = 16 if quick else 64
+    reps = 2 if quick else 3
+    tree = _make_tree(total_mb)
+    # Warm the codec/writeback pools once (as in bench_save) so every
+    # leg measures steady state rather than thread spawn.
+    with tempfile.TemporaryDirectory() as d:
+        pytree_io.save(os.path.join(d, "warm.scda"),
+                       {"w": np.zeros(1 << 20, np.uint8)})
+    variants = [("flat", 0)] + [(f"n{n}", n) for n in SHARD_COUNTS]
+    save_t = {}
+    with tempfile.TemporaryDirectory() as d:
+        for tag, shards in variants:
+            path = os.path.join(d, f"{tag}.scda")
+            save_t[tag] = _best_of(
+                lambda p=path, s=shards: pytree_io.save(p, tree, step=1,
+                                                        shards=s), reps)
+            derived = f"{total_mb / save_t[tag]:.0f}MB/s"
+            if tag != "flat":
+                derived += f" cost={save_t[tag] / save_t['flat']:.2f}x"
+            rows.append((f"shard.save_{tag}", save_t[tag] * 1e6, derived))
+        restore_t = {}
+        for tag, _ in variants:
+            path = os.path.join(d, f"{tag}.scda")
+            restore_t[tag] = _best_of(
+                lambda p=path: pytree_io.restore(p), reps)
+            derived = f"{total_mb / restore_t[tag]:.0f}MB/s"
+            if tag != "flat":
+                derived += (f" cost="
+                            f"{restore_t[tag] / restore_t['flat']:.2f}x")
+            rows.append((f"shard.restore_{tag}",
+                         restore_t[tag] * 1e6, derived))
+    return rows

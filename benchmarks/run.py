@@ -41,6 +41,7 @@ def _distill(rows, quick: bool) -> dict:
         "save_MBps": {},
         "append": {},
         "delta": {},
+        "shard": {},
     }
     for name, us, derived in rows:
         m = re.match(r"parallel_io\.(write|read|write_sync)_p(\d+)", name)
@@ -90,6 +91,12 @@ def _distill(rows, quick: bool) -> dict:
             m2 = re.search(r"cost=(\d+(?:\.\d+)?)x", derived)
             if m2:
                 out["delta"][key + "_cost_x"] = float(m2.group(1))
+        elif name.startswith("shard."):
+            key = name.split(".", 1)[1]
+            out["shard"][key + "_MBps"] = _mbps(derived)
+            m2 = re.search(r"cost=(\d+(?:\.\d+)?)x", derived)
+            if m2:
+                out["shard"][key + "_cost_x"] = float(m2.group(1))
         elif name.startswith("index."):
             # strip the section-count suffix so quick/full keys align
             key = re.sub(r"_\d+$", "", name.split(".", 1)[1])
@@ -113,7 +120,8 @@ def main() -> None:
     from benchmarks import (bench_append, bench_checkpoint,
                             bench_compression, bench_delta, bench_format,
                             bench_index, bench_iovec, bench_parallel_io,
-                            bench_restore, bench_save, bench_roofline)
+                            bench_restore, bench_save, bench_shard,
+                            bench_roofline)
     suites = [
         ("format", bench_format.run),
         ("parallel_io", bench_parallel_io.run),
@@ -124,6 +132,7 @@ def main() -> None:
         ("restore", bench_restore.run),
         ("save", bench_save.run),
         ("delta", bench_delta.run),
+        ("shard", bench_shard.run),
         ("append", bench_append.run),
         ("roofline", bench_roofline.run),
     ]

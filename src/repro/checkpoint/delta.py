@@ -520,44 +520,71 @@ def verify_chain(path: str) -> List[str]:
     recorded digest tables are re-hashed leaf by leaf.  Returns problem
     strings (empty = clean); collection is per leaf, so one bad leaf
     does not mask the rest.
+
+    A sharded-set manifest verifies the whole set: manifest-vs-disk
+    consistency (existence / size / pinned content id per shard) first,
+    then every shard archive's own chain.
     """
     from repro.checkpoint import pytree_io as pio
-    problems: List[str] = []
     with fopen_read(None, path) as r:
         doc = pio._read_header_sections(r)
-        pio._adopt_sidecar(r)
-        resolver = ChainResolver(r, doc)
+        if doc.get("format") == mf.SHARDED_FORMAT:
+            sharded = doc
+        else:
+            return _verify_chain_flat(pio, r, doc)
+    from repro.checkpoint import sharding as _sharding
+    problems = _sharding.verify_set(path)
+    base_dir = os.path.dirname(os.path.abspath(path))
+    for k, srec in enumerate(sharded.get("shards", [])):
+        spath = os.path.join(base_dir, srec.get("file", ""))
+        if not os.path.exists(spath):
+            continue  # verify_set already reported the missing file
         try:
-            for i, spec_ in enumerate(doc["leaves"]):
-                name = spec_["name"]
-                table = spec_.get("chunks")
-                if table is None:
-                    if doc.get("delta"):
-                        problems.append(
-                            f"leaf {name}: no chunk digests recorded")
-                    continue
-                try:
-                    if doc.get("delta"):
-                        restore_chained(r, doc, [(name, i, spec_, None)], 0,
-                                        resolver=resolver, strong=True)
-                    else:
-                        values = pio._restore_pipelined(
-                            r, [(name, i, spec_, None)], 0)
-                        host = np.asarray(values[name])
-                        view = pio._byte_view(host)
-                        sizes = layout.chunk_sizes(spec_["nbytes"],
-                                                   int(table["bytes"]))
-                        crcs, hashes = mf.chunk_digests(view, sizes)
-                        for c, (crc, h) in enumerate(zip(crcs, hashes)):
-                            if (crc != table["crc32"][c]
-                                    or h != table["hash"][c]):
-                                problems.append(
-                                    f"leaf {name}: chunk {c} fails its "
-                                    f"recorded digest")
-                except ScdaError as e:
-                    problems.append(f"leaf {name}: {e}")
-        finally:
-            resolver.close()
+            sub = verify_chain(spath)
+        except (ScdaError, OSError, ValueError) as e:
+            # A torn shard fails before its leaves can be walked; report
+            # it as this shard's problem and keep checking the others.
+            sub = [str(e)]
+        for p in sub:
+            problems.append(f"shard #{k} {srec.get('file')!r}: {p}")
+    return problems
+
+
+def _verify_chain_flat(pio, r, doc: Dict[str, Any]) -> List[str]:
+    problems: List[str] = []
+    pio._adopt_sidecar(r)
+    resolver = ChainResolver(r, doc)
+    try:
+        for i, spec_ in enumerate(doc["leaves"]):
+            name = spec_["name"]
+            table = spec_.get("chunks")
+            if table is None:
+                if doc.get("delta"):
+                    problems.append(
+                        f"leaf {name}: no chunk digests recorded")
+                continue
+            try:
+                if doc.get("delta"):
+                    restore_chained(r, doc, [(name, i, spec_, None)], 0,
+                                    resolver=resolver, strong=True)
+                else:
+                    values = pio._restore_pipelined(
+                        r, [(name, i, spec_, None)], 0)
+                    host = np.asarray(values[name])
+                    view = pio._byte_view(host)
+                    sizes = layout.chunk_sizes(spec_["nbytes"],
+                                               int(table["bytes"]))
+                    crcs, hashes = mf.chunk_digests(view, sizes)
+                    for c, (crc, h) in enumerate(zip(crcs, hashes)):
+                        if (crc != table["crc32"][c]
+                                or h != table["hash"][c]):
+                            problems.append(
+                                f"leaf {name}: chunk {c} fails its "
+                                f"recorded digest")
+            except ScdaError as e:
+                problems.append(f"leaf {name}: {e}")
+    finally:
+        resolver.close()
     return problems
 
 
@@ -571,21 +598,31 @@ def squash(src_path: str, dst_path: str, *, comm=None,
     output is byte-identical to a direct full ``save(...,
     record_hashes=True)`` of the same state, so a squashed archive can
     seed a new chain.  Works on full archives too (a digest-recording
-    rewrite).  Returns the new manifest document.
+    rewrite), and on sharded sets — the squash of a sharded chain is one
+    self-contained single-file archive of the whole logical state.
+    Returns the new manifest document.
     """
     from repro.checkpoint import pytree_io as pio
     pf = pio._effective_prefetch(prefetch_bytes)
     with fopen_read(None, src_path) as r:
         doc = pio._read_header_sections(r)
-        pio._adopt_sidecar(r)
-        wanted = [(s["name"], i, s, None)
-                  for i, s in enumerate(doc["leaves"])]
-        if doc.get("delta"):
-            values = restore_chained(r, doc, wanted, pf)
-        elif wanted:
-            values = pio._restore_pipelined(r, wanted, pf)
+        if doc.get("format") == mf.SHARDED_FORMAT:
+            values = None  # resolved below, once the manifest is closed
         else:
-            values = {}
+            pio._adopt_sidecar(r)
+            wanted = [(s["name"], i, s, None)
+                      for i, s in enumerate(doc["leaves"])]
+            if doc.get("delta"):
+                values = restore_chained(r, doc, wanted, pf)
+            elif wanted:
+                values = pio._restore_pipelined(r, wanted, pf)
+            else:
+                values = {}
+    if values is None:
+        from repro.checkpoint import sharding as _sharding
+        doc = _sharding.combined_document(src_path)
+        values, _ = _sharding.restore_flat(src_path,
+                                           prefetch_bytes=prefetch_bytes)
     compressed = any(bool(s.get("compressed")) for s in doc["leaves"])
     chunk_bytes = pio.DEFAULT_CHUNK_BYTES
     for s in doc["leaves"]:
@@ -616,11 +653,21 @@ def checkpoint_diff(path_a: str, path_b: str) -> List[str]:
     payloads compare by digest table when both sides recorded one under
     the same chunking (no payload reads at all), and by resolved bytes
     otherwise — so a delta archive diffs against a full one without ever
-    materializing the unchanged fraction.  Returns difference lines
-    (empty = logically identical).
+    materializing the unchanged fraction.  Sharded sets diff by their
+    combined logical document, so a sharded save diffs cleanly against a
+    single-file one (and against a set with a different shard count).
+    Returns difference lines (empty = logically identical).
     """
     from repro.checkpoint import pytree_io as pio
-    da, db = pio.read_manifest(path_a), pio.read_manifest(path_b)
+
+    def _logical(path: str) -> Dict[str, Any]:
+        d = pio.read_manifest(path)
+        if d.get("format") == mf.SHARDED_FORMAT:
+            from repro.checkpoint import sharding as _sharding
+            return _sharding.combined_document(path, doc=d)
+        return d
+
+    da, db = _logical(path_a), _logical(path_b)
     lines: List[str] = []
     if da.get("step") != db.get("step"):
         lines.append(f"step: {da.get('step')} != {db.get('step')}")

@@ -40,6 +40,8 @@ import numpy as np
 
 from repro.checkpoint import delta as _delta
 from repro.checkpoint import pytree_io
+from repro.checkpoint import sharding as _sharding
+from repro.checkpoint import manifest as _mf
 from repro.core import ScdaError
 from repro.core.comm import Communicator, SerialComm
 from repro.core.index import SIDECAR_SUFFIX, ScdaIndex
@@ -72,13 +74,19 @@ class CheckpointManager:
                  chunk_bytes: int = pytree_io.DEFAULT_CHUNK_BYTES,
                  index_sidecar: bool = True,
                  delta: Optional[bool] = None,
-                 delta_chain: Optional[int] = None) -> None:
+                 delta_chain: Optional[int] = None,
+                 shards: Optional[int] = None) -> None:
         self.directory = directory
         self.keep = max(1, keep)
         self.compressed = compressed
         self.comm = comm or SerialComm()
         self.chunk_bytes = chunk_bytes
         self.index_sidecar = index_sidecar
+        # Multi-file sharded saves: N independent archives + a manifest
+        # file per checkpoint (None defers to REPRO_SCDA_SHARDS; 0 =
+        # classic single-file saves).  See repro.checkpoint.sharding.
+        self.shards = (_sharding.shards_default()
+                       if shards is None else max(0, int(shards)))
         # Incremental (delta) saves: None defers to REPRO_SCDA_DELTA; the
         # chain depth cap (REPRO_SCDA_DELTA_CHAIN) forces a periodic full
         # save so restore fan-in stays bounded and retention can
@@ -194,14 +202,18 @@ class CheckpointManager:
                     continue  # never self-reference on a same-step re-save
                 try:
                     doc = pytree_io.read_manifest(self.path_for(s))
+                    if doc.get("format") == _mf.SHARDED_FORMAT:
+                        # A sharded base needs its per-shard docs (the
+                        # actual digest tables) — content-id-verified,
+                        # so a tampered set falls back to a full save.
+                        doc = _sharding.load_set(self.path_for(s))
                 except (ScdaError, OSError, ValueError):
                     continue  # unreadable base: fall further back
                 cand = (doc, name)
                 break
-        if cand is None or not _delta.base_usable(cand[0]):
+        if cand is None or not _sharding.base_usable_any(cand[0]):
             return None
-        depth = int((cand[0].get("delta") or {}).get("depth", 0))
-        if depth + 1 > self.delta_chain:
+        if _sharding.chain_depth(cand[0]) + 1 > self.delta_chain:
             return None
         return cand
 
@@ -212,37 +224,56 @@ class CheckpointManager:
         tmp = final + ".tmp"
         base = self._delta_base(step) if use_delta else None
         try:
-            doc = pytree_io.save(tmp, host_tree, comm=self.comm, step=step,
-                                 compressed=self.compressed,
-                                 chunk_bytes=self.chunk_bytes,
-                                 aux_extra=aux_extra,
-                                 record_hashes=use_delta or self.delta,
-                                 delta_base=base)
+            if self.shards:
+                # Sharded save: every file (shards + manifest) is written
+                # as <name>.tmp while the manifest records final names;
+                # commit_sharded renames shards first, manifest last —
+                # the manifest rename is the commit point.
+                doc = _sharding.save_sharded(
+                    final, host_tree, shards=self.shards, comm=self.comm,
+                    step=step, compressed=self.compressed,
+                    chunk_bytes=self.chunk_bytes, aux_extra=aux_extra,
+                    record_hashes=use_delta or self.delta,
+                    delta_base=base, tmp_suffix=".tmp")
+            else:
+                doc = pytree_io.save(tmp, host_tree, comm=self.comm,
+                                     step=step,
+                                     compressed=self.compressed,
+                                     chunk_bytes=self.chunk_bytes,
+                                     aux_extra=aux_extra,
+                                     record_hashes=use_delta or self.delta,
+                                     delta_base=base, shards=0)
         except BaseException:
             # A failed save must not leave its half-written tmp around
             # until the next retention sweep: remove it now (best-effort
             # — the atomic-rename invariant already keeps it invisible)
             # and surface the original error unchanged.
             if self.comm.rank == 0:
-                try:
-                    os.remove(tmp)
-                except OSError:
-                    pass
+                stale = (_sharding.set_paths(final, self.shards, ".tmp")
+                         if self.shards else [tmp])
+                for p in stale:
+                    try:
+                        os.remove(p)
+                    except OSError:
+                        pass
             raise
         if self._crash_before_commit:
             raise RuntimeError("injected crash before commit")
         self.comm.barrier()
         if self.comm.rank == 0:
-            os.replace(tmp, final)  # atomic commit
+            if self.shards:
+                _sharding.commit_sharded(final, doc, ".tmp")
+                committed = [os.path.join(self.directory, s["file"])
+                             for s in doc["shards"]] + [final]
+            else:
+                os.replace(tmp, final)  # atomic commit
+                committed = [final]
             if self.index_sidecar:
-                # The .scdax sidecar makes restore_leaf / lazy restores
+                # The .scdax sidecars make restore_leaf / lazy restores
                 # seek without a scan.  Best-effort: the checkpoint is
                 # already committed, and readers fall back to a fresh
-                # header scan when the sidecar is missing or stale.
-                try:
-                    ScdaIndex.build(final).write_sidecar()
-                except (ScdaError, OSError):
-                    pass
+                # header scan when a sidecar is missing or stale.
+                ScdaIndex.write_sidecars(committed)
             if self._journal is not None:
                 # Flush-on-commit: buffered telemetry follows the newest
                 # checkpoint into its file (and refreshes the sidecar it
@@ -260,10 +291,27 @@ class CheckpointManager:
         self._last_doc = (doc, _ckpt_name(step))
         self.comm.barrier()
 
+    def _shard_files(self, name: str) -> List[str]:
+        """Shard file names of checkpoint ``name`` (empty for flat
+        archives or anything unreadable)."""
+        try:
+            doc = pytree_io.read_manifest(
+                os.path.join(self.directory, name))
+        except (ScdaError, OSError, ValueError):
+            return []
+        if doc.get("format") != _mf.SHARDED_FORMAT:
+            return []
+        return [s.get("file") for s in doc.get("shards", [])
+                if s.get("file")]
+
     def _referenced_files(self, kept_steps: List[int]) -> set:
         """Transitive closure of delta-base files the kept checkpoints
         still reference — retention must not delete them, or every
-        surviving delta becomes unrestorable."""
+        surviving delta becomes unrestorable.  Sharded manifests are
+        traversed through their shard archives (whose docs hold the
+        actual base references); the bases a sharded delta records are
+        shard *files*, so protection lands on those names and the
+        retention sweep keeps their whole set."""
         protected: set = set()
         queue = [_ckpt_name(s) for s in kept_steps]
         seen = set(queue)
@@ -274,6 +322,13 @@ class CheckpointManager:
                     os.path.join(self.directory, name))
             except (ScdaError, OSError, ValueError):
                 continue  # unreadable: nothing to protect through it
+            if doc.get("format") == _mf.SHARDED_FORMAT:
+                for s in doc.get("shards", []):
+                    f = s.get("file")
+                    if f and f not in seen:
+                        seen.add(f)
+                        queue.append(f)  # traverse, don't protect
+                continue
             for b in (doc.get("delta") or {}).get("bases", []):
                 f = b.get("file")
                 if f and f not in seen:
@@ -286,19 +341,30 @@ class CheckpointManager:
         steps = self.all_steps()
         protected = self._referenced_files(steps[-self.keep:])
         for s in steps[:-self.keep]:
-            if _ckpt_name(s) in protected:
+            files = [_ckpt_name(s)] + self._shard_files(_ckpt_name(s))
+            if any(f in protected for f in files):
                 continue  # an alive delta chain still needs this base
-            for path in (self.path_for(s), self.path_for(s) + SIDECAR_SUFFIX):
-                try:
-                    os.remove(path)
-                except OSError:
-                    pass  # retention is best-effort
-        # sweep stale tmp files from crashed attempts and orphaned sidecars
-        keep_names = {_ckpt_name(s) for s in self.all_steps()} | protected
+            for f in files:
+                p = os.path.join(self.directory, f)
+                for path in (p, p + SIDECAR_SUFFIX):
+                    try:
+                        os.remove(path)
+                    except OSError:
+                        pass  # retention is best-effort
+        # sweep stale tmp files from crashed attempts, orphaned sidecars,
+        # and shard files whose manifest is gone (a crashed sharded
+        # commit renames shards before the manifest)
+        keep_names = set(protected)
+        for s in self.all_steps():
+            n = _ckpt_name(s)
+            keep_names.add(n)
+            keep_names.update(self._shard_files(n))
         for n in os.listdir(self.directory):
             stale = (n.endswith(".scda.tmp") or n.endswith(".scdax.tmp")
                      or (n.endswith(".scda" + SIDECAR_SUFFIX)
-                         and n[:-len(SIDECAR_SUFFIX)] not in keep_names))
+                         and n[:-len(SIDECAR_SUFFIX)] not in keep_names)
+                     or (_sharding.is_shard_name(n) is not None
+                         and n not in keep_names))
             if stale:
                 try:
                     os.remove(os.path.join(self.directory, n))

@@ -20,6 +20,15 @@ MANIFEST_USER_STRING = b"scda-ckpt manifest"
 STATUS_USER_STRING = b"scda-ckpt status"
 LEAF_USER_PREFIX = "leaf"
 FORMAT_VERSION = 1
+
+#: The sharded-set manifest (:mod:`repro.checkpoint.sharding`): one small
+#: scda file whose block section holds this JSON document instead of a
+#: leaf manifest.  Readers tell the two apart by the block's user string,
+#: so a sharded manifest can never be misread as a flat checkpoint.
+SHARDS_FILE_USER_STRING = b"repro ckpt-shards"
+SHARDS_MANIFEST_USER_STRING = b"scda-shards manifest"
+SHARDED_FORMAT = "repro-scda-sharded"
+SHARDED_VERSION = 1
 #: Manifests holding cross-archive chunk references (delta checkpoints).
 #: A distinct version so pre-delta readers fail loudly instead of
 #: restoring a partial tree from a delta archive they cannot resolve.
@@ -182,6 +191,23 @@ def parse(raw: bytes) -> Dict[str, Any]:
                          f"{doc.get('format')!r}")
     if doc.get("version") not in KNOWN_VERSIONS:
         raise ValueError(f"unsupported manifest version {doc.get('version')}")
+    return doc
+
+
+def build_sharded(doc: Dict[str, Any]) -> bytes:
+    """Serialize a sharded-set manifest document (same human-readable
+    JSON discipline as :func:`build`)."""
+    return json.dumps(doc, indent=1, sort_keys=True).encode("ascii")
+
+
+def parse_sharded(raw: bytes) -> Dict[str, Any]:
+    doc = json.loads(raw.decode("ascii"))
+    if doc.get("format") != SHARDED_FORMAT:
+        raise ValueError(f"not a sharded checkpoint manifest: "
+                         f"{doc.get('format')!r}")
+    if doc.get("version") != SHARDED_VERSION:
+        raise ValueError(
+            f"unsupported sharded manifest version {doc.get('version')}")
     return doc
 
 

@@ -147,7 +147,8 @@ def save(path: str, tree, *, comm: Optional[Communicator] = None,
          aux_extra: Optional[Dict[str, Any]] = None,
          write_window: Optional[int] = None,
          record_hashes: bool = False,
-         delta_base: Optional[Tuple[Dict[str, Any], str]] = None) \
+         delta_base: Optional[Tuple[Dict[str, Any], str]] = None,
+         shards: Optional[int] = None) \
         -> Dict[str, Any]:
     """Write ``tree`` to ``path`` as a serial-equivalent scda checkpoint.
 
@@ -173,8 +174,23 @@ def save(path: str, tree, *, comm: Optional[Communicator] = None,
 
     Returns the manifest document (what :func:`read_manifest` of the
     fresh file would return).
+
+    ``shards`` splits the save into that many independent scda archives
+    plus a manifest file at ``path`` (see
+    :mod:`repro.checkpoint.sharding`); ``None`` defers to the
+    ``REPRO_SCDA_SHARDS`` knob, 0 writes the classic single file.  A
+    sharded save returns the sharded manifest document instead.
     """
     comm = comm or SerialComm()
+    from repro.checkpoint import sharding as _sharding
+    n_shards = _sharding.shards_default() if shards is None else \
+        max(0, int(shards))
+    if n_shards:
+        return _sharding.save_sharded(
+            path, tree, shards=n_shards, comm=comm, step=step,
+            compressed=compressed, chunk_bytes=chunk_bytes,
+            aux_extra=aux_extra, write_window=write_window,
+            record_hashes=record_hashes, delta_base=delta_base)
     named, _ = flatten_named(tree)
     leaves: List[mf.LeafSpec] = []
     arrays: List[Any] = []
@@ -321,17 +337,28 @@ def _encode_aux(value) -> Any:
 # --------------------------------------------------------------------------
 
 def _read_header_sections(r: ScdaReader) -> Dict[str, Any]:
-    """Consume the leading status + manifest sections; returns the doc."""
+    """Consume the leading status + manifest sections; returns the doc.
+
+    Accepts both flat checkpoints and sharded-set manifests (told apart
+    by the block's user string) — callers check ``doc["format"]`` and
+    delegate sharded docs to :mod:`repro.checkpoint.sharding`.
+    """
     hdr = r.read_section_header()
     if hdr.type != "I" or hdr.user_string != mf.STATUS_USER_STRING:
         raise ScdaError(ScdaErrorCode.CORRUPT_ENCODING,
                         "not a repro checkpoint: missing status inline")
     step = mf.parse_status_inline(r.read_inline_data())
     hdr = r.read_section_header()
-    if hdr.type != "B" or hdr.user_string != mf.MANIFEST_USER_STRING:
+    if hdr.type != "B":
         raise ScdaError(ScdaErrorCode.CORRUPT_ENCODING,
                         "not a repro checkpoint: missing manifest block")
-    doc = mf.parse(r.read_block_data())
+    if hdr.user_string == mf.MANIFEST_USER_STRING:
+        doc = mf.parse(r.read_block_data())
+    elif hdr.user_string == mf.SHARDS_MANIFEST_USER_STRING:
+        doc = mf.parse_sharded(r.read_block_data())
+    else:
+        raise ScdaError(ScdaErrorCode.CORRUPT_ENCODING,
+                        "not a repro checkpoint: missing manifest block")
     if doc.get("step") is None:
         doc["step"] = step
     return doc
@@ -384,74 +411,88 @@ def restore(path: str, like=None, *, comm: Optional[Communicator] = None,
     pf = _effective_prefetch(prefetch_bytes)
     with fopen_read(comm, path) as r:
         doc = _read_header_sections(r)
-        step = doc.get("step")
-        chained = bool(doc.get("delta"))
-        if chained:
-            from repro.checkpoint import delta as _delta
-        by_name: Dict[str, Any] = {}
-        for i, spec_ in enumerate(doc["leaves"]):
-            by_name[spec_["name"]] = (i, spec_)
+        if doc.get("format") != mf.SHARDED_FORMAT:
+            return _restore_from_reader(r, doc, like, pf)
+    # Sharded set: the manifest file holds no payloads — close it and
+    # resolve the per-shard archives (deterministic collective opens).
+    from repro.checkpoint import sharding as _sharding
+    return _sharding.restore_sharded(path, doc, like, comm=comm,
+                                     prefetch_bytes=prefetch_bytes)
 
-        if like is None:
-            out: Dict[str, Any] = {}
-            if chained:
-                # Incremental checkpoint: every leaf resolves through the
-                # manifest chain (prefetch engine per archive; pf<=0 is
-                # the serial oracle inside the resolver too).
-                _adopt_sidecar(r)
-                wanted = [(spec_["name"], i, spec_, None)
-                          for i, spec_ in enumerate(doc["leaves"])]
-                out = (_delta.restore_chained(r, doc, wanted, pf)
-                       if wanted else {})
-            elif pf > 0 and doc["leaves"]:
-                _adopt_sidecar(r)
-                wanted = [(spec_["name"], i, spec_, None)
-                          for i, spec_ in enumerate(doc["leaves"])]
-                out = _restore_pipelined(r, wanted, pf)
-            else:
-                # Serial oracle: the forward walk touches every byte in
-                # file order, one section at a time.
-                for spec_ in doc["leaves"]:
-                    hdr = r.read_section_header()
-                    _check_leaf_header(hdr, spec_)
-                    out[spec_["name"]] = _read_leaf_full(r, hdr, spec_)
-            for name, value in doc["aux"].items():
-                out[name] = value
-            return _unflatten_names(out), step
 
-        named, treedef = flatten_named(like)
-        targets = {n: v for n, v in named}
-        missing = [n for n in targets
-                   if n not in by_name and n not in doc["aux"]]
-        if missing:
-            raise ScdaError(ScdaErrorCode.ARG_SEQUENCE,
-                            f"leaves missing from checkpoint: {missing[:5]}"
-                            f"{'…' if len(missing) > 5 else ''}")
-        _adopt_sidecar(r)
+def _restore_from_reader(r: ScdaReader, doc: Dict[str, Any], like,
+                         pf: int):
+    """The flat-checkpoint restore body (reader already past the
+    manifest) — what :func:`restore` runs once the doc turned out not to
+    be a sharded-set manifest."""
+    step = doc.get("step")
+    chained = bool(doc.get("delta"))
+    if chained:
+        from repro.checkpoint import delta as _delta
+    by_name: Dict[str, Any] = {}
+    for i, spec_ in enumerate(doc["leaves"]):
+        by_name[spec_["name"]] = (i, spec_)
+
+    if like is None:
+        out: Dict[str, Any] = {}
         if chained:
-            wanted = [(name,) + by_name[name] + (targets[name],)
-                      for name in targets if name in by_name]
-            values = (_delta.restore_chained(r, doc, wanted, pf)
-                      if wanted else {})
-        elif pf > 0:
-            wanted = [(name,) + by_name[name] + (targets[name],)
-                      for name in targets if name in by_name]
-            values = _restore_pipelined(r, wanted, pf)
+            # Incremental checkpoint: every leaf resolves through the
+            # manifest chain (prefetch engine per archive; pf<=0 is
+            # the serial oracle inside the resolver too).
+            _adopt_sidecar(r)
+            wanted = [(spec_["name"], i, spec_, None)
+                      for i, spec_ in enumerate(doc["leaves"])]
+            out = (_delta.restore_chained(r, doc, wanted, pf)
+                   if wanted else {})
+        elif pf > 0 and doc["leaves"]:
+            _adopt_sidecar(r)
+            wanted = [(spec_["name"], i, spec_, None)
+                      for i, spec_ in enumerate(doc["leaves"])]
+            out = _restore_pipelined(r, wanted, pf)
         else:
-            values = {}
-            for name in targets:
-                if name not in by_name:
-                    continue  # aux leaf
-                i, spec_ = by_name[name]
-                hdr = r.open_section(mf.leaf_user_string(i))
+            # Serial oracle: the forward walk touches every byte in
+            # file order, one section at a time.
+            for spec_ in doc["leaves"]:
+                hdr = r.read_section_header()
                 _check_leaf_header(hdr, spec_)
-                values[name] = _read_leaf_to_target(r, hdr, spec_,
-                                                    targets[name])
+                out[spec_["name"]] = _read_leaf_full(r, hdr, spec_)
+        for name, value in doc["aux"].items():
+            out[name] = value
+        return _unflatten_names(out), step
+
+    named, treedef = flatten_named(like)
+    targets = {n: v for n, v in named}
+    missing = [n for n in targets
+               if n not in by_name and n not in doc["aux"]]
+    if missing:
+        raise ScdaError(ScdaErrorCode.ARG_SEQUENCE,
+                        f"leaves missing from checkpoint: {missing[:5]}"
+                        f"{'…' if len(missing) > 5 else ''}")
+    _adopt_sidecar(r)
+    if chained:
+        wanted = [(name,) + by_name[name] + (targets[name],)
+                  for name in targets if name in by_name]
+        values = (_delta.restore_chained(r, doc, wanted, pf)
+                  if wanted else {})
+    elif pf > 0:
+        wanted = [(name,) + by_name[name] + (targets[name],)
+                  for name in targets if name in by_name]
+        values = _restore_pipelined(r, wanted, pf)
+    else:
+        values = {}
         for name in targets:
-            if name in doc["aux"]:
-                values[name] = doc["aux"][name]
-        leaves_out = [values[n] for n, _ in named]
-        return jax.tree_util.tree_unflatten(treedef, leaves_out), step
+            if name not in by_name:
+                continue  # aux leaf
+            i, spec_ = by_name[name]
+            hdr = r.open_section(mf.leaf_user_string(i))
+            _check_leaf_header(hdr, spec_)
+            values[name] = _read_leaf_to_target(r, hdr, spec_,
+                                                targets[name])
+    for name in targets:
+        if name in doc["aux"]:
+            values[name] = doc["aux"][name]
+    leaves_out = [values[n] for n, _ in named]
+    return jax.tree_util.tree_unflatten(treedef, leaves_out), step
 
 
 def restore_leaf(path: str, name: str, like=None, *,
@@ -473,26 +514,38 @@ def restore_leaf(path: str, name: str, like=None, *,
     pf = _effective_prefetch(prefetch_bytes)
     with fopen_read(comm, path) as r:
         doc = _read_header_sections(r)
-        for i, spec_ in enumerate(doc["leaves"]):
-            if spec_["name"] != name:
-                continue
-            _adopt_sidecar(r)
-            if doc.get("delta"):
-                from repro.checkpoint import delta as _delta
-                return _delta.restore_chained(
-                    r, doc, [(name, i, spec_, like)], pf)[name]
-            if pf > 0:
-                return _restore_pipelined(
-                    r, [(name, i, spec_, like)], pf)[name]
-            hdr = r.open_section(mf.leaf_user_string(i))
-            _check_leaf_header(hdr, spec_)
-            if like is None:
-                return _read_leaf_full(r, hdr, spec_)
-            return _read_leaf_to_target(r, hdr, spec_, like)
-        if name in doc["aux"]:
-            return doc["aux"][name]
-        raise ScdaError(ScdaErrorCode.ARG_SEQUENCE,
-                        f"leaf {name!r} not in checkpoint")
+        if doc.get("format") == mf.SHARDED_FORMAT:
+            sharded = doc
+        else:
+            return _restore_leaf_from_reader(r, doc, name, like, pf)
+    from repro.checkpoint import sharding as _sharding
+    return _sharding.restore_leaf_sharded(path, sharded, name, like,
+                                          comm=comm,
+                                          prefetch_bytes=prefetch_bytes)
+
+
+def _restore_leaf_from_reader(r: ScdaReader, doc: Dict[str, Any],
+                              name: str, like, pf: int):
+    for i, spec_ in enumerate(doc["leaves"]):
+        if spec_["name"] != name:
+            continue
+        _adopt_sidecar(r)
+        if doc.get("delta"):
+            from repro.checkpoint import delta as _delta
+            return _delta.restore_chained(
+                r, doc, [(name, i, spec_, like)], pf)[name]
+        if pf > 0:
+            return _restore_pipelined(
+                r, [(name, i, spec_, like)], pf)[name]
+        hdr = r.open_section(mf.leaf_user_string(i))
+        _check_leaf_header(hdr, spec_)
+        if like is None:
+            return _read_leaf_full(r, hdr, spec_)
+        return _read_leaf_to_target(r, hdr, spec_, like)
+    if name in doc["aux"]:
+        return doc["aux"][name]
+    raise ScdaError(ScdaErrorCode.ARG_SEQUENCE,
+                    f"leaf {name!r} not in checkpoint")
 
 
 def _check_leaf_header(hdr, spec_) -> None:

@@ -451,6 +451,26 @@ class ScdaIndex:
         return sp
 
     @classmethod
+    def write_sidecars(cls, paths: List[str],
+                       comm: Optional[Communicator] = None,
+                       strict: bool = False) -> List[str]:
+        """Build and atomically write sidecars for several related
+        archives — a sharded checkpoint commits its N shard files and
+        manifest together, and wants all their indexes refreshed as one
+        post-commit step.  Best-effort by default (an unwritable
+        directory or a torn file skips that sidecar and moves on, like
+        the manager's post-commit behavior); ``strict`` re-raises
+        instead.  Returns the sidecar paths actually written."""
+        written: List[str] = []
+        for p in paths:
+            try:
+                written.append(cls.build(p, comm).write_sidecar())
+            except (ScdaError, OSError):
+                if strict:
+                    raise
+        return written
+
+    @classmethod
     def load_sidecar(cls, path: str, sidecar: Optional[str] = None,
                      verify: bool = True) -> "ScdaIndex":
         """Load ``<path>.scdax`` and (by default) verify it against the file."""

@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
 from typing import List, Optional
@@ -58,6 +59,8 @@ def _checkpoint_summary(path: str) -> Optional[dict]:
     """Best-effort checkpoint + delta-chain metadata of a repro
     checkpoint archive; None when ``path`` is not one (or unreadable).
     Reads only the manifest block — never jax, never the leaf payloads.
+    Sharded-set manifests summarize via their shard table (existence
+    checks only, no shard opens beyond a stat).
     """
     from repro.checkpoint import manifest as mf
     try:
@@ -65,6 +68,9 @@ def _checkpoint_summary(path: str) -> Optional[dict]:
             idx = r.index()
             sec = idx.find(mf.MANIFEST_USER_STRING)
             if sec < 0:
+                if idx.find(mf.SHARDS_MANIFEST_USER_STRING) >= 0:
+                    from repro.checkpoint import sharding
+                    return sharding.summarize(path)
                 return None
             r.seek_section(sec)
             doc = mf.parse(r.read_block_data())
@@ -82,6 +88,25 @@ def _checkpoint_summary(path: str) -> Optional[dict]:
                         "bases": [dict(b) for b in delta.get("bases", [])],
                         "chunks_stored": stored, "chunks_total": total}
     return out
+
+
+def _expand_set(path: str) -> List[str]:
+    """``[path]`` — or, when ``path`` is a sharded-set manifest, the
+    manifest followed by its shard files, so per-file subcommands
+    (``verify``, ``index``) accept a manifest path and cover the whole
+    set.  Unreadable paths pass through unchanged; the subcommand's own
+    error reporting names them."""
+    from repro.checkpoint import manifest as mf, sharding
+    try:
+        with fopen_read(None, path) as r:
+            if r.index().find(mf.SHARDS_MANIFEST_USER_STRING) < 0:
+                return [path]
+        doc = sharding.read_sharded_manifest(path)
+    except (ScdaError, OSError, ValueError):
+        return [path]
+    base = os.path.dirname(path)
+    return [path] + [os.path.join(base, s.get("file", ""))
+                     for s in doc.get("shards", [])]
 
 
 def cmd_ls(args) -> int:
@@ -114,6 +139,13 @@ def cmd_ls(args) -> int:
         print(f"# delta checkpoint: depth {d['depth']}, "
               f"{d['chunks_stored']}/{d['chunks_total']} chunks stored, "
               f"bases: {bases}")
+    if ckpt is not None and ckpt.get("format") == "repro-scda-sharded":
+        files = ", ".join(
+            s["file"] + ("" if s.get("present") else " (MISSING)")
+            for s in ckpt.get("shards", []))
+        print(f"# sharded checkpoint: step {ckpt.get('step')}, "
+              f"{ckpt.get('leaves')} leaves across "
+              f"{len(ckpt.get('shards', []))} shards: {files}")
     print(f"{'sec':>4} {'kind':>4} {'N':>10} {'E':>10} {'payload':>12} "
           f"{'offset':>12}  user string")
     for i, e in enumerate(idx):
@@ -194,7 +226,7 @@ def cmd_fsck(args) -> int:
 
 def cmd_index(args) -> int:
     status = 0
-    for path in args.files:
+    for path in [p for f in args.files for p in _expand_set(f)]:
         sidecar = path + SIDECAR_SUFFIX
         if args.check:
             try:
@@ -253,7 +285,7 @@ def cmd_verify(args) -> int:
                 print(f"{path}: verified (chunk digests match across "
                       f"the chain)")
         return status
-    for path in args.files:
+    for path in [p for f in args.files for p in _expand_set(f)]:
         sidecar = path + SIDECAR_SUFFIX
         try:
             idx = ScdaIndex.load_sidecar(path)
@@ -539,7 +571,15 @@ def cmd_squash(args) -> int:
     state, so the output is itself a usable delta base."""
     from repro.checkpoint.delta import squash
     src = _checkpoint_summary(args.src)
-    depth = int(((src or {}).get("delta") or {}).get("depth", 0))
+    if (src or {}).get("format") == "repro-scda-sharded":
+        from repro.checkpoint import sharding
+        try:
+            depth = sharding.chain_depth(
+                sharding.load_set(args.src, verify=False))
+        except (ScdaError, OSError, ValueError):
+            depth = 0
+    else:
+        depth = int(((src or {}).get("delta") or {}).get("depth", 0))
     doc = squash(args.src, args.dst)
     if args.index:
         ScdaIndex.build(args.dst).write_sidecar()

@@ -28,7 +28,11 @@ reader must, and checks everything the format makes checkable:
   must exist, parse, and still match the content id recorded when the
   delta was saved — a deleted or rewritten base makes the delta
   unrestorable and is an error; with ``deep=True`` every chunk across
-  the chain is additionally digest-verified (CRC32 + SHA-256).
+  the chain is additionally digest-verified (CRC32 + SHA-256);
+* sharded-set manifests: every shard the manifest names must exist,
+  match its recorded byte size and pinned content id, and pass its own
+  fsck (recursively, same depth) — one fsck of the manifest validates
+  the whole multi-file checkpoint.
 
 Corruption cannot be resynced in a stream format — the walk stops at the
 first structural error; warnings accumulate.
@@ -138,16 +142,22 @@ def _pad_warning(backend, kind: str, data_region: int, payload: int,
 
 
 def _read_checkpoint_doc(path: str):
-    """The repro-checkpoint manifest of ``path``, or None if it has no
-    manifest section.  Reads only the manifest block (no jax, no leaf
-    payloads) — fsck stays cheap on non-checkpoint archives."""
+    """The repro-checkpoint manifest of ``path`` (flat or sharded-set),
+    or None if it has no manifest section.  Reads only the manifest
+    block (no jax, no leaf payloads) — fsck stays cheap on
+    non-checkpoint archives."""
     from repro.checkpoint import manifest as mf
     with fopen_read(None, path) as r:
-        sec = r.index().find(mf.MANIFEST_USER_STRING)
-        if sec < 0:
-            return None
-        r.seek_section(sec)
-        return mf.parse(r.read_block_data())
+        idx = r.index()
+        sec = idx.find(mf.MANIFEST_USER_STRING)
+        if sec >= 0:
+            r.seek_section(sec)
+            return mf.parse(r.read_block_data())
+        sec = idx.find(mf.SHARDS_MANIFEST_USER_STRING)
+        if sec >= 0:
+            r.seek_section(sec)
+            return mf.parse_sharded(r.read_block_data())
+        return None
 
 
 def _check_delta_chain(path: str, deep: bool,
@@ -202,6 +212,39 @@ def _check_delta_chain(path: str, deep: bool,
             findings.append(Finding("error", 0, None, f"chain: {e}"))
 
 
+def _check_sharded_set(path: str, deep: bool, check_sidecar: bool,
+                       findings: List[Finding]) -> None:
+    """Set-level findings for sharded checkpoint manifests.
+
+    The manifest file itself is tiny and already walked; what can rot is
+    the set it names — a shard deleted, truncated, or rewritten in place.
+    ``verify_set`` reports those by shard name; every shard still on disk
+    is then fsck'd recursively (same depth), so one ``scdatool fsck
+    MANIFEST`` validates the whole checkpoint."""
+    from repro.checkpoint import manifest as mf, sharding
+    try:
+        with fopen_read(None, path) as r:
+            if r.index().find(mf.SHARDS_MANIFEST_USER_STRING) < 0:
+                return
+    except (ScdaError, OSError):
+        return
+    for p in sharding.verify_set(path):
+        findings.append(Finding("error", 0, None, f"set: {p}"))
+    try:
+        doc = sharding.read_sharded_manifest(path)
+    except (ScdaError, OSError, ValueError):
+        return  # verify_set already reported the manifest unreadable
+    base = os.path.dirname(os.path.abspath(path))
+    for k, srec in enumerate(doc.get("shards", [])):
+        name = srec.get("file", "")
+        spath = os.path.join(base, name)
+        if not os.path.exists(spath):
+            continue  # missing: already an error, named by verify_set
+        for f in fsck_file(spath, deep=deep, check_sidecar=check_sidecar):
+            findings.append(Finding(f.severity, f.offset, f.section,
+                                    f"shard #{k} {name!r}: {f.message}"))
+
+
 def fsck_file(path: str, deep: bool = True,
               check_sidecar: bool = True) -> List[Finding]:
     """Validate ``path``; returns findings (empty = clean)."""
@@ -253,4 +296,5 @@ def fsck_file(path: str, deep: bool = True,
             findings.append(Finding("error", 0, None,
                                     f"sidecar {path + SIDECAR_SUFFIX}: {e}"))
     _check_delta_chain(path, deep, findings)
+    _check_sharded_set(path, deep, check_sidecar, findings)
     return findings

@@ -1,0 +1,148 @@
+"""Real-process communicator for the multiproc CI lane.
+
+:class:`ThreadComm` proves partition independence with P concurrent ranks
+in one process; this helper removes the last simulation: P **spawned**
+OS processes (no shared interpreter state, no inherited file descriptors
+— ``spawn``, not ``fork``, so the children look like genuinely separate
+MPI ranks and the suite behaves identically on platforms without fork)
+coordinating only through the scda collective interface, each pwriting
+its own windows of one shared file.
+
+:class:`MPComm` implements :class:`repro.core.comm.Communicator` over a
+``multiprocessing`` barrier plus one inbox queue per rank.  Collectives
+are sequence-numbered: every message carries ``(seq, sender, value)`` and
+receivers buffer out-of-order arrivals, so back-to-back collectives from
+ranks running at different speeds can never cross-talk.
+
+:func:`run_mp_ranks` is the driver: it spawns P workers, runs
+``target(comm, *args)`` on each, and returns the per-rank results in rank
+order — the process analogue of :func:`repro.core.comm.run_ranks`.  The
+target must be a module-level function (spawn pickles it by reference)
+and its result must be picklable; return digests or booleans, not arrays.
+"""
+from __future__ import annotations
+
+import multiprocessing as mp
+import queue as _queue
+import time
+import traceback
+from typing import Any, Callable, Dict, List, Tuple
+
+from repro.core.comm import Communicator
+
+#: Per-collective timeout (seconds).  Generous: CI machines stall, but a
+#: deadlocked collective must fail the test instead of hanging the job.
+OP_TIMEOUT = 120.0
+
+
+class MPComm(Communicator):
+    """One rank of a P-process group (see module docstring)."""
+
+    def __init__(self, rank: int, size: int, barrier, inboxes) -> None:
+        self.rank, self.size = rank, size
+        self._barrier = barrier
+        self._inboxes = inboxes      # one mp.Queue per rank, inboxes[r]
+        self._seq = 0                # collective counter (lock-step by
+        self._buf: Dict[Tuple[int, int], Any] = {}  # construction)
+
+    def barrier(self) -> None:
+        self._barrier.wait(timeout=OP_TIMEOUT)
+
+    def _recv(self, seq: int, src: int) -> Any:
+        key = (seq, src)
+        deadline = time.monotonic() + OP_TIMEOUT
+        while key not in self._buf:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                raise TimeoutError(
+                    f"rank {self.rank}: no message {key} within "
+                    f"{OP_TIMEOUT}s")
+            s, r, v = self._inboxes[self.rank].get(timeout=remaining)
+            self._buf[(s, r)] = v
+        return self._buf.pop(key)
+
+    def bcast(self, value: Any, root: int = 0) -> Any:
+        seq = self._seq
+        self._seq += 1
+        if self.rank == root:
+            for dst in range(self.size):
+                if dst != root:
+                    self._inboxes[dst].put((seq, root, value))
+            return value
+        return self._recv(seq, root)
+
+    def allgather(self, value: Any) -> List[Any]:
+        seq = self._seq
+        self._seq += 1
+        for dst in range(self.size):
+            if dst != self.rank:
+                self._inboxes[dst].put((seq, self.rank, value))
+        return [value if src == self.rank else self._recv(seq, src)
+                for src in range(self.size)]
+
+
+def _entry(target: Callable, rank: int, size: int, barrier, inboxes,
+           result_q, args: tuple) -> None:
+    comm = MPComm(rank, size, barrier, inboxes)
+    try:
+        result_q.put((rank, True, target(comm, *args)))
+    except BaseException as e:  # noqa: BLE001 - reported to the parent
+        try:
+            barrier.abort()  # free siblings blocked on a collective
+        except Exception:
+            pass
+        result_q.put((rank, False,
+                      f"rank {rank}: {type(e).__name__}: {e}\n"
+                      f"{traceback.format_exc()}"))
+
+
+def run_mp_ranks(target: Callable, size: int, *, args: tuple = (),
+                 timeout: float = 300.0) -> List[Any]:
+    """Run ``target(comm, *args)`` on ``size`` spawned processes.
+
+    Returns per-rank results in rank order; raises with the failing
+    rank's traceback text if any rank errored, and terminates the group
+    on timeout or a silently dead child (never leaves orphans behind).
+    """
+    ctx = mp.get_context("spawn")
+    barrier = ctx.Barrier(size)
+    inboxes = [ctx.Queue() for _ in range(size)]
+    result_q = ctx.Queue()
+    procs = [ctx.Process(target=_entry, daemon=True,
+                         args=(target, r, size, barrier, inboxes,
+                               result_q, args))
+             for r in range(size)]
+    for p in procs:
+        p.start()
+    results: Dict[int, Tuple[bool, Any]] = {}
+    deadline = time.monotonic() + timeout
+    try:
+        while len(results) < size:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                raise TimeoutError(
+                    f"{size - len(results)} of {size} ranks still "
+                    f"running after {timeout}s")
+            try:
+                rank, ok, payload = result_q.get(
+                    timeout=min(1.0, remaining))
+            except _queue.Empty:
+                dead = [p for r, p in enumerate(procs)
+                        if r not in results and p.exitcode not in (None, 0)]
+                if dead:
+                    raise RuntimeError(
+                        f"{len(dead)} rank(s) died without reporting "
+                        f"(exit codes {[p.exitcode for p in dead]})")
+                continue
+            results[rank] = (ok, payload)
+    finally:
+        for p in procs:
+            p.join(timeout=10.0)
+            if p.is_alive():
+                p.terminate()
+                p.join(timeout=10.0)
+    failures = [payload for ok, payload in results.values() if not ok]
+    if failures:
+        raise RuntimeError("multiproc rank failure:\n"
+                           + "\n".join(failures))
+    return [results[r][1] for r in range(size)]

@@ -392,3 +392,101 @@ class TestDiff:
         assert main(["diff", archive, other]) == 1
         out = capsys.readouterr().out
         assert "section 6 ('zvar')" in out and "element 2" in out
+
+
+# --------------------------------------------------------------------------
+# Error paths: bad inputs exit non-zero with a diagnostic, never a
+# traceback (main() catches ScdaError/OSError/ValueError; an uncaught
+# exception would fail these tests by propagating out of main()).
+# --------------------------------------------------------------------------
+
+class TestErrorPaths:
+    @pytest.fixture
+    def empty_file(self, tmp_path):
+        path = str(tmp_path / "empty.scda")
+        open(path, "wb").close()
+        return path
+
+    @pytest.fixture
+    def garbage_file(self, tmp_path):
+        path = str(tmp_path / "garbage.scda")
+        with open(path, "wb") as f:
+            f.write(b"\x89PNG not an scda file " * 20)
+        return path
+
+    @pytest.mark.parametrize("cmd", [["ls"], ["index"], ["verify"],
+                                     ["cat", "{}", "0"]])
+    def test_zero_length_input(self, empty_file, capsys, cmd):
+        argv = [a.format(empty_file) if "{}" in a else a for a in cmd]
+        if "{}" not in "".join(cmd):
+            argv = argv + [empty_file]
+        assert main(argv) == 1
+        err = capsys.readouterr().err
+        assert "scdatool:" in err
+
+    @pytest.mark.parametrize("cmd", [["ls"], ["index"], ["verify"]])
+    def test_non_scda_input(self, garbage_file, capsys, cmd):
+        assert main(cmd + [garbage_file]) == 1
+        assert "scdatool:" in capsys.readouterr().err
+
+    def test_fsck_zero_length_and_garbage(self, empty_file, garbage_file,
+                                          capsys):
+        assert main(["fsck", empty_file]) == 1
+        assert "CORRUPT" in capsys.readouterr().out
+        assert main(["fsck", garbage_file]) == 1
+        assert "CORRUPT" in capsys.readouterr().out
+
+    def test_missing_file(self, tmp_path, capsys):
+        missing = str(tmp_path / "nope.scda")
+        for cmd in (["ls"], ["index"], ["verify"]):
+            assert main(cmd + [missing]) == 1
+            assert "scdatool:" in capsys.readouterr().err
+
+
+class TestShardedManifestPaths:
+    """scdatool accepts a sharded-set manifest path (tentpole CLI
+    surface) and names the absent shard when the set is broken."""
+
+    @pytest.fixture
+    def sharded(self, tmp_path):
+        import numpy as np
+        from repro.checkpoint import pytree_io
+        path = str(tmp_path / "ck.scda")
+        pytree_io.save(path, {"a": np.arange(64, dtype=np.float32),
+                              "b": np.ones((10,), np.int32), "lr": 0.5},
+                       step=3, shards=2)
+        return path
+
+    def test_ls_summarizes_set(self, sharded, capsys):
+        assert main(["ls", sharded]) == 0
+        out = capsys.readouterr().out
+        assert "sharded checkpoint" in out and "of02.scda" in out
+
+    def test_verify_and_fsck_cover_the_set(self, sharded, capsys):
+        assert main(["index", "--checksums", sharded]) == 0
+        capsys.readouterr()
+        assert main(["verify", sharded]) == 0
+        out = capsys.readouterr().out
+        assert out.count("verified") == 3  # manifest + both shards
+        assert main(["fsck", sharded]) == 0
+        assert "clean" in capsys.readouterr().out
+
+    def test_missing_shard_named_in_diagnostics(self, sharded, capsys):
+        from repro.checkpoint import sharding
+        victim = sharding.shard_file(sharded, 1, 2)
+        os.remove(victim)
+        name = os.path.basename(victim)
+        assert main(["fsck", sharded]) == 1
+        out = capsys.readouterr().out
+        assert "missing shard file" in out and name in out
+        assert main(["verify", "--chain", sharded]) == 1
+        out = capsys.readouterr().out
+        assert "missing shard file" in out and name in out
+
+    def test_truncated_shard_fails_fsck(self, sharded, capsys):
+        from repro.checkpoint import sharding
+        victim = sharding.shard_file(sharded, 0, 2)
+        data = open(victim, "rb").read()
+        open(victim, "wb").write(data[: len(data) - 7])
+        assert main(["fsck", sharded]) == 1
+        assert "CORRUPT" in capsys.readouterr().out

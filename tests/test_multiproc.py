@@ -1,0 +1,129 @@
+"""Parity under real spawned processes — the multiproc CI lane.
+
+Everything the thread-rank suites prove (serial-equivalent bytes under P
+concurrent writers, reader-side partition freedom) re-proven with
+``multiprocessing`` spawn workers: separate interpreters, separate file
+descriptors, collectives over queues — the closest a test gets to MPI
+ranks without MPI.  Marked ``multiproc`` and excluded from the default
+run (``pytest -m multiproc`` selects it; CI gives it its own job).
+"""
+import hashlib
+import os
+import sys
+
+import numpy as np
+import pytest
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "helpers"))
+
+from mp_comm import run_mp_ranks  # noqa: E402
+
+pytestmark = pytest.mark.multiproc
+
+PS = [2, 4, 8]
+
+
+def _file_sha(path):
+    return hashlib.sha256(open(path, "rb").read()).hexdigest()
+
+
+def _tree(seed=0):
+    """Deterministic pytree — parent and every spawned rank rebuild the
+    identical (replicated) state, as data-parallel training would."""
+    rng = np.random.default_rng(1234 + seed)
+    return {
+        "w": rng.standard_normal((64, 33)).astype(np.float32),
+        "b": rng.standard_normal((257,)).astype(np.float64),
+        "m": rng.integers(0, 200, (31, 5, 7)).astype(np.int32),
+        "empty": np.zeros((0, 4), np.float32),
+        "scalar": np.float32(2.5),
+        "lr": 0.125,
+    }
+
+
+# -- workers (module-level: spawn pickles them by reference) -----------------
+
+def _w_core_array(comm, path, payload_hex, counts, E):
+    """Core-level collective write: each rank writes its slice."""
+    from repro.core import fopen_write, partition
+    data = bytes.fromhex(payload_hex)
+    offs = partition.offsets(counts)
+    lo, hi = offs[comm.rank] * E, offs[comm.rank + 1] * E
+    with fopen_write(comm, path, b"user", b"vendor") as f:
+        f.write_array(b"arr", data[lo:hi], counts, E)
+
+
+def _w_ckpt_save(comm, path, seed, shards):
+    from repro.checkpoint import pytree_io
+    pytree_io.save(path, _tree(seed), step=seed, comm=comm, shards=shards)
+
+
+def _w_ckpt_restore(comm, path, seed):
+    from repro.checkpoint import pytree_io
+    expect = _tree(seed)
+    got, step = pytree_io.restore(path, comm=comm)
+    ok = step == seed and got["lr"] == expect["lr"]
+    for k in ("w", "b", "m", "empty", "scalar"):
+        ok = ok and np.array_equal(np.asarray(got[k]), np.asarray(expect[k]))
+    leaf = pytree_io.restore_leaf(path, "b", comm=comm)
+    ok = ok and np.array_equal(np.asarray(leaf), expect["b"])
+    return bool(ok)
+
+
+# -- tests -------------------------------------------------------------------
+
+@pytest.mark.parametrize("P", PS)
+def test_core_array_write_parity(tmp_path, P):
+    """P real processes pwriting one shared array section == serial."""
+    from repro.core import encode
+    N, E = 24, 16
+    data = os.urandom(N * E)
+    counts = [N // P] * P
+    counts[-1] += N - sum(counts)
+    oracle = encode.encode_file(b"vendor", b"user", [
+        encode.encode_array(b"arr", data, N, E)])
+    path = str(tmp_path / "mp_core.scda")
+    run_mp_ranks(_w_core_array, P,
+                 args=(path, data.hex(), counts, E))
+    assert open(path, "rb").read() == oracle
+
+
+@pytest.mark.parametrize("P", PS)
+def test_checkpoint_save_parity_flat(tmp_path, P):
+    """A collective P-process checkpoint save == the serial oracle."""
+    from repro.checkpoint import pytree_io
+    oracle = str(tmp_path / "oracle.scda")
+    pytree_io.save(oracle, _tree(7), step=7, shards=0)
+    path = str(tmp_path / "mp.scda")
+    run_mp_ranks(_w_ckpt_save, P, args=(path, 7, 0))
+    assert _file_sha(path) == _file_sha(oracle)
+
+
+@pytest.mark.parametrize("P", PS)
+def test_checkpoint_save_parity_sharded(tmp_path, P):
+    """P-process sharded save: every shard AND the manifest byte-equal
+    to the single-process write of the same set.  Same basename in two
+    directories — the manifest embeds the shard file names it derives
+    from its own stem, so the stems must match for byte identity."""
+    from repro.checkpoint import pytree_io, sharding
+    (tmp_path / "serial").mkdir()
+    (tmp_path / "mp").mkdir()
+    oracle = str(tmp_path / "serial" / "ck.scda")
+    pytree_io.save(oracle, _tree(9), step=9, shards=2)
+    path = str(tmp_path / "mp" / "ck.scda")
+    run_mp_ranks(_w_ckpt_save, P, args=(path, 9, 2))
+    for o, m in zip(sharding.set_paths(oracle, 2),
+                    sharding.set_paths(path, 2)):
+        assert _file_sha(m) == _file_sha(o), (o, m)
+
+
+@pytest.mark.parametrize("P", PS)
+def test_restore_under_process_ranks(tmp_path, P):
+    """Readers use any process count regardless of the writer's: a
+    2-shard set written serially restores correctly on P real ranks."""
+    from repro.checkpoint import pytree_io
+    path = str(tmp_path / "ck.scda")
+    pytree_io.save(path, _tree(3), step=3, shards=2)
+    assert run_mp_ranks(_w_ckpt_restore, P,
+                        args=(path, 3)) == [True] * P

@@ -1,0 +1,403 @@
+"""Multi-file sharded archives: per-shard byte identity vs the serial
+oracle (fuzzed over P ranks × shard counts, raw and compressed), manifest
+resolution on restore, delta chains over sharded bases, manager
+retention/commit semantics, and the content-id / missing-shard refusal
+paths."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import delta as ckdelta
+from repro.checkpoint import manifest as mf
+from repro.checkpoint import pytree_io, sharding
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import (ScdaError, ScdaErrorCode, ThreadComm, fopen_read,
+                        run_ranks)
+
+PF = 1 << 16  # small prefetch window → exercises refills
+
+
+def _assert_tree_equal(got, want):
+    for k, v in want.items():
+        if isinstance(v, dict):
+            _assert_tree_equal(got[k], v)
+        elif isinstance(v, np.ndarray) or hasattr(v, "dtype"):
+            np.testing.assert_array_equal(np.asarray(got[k]),
+                                          np.asarray(v))
+        else:
+            assert got[k] == v
+
+
+def _fuzz_tree(rng, max_leaves=7):
+    dtypes = [np.float32, np.float64, np.int32, np.uint8, np.float16]
+    tree = {}
+    n = int(rng.integers(1, max_leaves + 1))
+    for i in range(n):
+        kind = int(rng.integers(0, 4))
+        dt = dtypes[int(rng.integers(0, len(dtypes)))]
+        if kind == 0:
+            shape = (0, int(rng.integers(1, 5)))
+        elif kind == 1:
+            shape = ()
+        elif kind == 2:
+            shape = (int(rng.integers(1, 20000)),)
+        else:
+            shape = tuple(int(rng.integers(1, 30))
+                          for _ in range(int(rng.integers(2, 4))))
+        if np.issubdtype(dt, np.floating):
+            val = rng.standard_normal(shape).astype(dt)
+        else:
+            val = rng.integers(0, 100, shape).astype(dt)
+        tree[f"leaf{i:02d}"] = val
+    tree["aux_lr"] = 0.5
+    return tree
+
+
+def _read_files(path, shards):
+    return [open(p, "rb").read() for p in sharding.set_paths(path, shards)]
+
+
+# -------------------------------------------------------------- placement --
+
+class TestAssignShards:
+    def test_deterministic_and_total(self):
+        sizes = [100, 1, 50, 50, 3, 0, 200]
+        a = sharding.assign_shards(sizes, 3)
+        assert a == sharding.assign_shards(sizes, 3)
+        assert len(a) == len(sizes)
+        assert set(a) <= set(range(3))
+
+    def test_greedy_balances_load(self):
+        sizes = [100, 100, 100, 100]
+        a = sharding.assign_shards(sizes, 4)
+        assert sorted(a) == [0, 1, 2, 3]
+
+    def test_more_shards_than_leaves(self):
+        a = sharding.assign_shards([10], 4)
+        assert a == [0]
+
+    def test_shard_name_round_trip(self):
+        name = sharding.shard_file("/x/step_0000000007.scda", 1, 4)
+        parsed = sharding.is_shard_name(os.path.basename(name))
+        assert parsed == ("step_0000000007.scda", 1, 4)
+        assert sharding.is_shard_name("step_0000000007.scda") is None
+        assert sharding.is_shard_name("weird.txt") is None
+
+
+# -------------------------------------------------- fuzzed byte identity --
+
+@pytest.mark.parametrize("P", [1, 2, 4, 8])
+@pytest.mark.parametrize("shards", [1, 2, 4])
+def test_sharded_byte_identity_raw_fuzzed(tmp_path, P, shards):
+    """P thread ranks × N shards: every file of the set byte-identical
+    to the single-rank write of the same set (same basename)."""
+    rng = np.random.default_rng(1000 + 10 * P + shards)
+    for trial in range(2):
+        tree = _fuzz_tree(rng)
+        os.makedirs(tmp_path / f"o{trial}")
+        os.makedirs(tmp_path / f"p{trial}")
+        oracle = str(tmp_path / f"o{trial}" / "ck.scda")
+        pytree_io.save(oracle, tree, step=trial, shards=shards,
+                       write_window=0)
+        piped = str(tmp_path / f"p{trial}" / "ck.scda")
+
+        def workload(comm):
+            pytree_io.save(piped, tree, step=trial, comm=comm,
+                           shards=shards)
+        run_ranks(ThreadComm.group(P), workload)
+        assert _read_files(piped, shards) == _read_files(oracle, shards), \
+            f"trial {trial}: sharded save differs at P={P} N={shards}"
+
+
+@pytest.mark.parametrize("shards", [2, 4])
+def test_each_shard_equals_serial_save_of_its_subset(tmp_path, shards):
+    """The tentpole claim: shard k is byte-identical to a plain
+    single-file save of exactly its leaf subset."""
+    rng = np.random.default_rng(42)
+    tree = _fuzz_tree(rng, max_leaves=6)
+    path = str(tmp_path / "ck.scda")
+    doc = pytree_io.save(path, tree, step=5, shards=shards)
+    for k in range(shards):
+        # Aux leaves live in the set manifest, not the shards, so the
+        # serial oracle of shard k is a plain save of its array subset.
+        subset = {e["name"]: tree[e["name"]]
+                  for e in doc["leaves"] if e["shard"] == k}
+        oracle = str(tmp_path / f"subset{k}.scda")
+        pytree_io.save(oracle, subset, step=5, shards=0)
+        got = open(sharding.shard_file(path, k, shards), "rb").read()
+        want = open(oracle, "rb").read()
+        assert got == want, f"shard {k} differs from serial subset save"
+
+
+@pytest.mark.parametrize("shards", [1, 2, 4])
+def test_compressed_sharded_round_trip(tmp_path, shards):
+    rng = np.random.default_rng(7 + shards)
+    tree = _fuzz_tree(rng)
+    path = str(tmp_path / "ck.scda")
+    pytree_io.save(path, tree, step=3, shards=shards, compressed=True,
+                   chunk_bytes=1 << 12)
+    for pf in (0, PF, None):
+        got, step = pytree_io.restore(path, prefetch_bytes=pf)
+        assert step == 3
+        _assert_tree_equal(got, tree)
+
+
+@pytest.mark.parametrize("P", [2, 4, 8])
+def test_restore_any_rank_count(tmp_path, P):
+    """Readers may use any process count regardless of writer's shards."""
+    tree = _fuzz_tree(np.random.default_rng(11))
+    path = str(tmp_path / "ck.scda")
+    pytree_io.save(path, tree, step=1, shards=2)
+
+    def workload(comm):
+        got, step = pytree_io.restore(path, prefetch_bytes=PF)
+        assert step == 1
+        _assert_tree_equal(got, tree)
+        return True
+    assert run_ranks(ThreadComm.group(P), workload) == [True] * P
+
+
+# ------------------------------------------------------ restore semantics --
+
+def test_restore_leaf_and_like(tmp_path):
+    import jax
+    tree = {"a": np.arange(48, dtype=np.float32).reshape(6, 8),
+            "b": np.ones((9,), np.int64), "lr": 0.25}
+    path = str(tmp_path / "ck.scda")
+    pytree_io.save(path, tree, step=2, shards=2)
+    np.testing.assert_array_equal(
+        np.asarray(pytree_io.restore_leaf(path, "a")), tree["a"])
+    assert pytree_io.restore_leaf(path, "lr") == 0.25
+    with pytest.raises(ScdaError) as ei:
+        pytree_io.restore_leaf(path, "nope")
+    assert ei.value.code == ScdaErrorCode.ARG_SEQUENCE
+    like = {"a": jax.ShapeDtypeStruct((6, 8), np.float32),
+            "b": jax.ShapeDtypeStruct((9,), np.int64), "lr": 0.0}
+    got, step = pytree_io.restore(path, like)
+    assert step == 2
+    _assert_tree_equal(got, tree)
+
+
+def test_read_manifest_returns_sharded_doc(tmp_path):
+    path = str(tmp_path / "ck.scda")
+    pytree_io.save(path, {"x": np.zeros(4, np.float32)}, step=9, shards=2)
+    doc = pytree_io.read_manifest(path)
+    assert doc["format"] == mf.SHARDED_FORMAT
+    assert len(doc["shards"]) == 2
+    assert [e["name"] for e in doc["leaves"]] == ["x"]
+
+
+def test_env_knob_controls_sharding(tmp_path, monkeypatch):
+    monkeypatch.setenv(sharding.SHARDS_ENV, "3")
+    path = str(tmp_path / "ck.scda")
+    pytree_io.save(path, {"x": np.arange(10, dtype=np.int32)}, step=1)
+    assert pytree_io.read_manifest(path)["format"] == mf.SHARDED_FORMAT
+    assert len(pytree_io.read_manifest(path)["shards"]) == 3
+    monkeypatch.setenv(sharding.SHARDS_ENV, "0")
+    path2 = str(tmp_path / "ck2.scda")
+    pytree_io.save(path2, {"x": np.arange(10, dtype=np.int32)}, step=1)
+    assert pytree_io.read_manifest(path2)["format"] != mf.SHARDED_FORMAT
+
+
+# -------------------------------------------------------- refusal paths --
+
+def test_missing_shard_is_named(tmp_path):
+    tree = _fuzz_tree(np.random.default_rng(3), max_leaves=5)
+    path = str(tmp_path / "ck.scda")
+    pytree_io.save(path, tree, step=1, shards=2)
+    victim = sharding.shard_file(path, 1, 2)
+    os.remove(victim)
+    problems = sharding.verify_set(path)
+    assert any("missing shard file" in p
+               and os.path.basename(victim) in p for p in problems)
+    with pytest.raises(ScdaError) as ei:
+        pytree_io.restore(path)
+    assert ei.value.code == ScdaErrorCode.FS_OPEN
+    assert os.path.basename(victim) in str(ei.value)
+
+
+def test_rewritten_shard_refused_by_content_id(tmp_path):
+    """A shard rewritten in place (same name, different content) no
+    longer matches the manifest's pinned id — restores refuse loudly."""
+    tree = {"a": np.arange(100, dtype=np.float32),
+            "b": np.ones((50,), np.int32)}
+    path = str(tmp_path / "ck.scda")
+    doc = pytree_io.save(path, tree, step=1, shards=2,
+                         record_hashes=True)
+    victim_k = doc["leaves"][0]["shard"]
+    victim = sharding.shard_file(path, victim_k, 2)
+    name = doc["leaves"][0]["name"]
+    pytree_io.save(victim, {name: np.zeros_like(tree[name])}, step=1,
+                   shards=0, record_hashes=True)
+    with pytest.raises(ScdaError) as ei:
+        pytree_io.restore(path)
+    assert ei.value.code == ScdaErrorCode.CORRUPT_CHECKSUM
+    assert "rewritten" in str(ei.value)
+    assert any("content id" in p for p in sharding.verify_set(path))
+
+
+def test_truncated_shard_fails_verify(tmp_path):
+    tree = _fuzz_tree(np.random.default_rng(5))
+    path = str(tmp_path / "ck.scda")
+    pytree_io.save(path, tree, step=1, shards=2)
+    victim = sharding.shard_file(path, 0, 2)
+    data = open(victim, "rb").read()
+    open(victim, "wb").write(data[:len(data) // 2])
+    assert sharding.verify_set(path)
+    problems = ckdelta.verify_chain(path)
+    assert any("shard #0" in p for p in problems)
+
+
+# ------------------------------------------------------------ delta chains --
+
+@pytest.mark.parametrize("base_shards,delta_shards",
+                         [(2, 2), (2, 4), (0, 2), (2, 0)])
+def test_delta_chain_over_sharded_bases(tmp_path, base_shards,
+                                        delta_shards):
+    """Delta chains work across shard sets, including mismatched shard
+    counts (moved leaves store fully) and mixed flat/sharded chains."""
+    rng = np.random.default_rng(21)
+    t0 = {"w": rng.standard_normal((64, 16)).astype(np.float32),
+          "b": rng.standard_normal((500,)).astype(np.float64),
+          "lr": 0.5}
+    t1 = {k: (v.copy() if isinstance(v, np.ndarray) else v)
+          for k, v in t0.items()}
+    t1["w"] = t1["w"] + 1.0
+
+    mgr = CheckpointManager(str(tmp_path), keep=5, delta=True,
+                            shards=base_shards)
+    mgr.save(1, t0, blocking=True)
+    mgr.shards = delta_shards
+    mgr.save(2, t1, blocking=True)
+
+    tip = mgr.path_for(2)
+    doc = pytree_io.read_manifest(tip)
+    if delta_shards:
+        assert doc["format"] == mf.SHARDED_FORMAT
+    got, step = pytree_io.restore(tip, prefetch_bytes=PF)
+    assert step == 2
+    _assert_tree_equal(got, t1)
+    got, _ = pytree_io.restore(tip, prefetch_bytes=0)
+    _assert_tree_equal(got, t1)
+    assert ckdelta.verify_chain(tip) == []
+
+
+def test_sharded_delta_actually_references_base(tmp_path):
+    """Same shard count → unchanged leaves resolve by reference into the
+    base's same-k shard (the delta shard is small)."""
+    rng = np.random.default_rng(8)
+    t0 = {"w": rng.standard_normal((256, 64)).astype(np.float32),
+          "b": rng.standard_normal((4096,)).astype(np.float64)}
+    t1 = {"w": t0["w"], "b": t0["b"] + 1.0}
+    mgr = CheckpointManager(str(tmp_path), keep=5, delta=True, shards=2)
+    mgr.save(1, t0, blocking=True)
+    mgr.save(2, t1, blocking=True)
+    doc = sharding.load_set(mgr.path_for(2))
+    bases = [b["file"] for sd in doc["shard_docs"]
+             for b in (sd.get("delta") or {}).get("bases", [])]
+    assert any(sharding.is_shard_name(b) for b in bases)
+    total = lambda p: sum(os.path.getsize(f)  # noqa: E731
+                          for f in sharding.set_paths(p, 2))
+    assert total(mgr.path_for(2)) < total(mgr.path_for(1)) / 2
+
+
+def test_squash_sharded_chain_equals_direct_save(tmp_path):
+    rng = np.random.default_rng(31)
+    t0 = {"w": rng.standard_normal((128, 8)).astype(np.float32),
+          "b": rng.standard_normal((100,)).astype(np.float64), "lr": 0.1}
+    t1 = dict(t0, w=t0["w"] * 2.0)
+    mgr = CheckpointManager(str(tmp_path), keep=5, delta=True, shards=2)
+    mgr.save(1, t0, blocking=True)
+    mgr.save(2, t1, blocking=True)
+    dst = str(tmp_path / "sq.scda")
+    ckdelta.squash(mgr.path_for(2), dst)
+    oracle = str(tmp_path / "oracle.scda")
+    pytree_io.save(oracle, t1, step=2, shards=0, record_hashes=True)
+    assert open(dst, "rb").read() == open(oracle, "rb").read()
+    assert ckdelta.checkpoint_diff(mgr.path_for(2), dst) == []
+
+
+# ---------------------------------------------------------------- manager --
+
+def test_manager_retention_drops_whole_sets(tmp_path):
+    tree = {"x": np.arange(2000, dtype=np.float32)}
+    mgr = CheckpointManager(str(tmp_path), keep=2, shards=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, tree, blocking=True)
+    assert mgr.all_steps() == [3, 4]
+    names = set(os.listdir(tmp_path))
+    for s in (1, 2):
+        stem = f"step_{s:010d}"
+        assert not any(n.startswith(stem) for n in names), names
+    for s in (3, 4):
+        assert f"step_{s:010d}.scda" in names
+        assert f"step_{s:010d}-s00of02.scda" in names
+    got, step = mgr.restore_latest()
+    assert step == 4
+
+
+def test_manager_sweeps_orphan_shards(tmp_path):
+    """A crashed commit renames shards before the manifest; the next
+    retention pass collects shard files whose manifest never landed."""
+    tree = {"x": np.arange(100, dtype=np.float32)}
+    mgr = CheckpointManager(str(tmp_path), keep=2, shards=2)
+    mgr.save(1, tree, blocking=True)
+    orphan = str(tmp_path / "step_0000000099-s00of02.scda")
+    pytree_io.save(orphan, {"x": tree["x"]}, step=99, shards=0)
+    mgr.save(2, tree, blocking=True)
+    assert not os.path.exists(orphan)
+    assert os.path.exists(str(tmp_path / "step_0000000001-s00of02.scda"))
+
+
+def test_manager_shard_files_protected_while_referenced(tmp_path):
+    """Retention keeps a sharded base set alive while a surviving delta
+    references its shards: a large unchanged leaf keeps resolving into
+    step 1's shard, so dropping step 1's set would brick steps 3 and 4."""
+    rng = np.random.default_rng(17)
+    w = rng.standard_normal((512, 32)).astype(np.float32)  # never changes
+    mgr = CheckpointManager(str(tmp_path), keep=2, delta=True, shards=2,
+                            delta_chain=8)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, {"w": w, "b": np.full((8,), float(s))},
+                 blocking=True)
+    # steps 3,4 retained; their chains reach back to step 1's full set
+    doc = sharding.load_set(mgr.path_for(4), verify=False)
+    assert any((sd.get("delta") or {}).get("bases")
+               for sd in doc["shard_docs"])
+    kept = sorted(n for n in os.listdir(tmp_path) if n.endswith(".scda"))
+    assert any(n.startswith("step_0000000001-s") for n in kept), kept
+    got, step = pytree_io.restore(mgr.path_for(4), prefetch_bytes=PF)
+    assert step == 4
+    np.testing.assert_array_equal(np.asarray(got["w"]), w)
+    np.testing.assert_array_equal(np.asarray(got["b"]), np.full((8,), 4.0))
+
+
+def test_manager_restore_like_and_fallback(tmp_path):
+    tree = {"x": np.arange(32, dtype=np.float32)}
+    mgr = CheckpointManager(str(tmp_path), keep=3, shards=2)
+    mgr.save(1, tree, blocking=True)
+    mgr.save(2, {"x": tree["x"] * 2}, blocking=True)
+    # corrupt the newest set's shard: restore falls back to step 1
+    os.remove(sharding.shard_file(mgr.path_for(2), 0, 2))
+    got, step = mgr.restore_latest()
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(got["x"]), tree["x"])
+
+
+def test_sharded_manifest_is_valid_scda(tmp_path):
+    """The manifest is itself a well-formed scda file: readable with the
+    plain core reader, carrying the set description as a block."""
+    path = str(tmp_path / "ck.scda")
+    pytree_io.save(path, {"x": np.zeros(8, np.float32)}, step=4, shards=2)
+    with fopen_read(None, path) as r:
+        assert r.user_string == mf.SHARDS_FILE_USER_STRING
+        hdr = r.read_section_header()
+        assert (hdr.type, hdr.user_string) == ("I", mf.STATUS_USER_STRING)
+        assert mf.parse_status_inline(r.read_inline_data()) == 4
+        hdr = r.read_section_header()
+        assert hdr.type == "B"
+        assert hdr.user_string == mf.SHARDS_MANIFEST_USER_STRING
+        doc = json.loads(r.read_block_data().decode("ascii"))
+        assert doc["format"] == mf.SHARDED_FORMAT
