@@ -327,8 +327,11 @@ class ChainResolver:
         key = (sid, user)
         s = self._sections.get(key)
         if s is None:
+            from repro.checkpoint import pytree_io
             r = self.reader(sid)
-            sec = r.index().find(user)
+            # Tolerant resolution: a torn post-commit append on a base
+            # archive must not demote every delta stacked on top of it.
+            sec = pytree_io._resolve_index(r).find(user)
             if sec < 0:
                 raise ScdaError(
                     ScdaErrorCode.CORRUPT_ENCODING,

@@ -45,6 +45,7 @@ from repro.checkpoint import manifest as _mf
 from repro.core import ScdaError
 from repro.core.comm import Communicator, SerialComm
 from repro.core.index import SIDECAR_SUFFIX, ScdaIndex
+from repro.core.io_backend import replace_durable
 
 _CKPT_RE = re.compile(r"^step_(\d{10})\.scda$")
 
@@ -266,7 +267,10 @@ class CheckpointManager:
                 committed = [os.path.join(self.directory, s["file"])
                              for s in doc["shards"]] + [final]
             else:
-                os.replace(tmp, final)  # atomic commit
+                # Atomic commit: rename + parent-dir fsync.  Without the
+                # directory fsync a power cut can roll the rename back and
+                # lose the commit entirely.
+                replace_durable(tmp, final)
                 committed = [final]
             if self.index_sidecar:
                 # The .scdax sidecars make restore_leaf / lazy restores

@@ -364,6 +364,32 @@ def _read_header_sections(r: ScdaReader) -> Dict[str, Any]:
     return doc
 
 
+def _resolve_index(r: ScdaReader) -> "ScdaIndex":
+    """The reader's index, salvaging a valid prefix on a torn tail.
+
+    A checkpoint that was *committed* and then grew a torn post-commit
+    append (a power cut mid journal-flush) is still a perfectly good
+    checkpoint: every leaf the manifest names lives in the valid prefix.
+    A full index build would raise CORRUPT_* on the torn tail and demote
+    the whole file; instead, adopt the longest-valid-prefix index.  Safe
+    by construction — every seek re-verifies the on-disk section header,
+    and a leaf genuinely missing from the prefix still fails the restore
+    (which then falls back to an older checkpoint, as before).
+    """
+    try:
+        return r.index()
+    except ScdaError as e:
+        if e.group != 1:
+            raise
+        idx = ScdaIndex.build_prefix(r)
+        # Keep the corruption error: if a *required* leaf turns out to be
+        # missing from the prefix, the file was truncated mid-checkpoint
+        # (not torn post-commit) and that original error is the truth.
+        idx._salvage_error = e
+        r.set_index(idx)
+        return idx
+
+
 def _adopt_sidecar(r: ScdaReader) -> None:
     """Give the reader a ``.scdax`` index if a fresh sidecar exists.
 
@@ -653,7 +679,7 @@ def _restore_pipelined(r: ScdaReader, wanted, prefetch_bytes: int) \
     (``DONTNEED``).  Byte-identical to the serial walk by construction —
     only the schedule changes, never the bytes.
     """
-    idx = r.index()
+    idx = _resolve_index(r)
     backend = r._backend
     leaves: List[Dict[str, Any]] = []
     items: List[ReadItem] = []
@@ -661,6 +687,9 @@ def _restore_pipelined(r: ScdaReader, wanted, prefetch_bytes: int) \
         user = mf.leaf_user_string(i)
         sec = idx.find(user)
         if sec < 0:
+            salvage = getattr(idx, "_salvage_error", None)
+            if salvage is not None:
+                raise salvage
             raise ScdaError(ScdaErrorCode.ARG_SEQUENCE,
                             f"no section with user string {user!r} "
                             f"(occurrence 0)")

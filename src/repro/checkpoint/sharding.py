@@ -49,6 +49,7 @@ from typing import Any, Dict, List, Optional, Tuple
 from repro.checkpoint import manifest as mf
 from repro.core.comm import Communicator, SerialComm
 from repro.core.errors import ScdaError, ScdaErrorCode
+from repro.core.io_backend import fsync_dir, replace_file
 from repro.core.reader import fopen_read
 from repro.core.writer import fopen_write
 
@@ -240,10 +241,16 @@ def commit_sharded(path: str, doc: Dict[str, Any],
     manifest last — the manifest rename is the commit point, and until
     it lands no reader can resolve the half-renamed set."""
     n = len(doc["shards"])
+    d = os.path.dirname(os.path.abspath(path))
     for k in range(n):
         sfile = shard_file(path, k, n)
-        os.replace(sfile + tmp_suffix, sfile)
-    os.replace(path + tmp_suffix, path)
+        replace_file(sfile + tmp_suffix, sfile)
+    # Shard renames must be durable BEFORE the manifest rename: the
+    # manifest is the commit point, so once it lands every shard entry
+    # it names has to survive the same power cut.
+    fsync_dir(d)
+    replace_file(path + tmp_suffix, path)
+    fsync_dir(d)
 
 
 # --------------------------------------------------------------------------

@@ -14,6 +14,7 @@ Three groups of checked runtime errors (paper §A.6):
 from __future__ import annotations
 
 import enum
+import errno as _errno
 
 
 class ScdaErrorCode(enum.IntEnum):
@@ -107,3 +108,33 @@ def ferror_string(code: int) -> str:
         return _ERROR_STRINGS[ScdaErrorCode(code)]
     except (ValueError, KeyError):
         return f"unknown scda error code {code}"
+
+
+#: Errno values the backend treats as transient and retries (bounded by
+#: ``REPRO_SCDA_RETRIES``) instead of aborting: an interrupted syscall
+#: and a would-block return are scheduling noise, not file damage.
+TRANSIENT_ERRNOS = frozenset({
+    _errno.EINTR, _errno.EAGAIN,
+    getattr(_errno, "EWOULDBLOCK", _errno.EAGAIN),
+})
+
+
+def os_error_detail(path: str, offset: "int | None", e: OSError,
+                    retries: int = 0) -> str:
+    """The detail string for a group-2 error wrapping ``e``.
+
+    Uniform across the backend's read/write paths: the failing
+    ``path@offset``, the OS error, how many transient retries were burned
+    before giving up, and — loudest of all — an explicit marker for
+    ENOSPC, the one errno whose cleanup contract (tmp sweep, no visible
+    checkpoint) callers must be able to trust.
+    """
+    loc = f"{path}@{offset}" if offset is not None else path
+    msg = f"{loc}: {e}"
+    if retries:
+        msg += f" (gave up after {retries} transient retries)"
+    if getattr(e, "errno", None) == _errno.ENOSPC:
+        msg += (" — NO SPACE LEFT ON DEVICE; aborting this save cleanly"
+                " (tmp files are swept, no partial checkpoint becomes"
+                " visible)")
+    return msg

@@ -151,10 +151,51 @@ class ScdaIndex:
                    scda_version=r.version, vendor=r.vendor,
                    user_string=r.user_string, entries=cls._scan_entries(r))
 
-    @staticmethod
-    def _scan_entries(r) -> List[IndexEntry]:
-        """Header-only walk from the reader's current cursor to EOF."""
+    @classmethod
+    def build_prefix(cls, source,
+                     comm: Optional[Communicator] = None) -> "ScdaIndex":
+        """Index the longest valid *section prefix* of a damaged archive.
+
+        Like :meth:`build`, but a group-1 (corrupt-contents) error stops
+        the scan at the last clean section boundary instead of raising —
+        the salvage primitive behind tolerant restores and ``scdatool
+        repair``.  The result's ``file_size`` is the prefix end, i.e. the
+        exact truncation point that would make the file fsck-clean; a
+        corrupt *file header* (no valid prefix at all) still raises, as
+        do group-2 file-system errors.
+        """
+        from repro.core.reader import ScdaReader, fopen_read
+        if isinstance(source, ScdaReader):
+            return cls._build_prefix_from(source)
+        with fopen_read(comm, source) as r:
+            return cls._build_prefix_from(r)
+
+    @classmethod
+    def _build_prefix_from(cls, r) -> "ScdaIndex":
+        r._backend.advise(0, r._file_size, "sequential")
+        r._pending = None
+        r.cursor = spec.FILE_HEADER_BYTES
         entries: List[IndexEntry] = []
+        try:
+            cls._scan_entries(r, out=entries)
+        except ScdaError as e:
+            if e.group != 1:
+                raise
+        end = entries[-1].end if entries else spec.FILE_HEADER_BYTES
+        return cls(path=r.path, file_size=end,
+                   scda_version=r.version, vendor=r.vendor,
+                   user_string=r.user_string, entries=entries)
+
+    @staticmethod
+    def _scan_entries(r, out: Optional[List[IndexEntry]] = None
+                      ) -> List[IndexEntry]:
+        """Header-only walk from the reader's current cursor to EOF.
+
+        With ``out`` the entries accumulate into the caller's list, so a
+        scan that raises mid-file still leaves every section completed
+        *before* the failure visible (the prefix-salvage path).
+        """
+        entries: List[IndexEntry] = [] if out is None else out
         while not r.at_eof:
             start = r.cursor
             hdr = r.read_section_header(decode=True)
@@ -447,7 +488,10 @@ class ScdaIndex:
                          sync=True) as f:
             f.write_inline(SIDECAR_TARGET_USER, self._target_probe())
             f.write_block(SIDECAR_ENTRIES_USER, self.to_json(), encode=True)
-        os.replace(tmp, sp)
+        # Durable rename: a stale sidecar is only *detected* (staleness
+        # probe) — a resurrected half-renamed one must never be possible.
+        from repro.core.io_backend import replace_durable
+        replace_durable(tmp, sp)
         return sp
 
     @classmethod

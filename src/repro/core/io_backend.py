@@ -47,17 +47,38 @@ Fast-path machinery (all byte-transparent):
 """
 from __future__ import annotations
 
+import errno as _errno
 import os
 import threading
+import time
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
 
-from repro.core.errors import ScdaError, ScdaErrorCode
+from repro.core import faults as _faults
+from repro.core.errors import (TRANSIENT_ERRNOS, ScdaError, ScdaErrorCode,
+                               os_error_detail)
 
 BytesLike = Union[bytes, bytearray, memoryview]
 
 #: Consecutive zero-progress pwrite/pwritev returns tolerated before the
 #: backend gives up with FS_WRITE (a 0-byte return must never spin forever).
 MAX_ZERO_PROGRESS = 8
+
+#: Default bound on transient-errno retries (EINTR immediately, EAGAIN
+#: with exponential backoff) before a syscall aborts as a group-2 error;
+#: ``REPRO_SCDA_RETRIES`` overrides.  Non-transient errnos — ENOSPC and
+#: EIO above all — are never retried: retrying cannot unfill a disk, and
+#: the caller's cleanup contract (tmp sweep) wants the error promptly.
+DEFAULT_RETRIES = 16
+
+
+def max_retries() -> int:
+    """The effective transient-retry bound, read from the environment per
+    call (cheap, and lets tests flip the knob without re-importing)."""
+    raw = os.environ.get("REPRO_SCDA_RETRIES", "")
+    try:
+        return max(0, int(raw)) if raw else DEFAULT_RETRIES
+    except ValueError:
+        return DEFAULT_RETRIES
 
 #: Default readahead window for mode-'r' backends (bytes); env-overridable.
 DEFAULT_READAHEAD = int(os.environ.get("REPRO_SCDA_READAHEAD", str(64 << 10)))
@@ -131,6 +152,10 @@ class FileBackend:
                  readahead: Optional[int] = None) -> None:
         self.path = path
         self.mode = mode
+        # Per-backend fault injector (faults.FaultBackend sets it); the
+        # instrumented syscall wrappers also consult the process-wide /
+        # REPRO_SCDA_FAULTS plans, so this stays None in production.
+        self._inj = None
         flags = os.O_RDONLY
         if mode == "w":
             # fopen('w') semantics (§A.3): create new or truncate existing.
@@ -145,7 +170,7 @@ class FileBackend:
             # writeback executor is available exactly as in mode 'w'.
             flags = os.O_RDWR
         try:
-            self.fd = os.open(path, flags, 0o644)
+            self.fd = _faults.os_open(path, flags, 0o644)
         except OSError as e:
             raise ScdaError(ScdaErrorCode.FS_OPEN, f"{path}: {e}") from e
         # Readahead only makes sense for mode 'r': the file is immutable
@@ -164,30 +189,51 @@ class FileBackend:
         self._wb_lock = threading.Lock()
         self._wb: List[Tuple["Future", int]] = []  # (future, bytes queued)
         self._wb_pool = None
-        self._wb_error: Optional[ScdaError] = None
+        self._wb_error: Optional[BaseException] = None
         # Sticky copy of the first failure: _wb_error is cleared once
         # drain_writes has delivered it, but the file stays poisoned —
         # later submissions must keep failing fast (a lost fragment
-        # cannot be unlost by writing more).
-        self._wb_poison: Optional[ScdaError] = None
+        # cannot be unlost by writing more).  ScdaError, or a
+        # SimulatedCrash from the fault harness (never wrapped).
+        self._wb_poison: Optional[BaseException] = None
+
+    def _transient_retry(self, e: OSError, code: ScdaErrorCode,
+                         offset: Optional[int], attempt: int) -> int:
+        """Classify an OSError mid-loop: transient errnos (EINTR/EAGAIN)
+        are always retried — EINTR immediately, per POSIX restart
+        semantics; EAGAIN with capped exponential backoff — up to
+        ``REPRO_SCDA_RETRIES`` times.  Everything else (ENOSPC, EIO, …)
+        aborts NOW as the exact taxonomy error with the failing byte
+        offset attached.  Returns the next attempt count."""
+        if e.errno in TRANSIENT_ERRNOS and attempt < max_retries():
+            if e.errno != _errno.EINTR:  # EINTR immediate; EAGAIN backs off
+                time.sleep(min(0.001 * (1 << min(attempt, 6)), 0.05))
+            return attempt + 1
+        raise ScdaError(code, os_error_detail(self.path, offset, e, attempt),
+                        offset=offset) from e
 
     # -- writes ---------------------------------------------------------------
     def pwrite(self, offset: int, data: BytesLike) -> None:
         view = _as_view(data)
-        written, stalls = 0, 0
+        written, stalls, attempt = 0, 0, 0
         while written < len(view):
             try:
-                n = os.pwrite(self.fd, view[written:], offset + written)
+                n = _faults.os_pwrite(self.fd, view[written:],
+                                      offset + written, path=self.path,
+                                      inj=self._inj)
             except OSError as e:
-                raise ScdaError(ScdaErrorCode.FS_WRITE,
-                                f"{self.path}@{offset}: {e}") from e
+                attempt = self._transient_retry(
+                    e, ScdaErrorCode.FS_WRITE, offset + written, attempt)
+                continue
+            attempt = 0
             if n == 0:
                 stalls += 1
                 if stalls >= MAX_ZERO_PROGRESS:
                     raise ScdaError(
                         ScdaErrorCode.FS_WRITE,
                         f"{self.path}@{offset + written}: no write progress "
-                        f"after {stalls} attempts")
+                        f"after {stalls} attempts",
+                        offset=offset + written)
             else:
                 stalls = 0
             written += n
@@ -225,21 +271,24 @@ class FileBackend:
                 self.pwrite(offset, v)
                 offset += len(v)
             return
-        i, stalls = 0, 0
+        i, stalls, attempt = 0, 0, 0
         while i < len(views):
             batch = views[i:i + _IOV_MAX]
             try:
-                n = os.pwritev(self.fd, batch, offset)
+                n = _faults.os_pwritev(self.fd, batch, offset,
+                                       path=self.path, inj=self._inj)
             except OSError as e:
-                raise ScdaError(ScdaErrorCode.FS_WRITE,
-                                f"{self.path}@{offset}: {e}") from e
+                attempt = self._transient_retry(
+                    e, ScdaErrorCode.FS_WRITE, offset, attempt)
+                continue
+            attempt = 0
             if n == 0:
                 stalls += 1
                 if stalls >= MAX_ZERO_PROGRESS:
                     raise ScdaError(
                         ScdaErrorCode.FS_WRITE,
                         f"{self.path}@{offset}: no write progress after "
-                        f"{stalls} attempts")
+                        f"{stalls} attempts", offset=offset)
                 continue
             stalls = 0
             offset += n
@@ -344,7 +393,7 @@ class FileBackend:
             # frees window budget soonest.
             try:
                 head.result()
-            except Exception:  # noqa: BLE001 - reap converts to ScdaError
+            except BaseException:  # noqa: BLE001 - reap owns delivery
                 pass  # recorded by the next reap; raised after accounting
 
     def _raise_poison_locked(self) -> None:
@@ -362,9 +411,13 @@ class FileBackend:
             if fut.done():
                 err = fut.exception()
                 if err is not None and self._wb_poison is None:
-                    self._wb_poison = err if isinstance(err, ScdaError) \
-                        else ScdaError(ScdaErrorCode.FS_WRITE,
-                                       f"{self.path}: {err}")
+                    # A SimulatedCrash must stay a crash — wrapping it in
+                    # FS_WRITE would let the taxonomy "handle" power loss.
+                    if isinstance(err, (ScdaError, _faults.SimulatedCrash)):
+                        self._wb_poison = err
+                    else:
+                        self._wb_poison = ScdaError(
+                            ScdaErrorCode.FS_WRITE, f"{self.path}: {err}")
                     self._wb_error = self._wb_poison
             else:
                 still.append((fut, n))
@@ -386,7 +439,7 @@ class FileBackend:
         for fut, _ in pending:
             try:
                 fut.result()
-            except Exception:  # noqa: BLE001 - reap converts to ScdaError
+            except BaseException:  # noqa: BLE001 - reap owns delivery
                 pass  # recorded by the reap below
         with self._wb_lock:
             self._reap_done_locked()
@@ -436,21 +489,24 @@ class FileBackend:
 
     def _pread_upto(self, offset: int, n: int) -> bytes:
         """Read up to ``n`` bytes; short only at end of file."""
-        try:
-            chunks = []
-            got = 0
-            while got < n:
-                chunk = os.pread(self.fd, n - got, offset + got)
-                if not chunk:
-                    break
-                chunks.append(chunk)
-                got += len(chunk)
-            if len(chunks) == 1:
-                return chunks[0]
-            return b"".join(chunks)
-        except OSError as e:
-            raise ScdaError(ScdaErrorCode.FS_READ,
-                            f"{self.path}@{offset}: {e}") from e
+        chunks: List[bytes] = []
+        got, attempt = 0, 0
+        while got < n:
+            try:
+                chunk = _faults.os_pread(self.fd, n - got, offset + got,
+                                         path=self.path, inj=self._inj)
+            except OSError as e:
+                attempt = self._transient_retry(
+                    e, ScdaErrorCode.FS_READ, offset + got, attempt)
+                continue
+            attempt = 0
+            if not chunk:
+                break
+            chunks.append(chunk)
+            got += len(chunk)
+        if len(chunks) == 1:
+            return chunks[0]
+        return b"".join(chunks)
 
     def preadv(self, offset: int, bufs: Sequence[memoryview]) -> int:
         """Fill writable buffers contiguously from ``offset`` in as few
@@ -472,14 +528,17 @@ class FileBackend:
                 if len(data) < len(v):
                     break
             return got
-        i, got = 0, 0
+        i, got, attempt = 0, 0, 0
         while i < len(views):
             batch = views[i:i + _IOV_MAX]
             try:
-                n = os.preadv(self.fd, batch, offset + got)
+                n = _faults.os_preadv(self.fd, batch, offset + got,
+                                      path=self.path, inj=self._inj)
             except OSError as e:
-                raise ScdaError(ScdaErrorCode.FS_READ,
-                                f"{self.path}@{offset + got}: {e}") from e
+                attempt = self._transient_retry(
+                    e, ScdaErrorCode.FS_READ, offset + got, attempt)
+                continue
+            attempt = 0
             if n == 0:  # EOF — no spinning possible on reads
                 break
             got += n
@@ -620,12 +679,18 @@ class FileBackend:
             # Two workers: one extent landing while the next is in flight.
             self._pf_pool = ThreadPoolExecutor(
                 max_workers=2, thread_name_prefix="scda-prefetch")
-        fd = self.fd
+        fd, path, inj = self.fd, self.path, self._inj
 
         def _job() -> bytes:
+            # Routed through the fault layer so injected read faults hit
+            # background prefetch too; a failing job is dropped by
+            # _take_prefetched and the extent is re-read in the
+            # foreground, which raises the exact ScdaError (with byte
+            # offset) a never-prefetched read would have.
             chunks, got = [], 0
             while got < length:
-                chunk = os.pread(fd, length - got, offset + got)
+                chunk = _faults.os_pread(fd, length - got, offset + got,
+                                         path=path, inj=inj)
                 if not chunk:
                     break  # short at EOF; consumer re-reads and raises
                 chunks.append(chunk)
@@ -732,15 +797,21 @@ class FileBackend:
 
     def truncate(self, n: int) -> None:
         try:
-            os.ftruncate(self.fd, n)
+            _faults.os_ftruncate(self.fd, n, path=self.path, inj=self._inj)
         except OSError as e:
-            raise ScdaError(ScdaErrorCode.FS_WRITE, str(e)) from e
+            raise ScdaError(ScdaErrorCode.FS_WRITE,
+                            os_error_detail(self.path, n, e)) from e
+        self._cache = b""  # cached bytes past the cut are stale
 
     def fsync(self) -> None:
-        try:
-            os.fsync(self.fd)
-        except OSError as e:
-            raise ScdaError(ScdaErrorCode.FS_WRITE, str(e)) from e
+        attempt = 0
+        while True:
+            try:
+                _faults.os_fsync(self.fd, path=self.path, inj=self._inj)
+                return
+            except OSError as e:
+                attempt = self._transient_retry(
+                    e, ScdaErrorCode.FS_WRITE, None, attempt)
 
     def close(self, sync: bool = False) -> None:
         if self.fd < 0:
@@ -757,17 +828,21 @@ class FileBackend:
         # the kernel before fsync/close, and a failed one must surface as
         # the ScdaError the foreground write would have raised (after the
         # fd is closed — never leak it on the error path).
-        wb_err: Optional[ScdaError] = None
+        wb_err: Optional[BaseException] = None
         if self._wb_pool is not None:
             try:
                 self.drain_writes()
-            except ScdaError as e:
+            except (ScdaError, _faults.SimulatedCrash) as e:
                 wb_err = e
             self._wb_pool.shutdown(wait=True)
             self._wb_pool = None
         try:
             if sync and wb_err is None:
-                os.fsync(self.fd)
+                try:
+                    self.fsync()   # transient errnos retried like any fsync
+                except ScdaError:
+                    os.close(self.fd)   # never leak the fd on give-up
+                    raise
             os.close(self.fd)
         except OSError as e:
             raise ScdaError(ScdaErrorCode.FS_CLOSE, str(e)) from e
@@ -776,3 +851,33 @@ class FileBackend:
             self._cache = b""
         if wb_err is not None:
             raise wb_err
+
+
+# -- durable metadata helpers -------------------------------------------------
+# An atomic rename is only the commit point once the *directory entry* is on
+# disk: POSIX lets a power cut after os.replace() roll the rename back unless
+# the parent directory is fsynced.  Every commit in the repo (checkpoint file,
+# sidecar refresh, sharded manifest) goes through these helpers.
+
+def fsync_dir(path: str) -> None:
+    """fsync a directory so renames inside it survive a power cut."""
+    try:
+        _faults.os_fsync_dir(path or ".")
+    except OSError as e:
+        raise ScdaError(ScdaErrorCode.FS_WRITE,
+                        f"{path}: directory fsync: {e}") from e
+
+
+def replace_file(src: str, dst: str) -> None:
+    """os.replace with the ScdaError taxonomy (and fault injection)."""
+    try:
+        _faults.os_replace(src, dst)
+    except OSError as e:
+        raise ScdaError(ScdaErrorCode.FS_WRITE,
+                        f"{src} -> {dst}: {e}") from e
+
+
+def replace_durable(src: str, dst: str) -> None:
+    """Atomic rename plus parent-directory fsync: the full commit point."""
+    replace_file(src, dst)
+    fsync_dir(os.path.dirname(os.path.abspath(dst)))

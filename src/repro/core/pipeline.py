@@ -61,6 +61,7 @@ from typing import (Any, Callable, Iterator, List, Optional, Sequence,
                     Tuple)
 
 from repro.core import codec, spec
+from repro.core import faults as _faults
 from repro.core.errors import ScdaError, ScdaErrorCode
 from repro.core.io_backend import BytesLike, FileBackend
 
@@ -212,8 +213,8 @@ def run_pipeline(backend: FileBackend, items: Sequence[ReadItem],
                 if not f.cancelled():
                     try:
                         f.result()
-                    except Exception:  # noqa: BLE001 - shutdown path
-                        pass
+                    except BaseException:  # noqa: BLE001 - shutdown path
+                        pass  # primary error already propagating
         inflight.clear()
 
 
@@ -348,13 +349,13 @@ def run_write_pipeline(backend: FileBackend, items: Sequence[WriteItem],
             if not f.cancelled():
                 try:
                     f.result()
-                except Exception:  # noqa: BLE001 - shutdown path
-                    pass
+                except BaseException:  # noqa: BLE001 - shutdown path
+                    pass  # primary error already propagating
         snaps.clear()
         pend.clear()
         try:
             backend.drain_writes()
-        except ScdaError:
+        except (ScdaError, _faults.SimulatedCrash):
             # the primary error is already propagating; the drain only
             # guarantees quiescence here
             pass

@@ -151,6 +151,22 @@ def _validate_append_tail(path: str, recover: bool = False) -> _TailInfo:
         return info(r.cursor, sections)
 
 
+#: Public aliases: ``scdatool repair`` and the crash-consistency harness
+#: reuse the mode-'a' tail validator as the salvage primitive.
+TailInfo = _TailInfo
+
+
+def validate_tail(path: str, recover: bool = False) -> _TailInfo:
+    """Validate an archive tail without opening it for append.
+
+    With ``recover=False`` a damaged tail raises the reader's exact
+    ``ScdaError``; with ``recover=True`` the result's ``truncate_to``
+    marks the end of the longest valid section prefix (None when the
+    whole file is clean).  A corrupt *file header* always raises.
+    """
+    return _validate_append_tail(path, recover=recover)
+
+
 class ScdaWriter:
     """File context for modes 'w' (create/overwrite) and 'a' (append —
     reserved by the paper's fopen, implemented here): both resume the

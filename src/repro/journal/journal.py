@@ -175,7 +175,14 @@ class ScdaJournal:
             self._buf.append(record)
             if (self.flush_records and self.path is not None
                     and len(self._buf) >= self.flush_records):
-                self.flush()
+                try:
+                    self.flush()
+                except (ScdaError, OSError):
+                    # Telemetry must never crash the training loop on a
+                    # transient disk error: the records stay buffered
+                    # (flush clears only on success) and the error
+                    # resurfaces on an *explicit* flush()/close().
+                    pass
 
     def retarget(self, path: str) -> None:
         """Point future flushes at ``path`` (buffered records carry over)
@@ -244,7 +251,16 @@ def iter_records(path: str, start_section: int = 0,
     with fopen_read(None, path) as r:
         if index is not None:
             r.set_index(index)
-        idx = r.index()
+        try:
+            idx = r.index()
+        except ScdaError as e:
+            if e.group != 1:
+                raise
+            # A power cut can tear the newest append; every record in
+            # the valid prefix is still whole-section framed and
+            # readable (the next flush truncates and heals the tail).
+            idx = ScdaIndex.build_prefix(r)
+            r.set_index(idx)
         for i in range(max(0, start_section), len(idx.entries)):
             e = idx.entries[i]
             if e.user_string != JOURNAL_USER_STRING or e.type != "V":

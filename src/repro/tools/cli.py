@@ -41,7 +41,8 @@ from typing import List, Optional
 from repro.core import (ScdaError, ScdaErrorCode, ScdaIndex, fopen_append,
                         fopen_read, fopen_write)
 from repro.core.index import SIDECAR_SUFFIX
-from repro.tools.fsck import fsck_file
+from repro.tools.fsck import (fsck_file, is_sharded_manifest, repair_file,
+                              repair_set)
 
 
 def _err(msg: str) -> None:
@@ -219,6 +220,32 @@ def cmd_fsck(args) -> int:
             print(f"{path}: CORRUPT ({errors} errors, {warnings} warnings)")
         else:
             print(f"{path}: clean ({warnings} warnings)")
+    return status
+
+
+# -- repair ------------------------------------------------------------------
+
+def cmd_repair(args) -> int:
+    """Salvage the valid prefix of damaged archives (fsck's fixer twin).
+
+    Exit 0 when every file ends up clean or repaired; 1 when anything is
+    unrecoverable — or, under ``--dry-run``, when a repair *would* be
+    needed (so scripts can probe without mutating).
+    """
+    status = 0
+    for path in args.files:
+        if is_sharded_manifest(path):
+            results = repair_set(path, quarantine=not args.no_quarantine,
+                                 dry_run=args.dry_run,
+                                 sidecar=not args.no_sidecar)
+        else:
+            results = [repair_file(path, quarantine=not args.no_quarantine,
+                                   dry_run=args.dry_run,
+                                   sidecar=not args.no_sidecar)]
+        for r in results:
+            print(r)
+            if r.action in ("unrecoverable", "would-repair"):
+                status = 1
     return status
 
 
@@ -707,6 +734,21 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("-q", "--quiet", action="store_true",
                    help="print errors only")
     p.set_defaults(fn=cmd_fsck)
+
+    p = sub.add_parser("repair",
+                       help="salvage the valid prefix of damaged archives "
+                            "(quarantines the torn tail, rebuilds sidecars; "
+                            "sharded sets report per-shard damage)")
+    p.add_argument("files", nargs="+")
+    p.add_argument("-n", "--dry-run", action="store_true",
+                   help="report what would be repaired without touching "
+                        "anything (exit 1 if damage found)")
+    p.add_argument("--no-quarantine", action="store_true",
+                   help="discard the damaged tail instead of preserving it "
+                        "in <file>.quarantine-<offset>")
+    p.add_argument("--no-sidecar", action="store_true",
+                   help="do not rebuild .scdax sidecars after the repair")
+    p.set_defaults(fn=cmd_repair)
 
     p = sub.add_parser("index", help="write (or --check) .scdax sidecars")
     p.add_argument("files", nargs="+")

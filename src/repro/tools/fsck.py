@@ -46,7 +46,9 @@ from typing import List, Optional
 from repro.core import spec
 from repro.core.errors import ScdaError
 from repro.core.index import SIDECAR_SUFFIX, ScdaIndex
+from repro.core.io_backend import FileBackend, fsync_dir
 from repro.core.reader import fopen_read
+from repro.core.writer import validate_tail
 
 
 @dataclasses.dataclass
@@ -298,3 +300,150 @@ def fsck_file(path: str, deep: bool = True,
     _check_delta_chain(path, deep, findings)
     _check_sharded_set(path, deep, check_sidecar, findings)
     return findings
+
+
+# --------------------------------------------------------------------------
+# Repair (``scdatool repair``)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RepairResult:
+    """Outcome of :func:`repair_file` on one archive.
+
+    ``action`` is one of ``"clean"`` (nothing to do), ``"repaired"``,
+    ``"would-repair"`` (dry run found damage), or ``"unrecoverable"``
+    (no valid prefix — e.g. a corrupt file header).
+    """
+    path: str
+    action: str
+    valid_bytes: int = 0         # prefix kept (the truncation point)
+    sections: int = 0            # whole sections surviving the repair
+    dropped_bytes: int = 0       # damaged tail removed (or would be)
+    quarantine: Optional[str] = None  # where the damaged bytes went
+    sidecar: Optional[str] = None     # rebuilt sidecar, if one existed
+    detail: str = ""
+
+    def __str__(self) -> str:
+        s = f"{self.path}: {self.action}"
+        if self.action == "clean":
+            return s + f" ({self.sections} sections, {self.valid_bytes} bytes)"
+        if self.action == "unrecoverable":
+            return s + f": {self.detail}"
+        s += (f": kept {self.sections} sections / {self.valid_bytes} bytes, "
+              f"dropped {self.dropped_bytes} damaged bytes at offset "
+              f"{self.valid_bytes}")
+        if self.quarantine:
+            s += f" -> {self.quarantine}"
+        if self.sidecar:
+            s += f" (sidecar rebuilt: {self.sidecar})"
+        return s
+
+
+def repair_file(path: str, quarantine: bool = True, dry_run: bool = False,
+                sidecar: bool = True) -> RepairResult:
+    """Salvage the valid section prefix of a damaged archive.
+
+    Reuses the mode-'a' tail validator with ``recover=True``: everything
+    before the first structural failure is a complete, fsck-clean
+    archive — the damaged tail is cut at that exact byte.  With
+    ``quarantine`` the removed bytes are preserved verbatim in
+    ``<path>.quarantine-<offset>`` (forensics, nothing is destroyed);
+    with ``sidecar`` an existing ``.scdax`` is rebuilt to describe the
+    repaired file (checksums preserved if the old one recorded them).
+    ``dry_run`` reports what would happen without touching the file.
+    """
+    try:
+        size = os.stat(path).st_size
+    except OSError as e:
+        return RepairResult(path, "unrecoverable", detail=str(e))
+    try:
+        tail = validate_tail(path, recover=True)
+    except ScdaError as e:
+        return RepairResult(path, "unrecoverable", detail=str(e),
+                            dropped_bytes=size)
+    if tail.truncate_to is None:
+        return RepairResult(path, "clean", valid_bytes=tail.end,
+                            sections=tail.sections)
+    cut = tail.truncate_to
+    res = RepairResult(path, "would-repair" if dry_run else "repaired",
+                       valid_bytes=cut, sections=tail.sections,
+                       dropped_bytes=size - cut)
+    if dry_run:
+        return res
+    b = FileBackend(path, "a", create=False)
+    try:
+        if quarantine and size > cut:
+            qpath = f"{path}.quarantine-{cut}"
+            damaged = b.pread(cut, size - cut)
+            with open(qpath, "wb") as qf:
+                qf.write(damaged)
+                qf.flush()
+                os.fsync(qf.fileno())
+            res.quarantine = qpath
+        b.truncate(cut)
+        b.fsync()
+    finally:
+        b.close()
+    # The truncation (and the quarantine file) must survive a power cut
+    # just like a commit would.
+    fsync_dir(os.path.dirname(os.path.abspath(path)))
+    if sidecar and os.path.exists(path + SIDECAR_SUFFIX):
+        try:
+            idx = ScdaIndex.refresh_sidecar(path)
+            if idx is not None:
+                res.sidecar = path + SIDECAR_SUFFIX
+        except (ScdaError, OSError) as e:
+            res.detail = f"sidecar rebuild failed: {e}"
+    return res
+
+
+def is_sharded_manifest(path: str) -> bool:
+    """True when ``path``'s valid prefix contains a sharded-set manifest."""
+    from repro.checkpoint import manifest as mf
+    try:
+        with fopen_read(None, path) as r:
+            try:
+                idx = r.index()
+            except ScdaError as e:
+                if e.group != 1:
+                    raise
+                idx = ScdaIndex.build_prefix(r)
+            return idx.find(mf.SHARDS_MANIFEST_USER_STRING) >= 0
+    except (ScdaError, OSError):
+        return False
+
+
+def repair_set(path: str, quarantine: bool = True, dry_run: bool = False,
+               sidecar: bool = True) -> List[RepairResult]:
+    """Repair a sharded checkpoint set, reporting per-shard damage.
+
+    The manifest file is repaired first (its own tail can be torn), then
+    every shard it names — a damaged shard is salvaged independently
+    instead of the whole set being refused.  Missing shards are reported
+    as unrecoverable entries; the manifest itself is never rewritten to
+    drop them (that would change what was committed).
+    """
+    from repro.checkpoint import sharding
+    results = [repair_file(path, quarantine=quarantine, dry_run=dry_run,
+                           sidecar=sidecar)]
+    if results[0].action == "unrecoverable":
+        return results
+    try:
+        doc = sharding.read_sharded_manifest(path)
+    except (ScdaError, OSError, ValueError) as e:
+        results[0].detail = f"manifest unreadable after repair: {e}"
+        return results
+    base = os.path.dirname(os.path.abspath(path))
+    for k, srec in enumerate(doc.get("shards", [])):
+        name = srec.get("file", "")
+        spath = os.path.join(base, name)
+        if not os.path.exists(spath):
+            results.append(RepairResult(
+                spath, "unrecoverable",
+                detail=f"shard #{k} named by the manifest is missing"))
+            continue
+        r = repair_file(spath, quarantine=quarantine, dry_run=dry_run,
+                        sidecar=sidecar)
+        r.detail = (f"shard #{k}" + (f": {r.detail}" if r.detail else ""))
+        results.append(r)
+    return results

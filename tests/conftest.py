@@ -5,6 +5,10 @@ even when the dependency is absent: property tests (``@given``) skip
 cleanly, every example-based test in the same modules still executes.
 Install the real package (see requirements-dev.txt) to run the property
 tests.
+
+Also provides the ``fault_injection`` fixture: a factory installing a
+process-wide deterministic fault plan (``repro.core.faults``) that is
+always uninstalled on test exit, so no fault can leak into the next test.
 """
 import sys
 import types
@@ -49,3 +53,17 @@ except ImportError:
     _hyp.strategies = _st
     sys.modules["hypothesis"] = _hyp
     sys.modules["hypothesis.strategies"] = _st
+
+
+@pytest.fixture
+def fault_injection():
+    """Factory: ``inject(spec)`` installs a deterministic fault plan and
+    returns its injector (``.injected`` lists every fault fired).  The
+    plan is uninstalled automatically, even when the test raises."""
+    from repro.core import faults
+
+    def inject(spec: str):
+        return faults.install(faults.FaultPlan.parse(spec))
+
+    yield inject
+    faults.uninstall()

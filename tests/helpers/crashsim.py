@@ -1,0 +1,225 @@
+"""Power-cut replay: re-materialize every crash prefix of a commit.
+
+The model is the standard crash-consistency simulation:
+
+1. **Record.**  Snapshot the checkpoint directory, run one full
+   ``manager.save()`` under ``faults.record()``, and keep the op log —
+   every write, fsync, rename, truncate, and directory fsync the commit
+   performed, in completion order (background writeback jobs append at
+   completion time, so happens-before edges are preserved).
+
+2. **Replay.**  For a crash after the first ``k`` ops, the disk holds the
+   baseline plus some subset of those ``k`` ops' effects:
+
+   * *durable* ops must be present: a data write/truncate is durable once
+     a later ``fsync`` of the same path lands **within the prefix**; a
+     rename (and a file creation) once a later ``fsync_dir`` of its
+     parent directory does;
+   * *volatile* ops (not yet covered by any fsync at crash time) may
+     each independently be present, absent, or — for writes — torn to an
+     arbitrary byte prefix.  The choices come from a seeded RNG, so every
+     run is reproducible from ``(seed, prefix, variant)``.
+
+   This is deliberately adversarial-but-legal: no file system reorders a
+   write *past* the fsync that covered it, but everything un-fsynced is
+   fair game (ext2-style reordering).
+
+3. **Assert.**  The caller materializes each crash state into the real
+   directory and checks the paper-level invariant: ``restore_latest()``
+   yields either the previous checkpoint or a fully valid new one —
+   never garbage, never an error.  For the *complete* op log the new
+   checkpoint must be the result under **every** volatile choice: that is
+   precisely the assertion that catches a missing directory fsync (the
+   rename would be droppable, demoting a "committed" save).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import random
+from typing import Callable, Dict, Iterator, List, Optional, Tuple
+
+from repro.core import faults
+from repro.core.faults import Op
+
+#: ops that mutate the file map when replayed
+_MUTATORS = ("open", "pwrite", "pwritev", "truncate", "replace")
+
+
+def _ap(path: str) -> str:
+    return os.path.abspath(path)
+
+
+def snapshot_dir(directory: str) -> Dict[str, bytes]:
+    """Byte-for-byte snapshot of every regular file under ``directory``."""
+    files: Dict[str, bytes] = {}
+    for root, _dirs, names in os.walk(directory):
+        for n in names:
+            p = os.path.join(root, n)
+            with open(p, "rb") as f:
+                files[_ap(p)] = f.read()
+    return files
+
+
+def materialize(directory: str, files: Dict[str, bytes]) -> None:
+    """Make ``directory`` hold exactly ``files`` (a crash state)."""
+    want = set(files)
+    for root, _dirs, names in os.walk(directory):
+        for n in names:
+            p = _ap(os.path.join(root, n))
+            if p not in want:
+                os.remove(p)
+    for p, data in files.items():
+        os.makedirs(os.path.dirname(p), exist_ok=True)
+        with open(p, "wb") as f:
+            f.write(data)
+
+
+@dataclasses.dataclass
+class CommitRecording:
+    """One recorded commit: the states around it and the ops between."""
+    directory: str
+    baseline: Dict[str, bytes]      # disk before save()
+    final: Dict[str, bytes]         # disk after save() returned
+    ops: List[Op]
+
+    def __len__(self) -> int:
+        return len(self.ops)
+
+
+def record_commit(directory: str, commit: Callable[[], None]) \
+        -> CommitRecording:
+    """Run ``commit()`` under the op recorder; returns the recording."""
+    baseline = snapshot_dir(directory)
+    with faults.record() as log:
+        commit()
+    return CommitRecording(directory, baseline, snapshot_dir(directory),
+                           list(log))
+
+
+# -- durability classification ------------------------------------------------
+
+def _next_cover(rec: CommitRecording) -> List[Optional[int]]:
+    """For each op index, the index of the fsync that makes it durable
+    (None = never covered).  Data ops are covered by the next ``fsync``
+    of their path; renames and creations by the next ``fsync_dir`` of
+    their parent directory."""
+    fsyncs: Dict[str, List[int]] = {}
+    dirsyncs: Dict[str, List[int]] = {}
+    for j, op in enumerate(rec.ops):
+        if op.op == "fsync":
+            fsyncs.setdefault(_ap(op.path), []).append(j)
+        elif op.op == "fsync_dir":
+            dirsyncs.setdefault(_ap(op.path), []).append(j)
+
+    def nxt(table: Dict[str, List[int]], path: str, i: int) -> Optional[int]:
+        return next((j for j in table.get(path, ()) if j > i), None)
+
+    cover: List[Optional[int]] = []
+    for i, op in enumerate(rec.ops):
+        if op.op in ("pwrite", "pwritev", "truncate"):
+            cover.append(nxt(fsyncs, _ap(op.path), i))
+        elif op.op == "replace":
+            cover.append(nxt(dirsyncs, os.path.dirname(_ap(op.dst)), i))
+        elif op.op == "open":
+            # Creation/truncation-at-open: durable once the file's data is
+            # fsynced or its dirent is (whichever the protocol does first).
+            d = nxt(dirsyncs, os.path.dirname(_ap(op.path)), i)
+            f = nxt(fsyncs, _ap(op.path), i)
+            cands = [x for x in (d, f) if x is not None]
+            cover.append(min(cands) if cands else None)
+        else:
+            cover.append(None)  # fsync/fsync_dir mutate nothing
+    return cover
+
+
+def _apply(files: Dict[str, bytes], op: Op, data: bytes) -> None:
+    """Apply one op's effect to the in-memory file map."""
+    p = _ap(op.path)
+    if op.op == "open":
+        if op.n & getattr(os, "O_TRUNC", 0):
+            files[p] = b""
+        elif p not in files:
+            files[p] = b""
+    elif op.op in ("pwrite", "pwritev"):
+        cur = bytearray(files.get(p, b""))
+        end = op.offset + len(data)
+        if len(cur) < end:
+            cur.extend(b"\x00" * (end - len(cur)))
+        cur[op.offset:end] = data
+        files[p] = bytes(cur)
+    elif op.op == "truncate":
+        cur = bytearray(files.get(p, b""))
+        if len(cur) < op.n:
+            cur.extend(b"\x00" * (op.n - len(cur)))
+        files[p] = bytes(cur[:op.n])
+    elif op.op == "replace":
+        files[_ap(op.dst)] = files.pop(p, b"")
+
+
+def crash_state(rec: CommitRecording, prefix: int,
+                rng: Optional[random.Random] = None,
+                drop_all_volatile: bool = False) -> Dict[str, bytes]:
+    """The disk after a power cut following ``rec.ops[:prefix]``.
+
+    ``rng`` drives the volatile choices (None = keep everything, the
+    no-reordering best case); ``drop_all_volatile`` is the worst case —
+    nothing un-fsynced survives.
+    """
+    cover = _next_cover(rec)
+    files = dict(rec.baseline)
+    for i in range(prefix):
+        op = rec.ops[i]
+        if op.op not in _MUTATORS:
+            continue
+        durable = cover[i] is not None and cover[i] < prefix
+        data = op.data
+        if not durable:
+            if drop_all_volatile:
+                continue
+            if rng is not None:
+                roll = rng.random()
+                if roll < 1 / 3:
+                    continue                       # dropped entirely
+                if roll < 2 / 3 and data:          # torn mid-write
+                    data = data[:rng.randint(0, len(data) - 1)]
+        _apply(files, op, data)
+    return files
+
+
+def iter_crash_states(rec: CommitRecording, seed: int = 0,
+                      prefixes: Optional[List[int]] = None,
+                      variants: int = 2) \
+        -> Iterator[Tuple[int, str, Dict[str, bytes]]]:
+    """Yield ``(prefix, variant_name, files)`` crash states.
+
+    Per prefix: the all-durable best case, the drop-everything-volatile
+    worst case, and ``variants`` seeded random drop/tear mixes.  With
+    ``prefixes=None`` every prefix of the op log is replayed (the
+    exhaustive nightly matrix).
+    """
+    ks = prefixes if prefixes is not None else list(range(len(rec.ops) + 1))
+    for k in ks:
+        yield k, "keep-all", crash_state(rec, k)
+        yield k, "drop-volatile", crash_state(rec, k, drop_all_volatile=True)
+        for v in range(variants):
+            rng = random.Random((seed << 20) ^ (k << 4) ^ v)
+            yield k, f"mix-{v}", crash_state(rec, k, rng=rng)
+
+
+def sampled_prefixes(rec: CommitRecording, n: int, seed: int = 0) \
+        -> List[int]:
+    """A bounded, deterministic prefix sample for the quick CI lane:
+    always includes 0, the full log, and every op index adjacent to a
+    commit-critical op (rename, fsync, fsync_dir) — the interesting
+    boundaries — plus a seeded random fill up to ``n``."""
+    total = len(rec.ops)
+    must = {0, total}
+    for i, op in enumerate(rec.ops):
+        if op.op in ("replace", "fsync", "fsync_dir"):
+            must.update((i, i + 1))
+    must = {k for k in must if 0 <= k <= total}
+    rest = sorted(set(range(total + 1)) - must)
+    rng = random.Random(seed)
+    fill = rng.sample(rest, min(max(0, n - len(must)), len(rest)))
+    return sorted(must | set(fill))

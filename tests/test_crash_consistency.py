@@ -1,0 +1,168 @@
+"""Power-cut replay over recorded commits (the crash-consistency harness).
+
+Records the complete op log of one ``CheckpointManager.save()`` — every
+write, fsync, rename, and directory fsync — then re-materializes crash
+states (``tests/helpers/crashsim.py``) and asserts the two halves of the
+durability contract:
+
+1. **Any crash prefix, any legal reordering**: ``restore_latest()``
+   returns the *previous* checkpoint or the *new* one, bit-for-bit —
+   never an error, never wrong tensors.
+
+2. **The complete op log**: once ``save()`` returned, the new checkpoint
+   must be the restore result under EVERY volatile choice — dropping all
+   un-fsynced effects included.  This is the assertion that catches a
+   missing directory fsync: without it the commit rename itself is
+   volatile and a power cut "un-commits" a save that reported success.
+
+The quick (PR) lane replays a bounded, deterministic prefix sample that
+always includes the commit-critical boundaries; set
+``REPRO_CRASH_EXHAUSTIVE=1`` (the nightly lane) to replay every prefix.
+"""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "helpers"))
+import crashsim  # noqa: E402
+
+EXHAUSTIVE = os.environ.get("REPRO_CRASH_EXHAUSTIVE", "") == "1"
+#: quick-lane bounds (nightly replays everything)
+QUICK_PREFIXES = 14
+QUICK_VARIANTS = 1 if not EXHAUSTIVE else 2
+
+
+def _tree(seed: int):
+    rng = np.random.default_rng(seed)
+    return {
+        "w": rng.standard_normal((17, 5)).astype(np.float32),
+        "b": rng.standard_normal((5,)).astype(np.float32),
+        "step": np.array(seed, dtype=np.int64),
+    }
+
+
+def _assert_tree_equal(got, want, ctx: str) -> None:
+    assert set(got) == set(want), ctx
+    for k in want:
+        assert np.array_equal(np.asarray(got[k]), np.asarray(want[k])), \
+            f"{ctx}: leaf {k!r} differs"
+
+
+def _check_invariant(rec, directory, prev, new, mgr_kwargs) -> None:
+    """Replay crash states of ``rec`` and assert both contract halves."""
+    prev_step, prev_tree = prev
+    new_step, new_tree = new
+    prefixes = None if EXHAUSTIVE else \
+        crashsim.sampled_prefixes(rec, QUICK_PREFIXES, seed=7)
+    try:
+        for k, variant, files in crashsim.iter_crash_states(
+                rec, seed=11, prefixes=prefixes, variants=QUICK_VARIANTS):
+            crashsim.materialize(directory, files)
+            ctx = f"prefix {k}/{len(rec.ops)} variant {variant}"
+            mgr = CheckpointManager(directory, **mgr_kwargs)
+            out, step = mgr.restore_latest()
+            assert step in (prev_step, new_step), \
+                f"{ctx}: restored step {step}"
+            _assert_tree_equal(out, prev_tree if step == prev_step
+                               else new_tree, ctx)
+            if k == len(rec.ops):
+                # Contract half 2: a completed save() IS durable.
+                assert step == new_step, \
+                    f"{ctx}: complete commit rolled back to step {step}"
+    finally:
+        crashsim.materialize(directory, rec.final)
+
+
+@pytest.fixture(autouse=True)
+def _serial_write_path(monkeypatch):
+    """Serial writes keep op logs small and schedules reproducible; the
+    pipelined path's faults are covered by test_faults.py."""
+    monkeypatch.setenv("REPRO_SCDA_WRITE_PIPELINE", "0")
+    monkeypatch.delenv("REPRO_SCDA_FAULTS", raising=False)
+
+
+def test_powercut_replay_flat(tmp_path):
+    d = str(tmp_path / "ckpts")
+    mgr = CheckpointManager(d, keep=4, shards=0, delta=False)
+    mgr.save(1, _tree(1), blocking=True)
+    rec = crashsim.record_commit(
+        d, lambda: mgr.save(2, _tree(2), blocking=True))
+    assert len(rec.ops) > 0 and any(o.op == "fsync_dir" for o in rec.ops)
+    _check_invariant(rec, d, (1, _tree(1)), (2, _tree(2)),
+                     dict(keep=4, shards=0, delta=False))
+
+
+def test_powercut_replay_sharded(tmp_path):
+    d = str(tmp_path / "ckpts")
+    mgr = CheckpointManager(d, keep=4, shards=4, delta=False)
+    mgr.save(1, _tree(1), blocking=True)
+    rec = crashsim.record_commit(
+        d, lambda: mgr.save(2, _tree(2), blocking=True))
+    # shards rename before the manifest; both renames are dir-fsynced
+    renames = [o for o in rec.ops if o.op == "replace"]
+    assert len(renames) >= 5  # 4 shards + manifest
+    _check_invariant(rec, d, (1, _tree(1)), (2, _tree(2)),
+                     dict(keep=4, shards=4, delta=False))
+
+
+def test_powercut_replay_delta_depth2(tmp_path):
+    d = str(tmp_path / "ckpts")
+    kw = dict(keep=6, shards=0, delta=True, delta_chain=4)
+    mgr = CheckpointManager(d, **kw)
+    mgr.save(1, _tree(1), blocking=True)            # full base
+    mgr.save(2, _tree(2), blocking=True)            # delta depth 1
+    rec = crashsim.record_commit(
+        d, lambda: mgr.save(3, _tree(3), blocking=True))  # delta depth 2
+    _check_invariant(rec, d, (2, _tree(2)), (3, _tree(3)), kw)
+
+
+def test_powercut_replay_journal_append(tmp_path):
+    """Journal flush-on-commit appends (sync=False) AFTER the commit
+    point: a torn/dropped journal tail must never demote the committed
+    checkpoint (tolerant prefix indexing + sidecar staleness)."""
+    d = str(tmp_path / "ckpts")
+    kw = dict(keep=4, shards=0, delta=False)
+    mgr = CheckpointManager(d, **kw)
+    mgr.save(1, _tree(1), blocking=True)
+    j = mgr.journal()
+    for s in range(5):
+        j.log(s, {"loss": 1.0 / (s + 1)})
+
+    def commit():
+        mgr.save(2, _tree(2), blocking=True)
+
+    rec = crashsim.record_commit(d, commit)
+    # the journal append targets the committed file, after its rename
+    names = [o.op for o in rec.ops]
+    assert "replace" in names
+    _check_invariant(rec, d, (1, _tree(1)), (2, _tree(2)), kw)
+
+
+def test_stale_sidecar_never_trusted(tmp_path):
+    """A crash can durably commit a sidecar describing bytes that were
+    rolled back; every such stale index must be detected and ignored."""
+    d = str(tmp_path / "ckpts")
+    mgr = CheckpointManager(d, keep=4, shards=0, delta=False)
+    mgr.save(1, _tree(1), blocking=True)
+    rec = crashsim.record_commit(
+        d, lambda: mgr.save(2, _tree(2), blocking=True))
+    try:
+        # Worst case for the sidecar: keep every sidecar byte, drop the
+        # volatile remainder at each commit-critical boundary.
+        for k in crashsim.sampled_prefixes(rec, 6, seed=3):
+            files = crashsim.crash_state(rec, k, drop_all_volatile=True)
+            full = crashsim.crash_state(rec, len(rec.ops))
+            for p, data in full.items():
+                if p.endswith(".scdax"):
+                    files[p] = data  # sidecar "survived" regardless
+            crashsim.materialize(d, files)
+            out, step = CheckpointManager(d, keep=4, shards=0,
+                                          delta=False).restore_latest()
+            assert step in (1, 2)
+            _assert_tree_equal(out, _tree(step), f"prefix {k}")
+    finally:
+        crashsim.materialize(d, rec.final)

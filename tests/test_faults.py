@@ -1,0 +1,354 @@
+"""Deterministic fault injection across the I/O stack (repro.core.faults).
+
+Covers the plan grammar, the backend's transient-retry and taxonomy
+conversion, ENOSPC clean-abort semantics at the manager level, fault
+delivery from the background writeback/prefetch executors, the
+``SimulatedCrash`` power-cut semantics, and ``scdatool repair``.
+"""
+import errno
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import faults, fopen_write
+from repro.core.errors import ScdaError, ScdaErrorCode
+from repro.core.index import SIDECAR_SUFFIX, ScdaIndex
+from repro.core.io_backend import FileBackend, replace_durable
+from repro.tools import cli
+from repro.tools.fsck import fsck_file, repair_file, repair_set
+
+
+# -- plan grammar -------------------------------------------------------------
+
+class TestFaultPlan:
+    def test_parse_fields(self):
+        plan = faults.FaultPlan.parse(
+            "pwrite:errno=ENOSPC:nth=3:count=2:path=tmp;"
+            "pwritev:torn=1;*:crash:nth=40;preadv:short=100")
+        r = plan.rules[0]
+        assert (r.op, r.kind, r.errno_, r.nth, r.count, r.path) == \
+            ("pwrite", "errno", errno.ENOSPC, 3, 2, "tmp")
+        assert plan.rules[1].kind == "torn" and plan.rules[1].n == 1
+        assert plan.rules[2].op == "*" and plan.rules[2].kind == "crash"
+        assert plan.rules[3].n == 100
+
+    def test_parse_numeric_errno(self):
+        plan = faults.FaultPlan.parse("fsync:errno=5")
+        assert plan.rules[0].errno_ == 5
+
+    @pytest.mark.parametrize("bad", [
+        "frobnicate:crash",            # unknown op
+        "pwrite:nth=2",                # no action
+        "pwrite:errno=ENOTANERRNO",    # unknown errno name
+        "pwrite:crash:wat=1",          # unknown field
+    ])
+    def test_parse_rejects(self, bad):
+        with pytest.raises(ValueError):
+            faults.FaultPlan.parse(bad)
+
+    def test_nth_count_scheduling(self):
+        inj = faults.FaultInjector("fsync:errno=EIO:nth=2:count=2")
+        fired = [inj.decide("fsync", "f") is not None for _ in range(5)]
+        assert fired == [False, True, True, False, False]
+
+    def test_path_filter(self):
+        inj = faults.FaultInjector("pwrite:errno=EIO:path=.tmp:count=-1")
+        assert inj.decide("pwrite", "a.scda") is None
+        assert inj.decide("pwrite", "a.scda.tmp") is not None
+
+    def test_bernoulli_deterministic(self):
+        spec = "pwrite:errno=EIO:p=0.5:seed=9"
+        i1, i2 = faults.FaultInjector(spec), faults.FaultInjector(spec)
+        s1 = [i1.decide("pwrite", "f") is not None for _ in range(32)]
+        s2 = [i2.decide("pwrite", "f") is not None for _ in range(32)]
+        assert s1 == s2          # same seed, same schedule
+        assert any(s1) and not all(s1)
+
+
+# -- backend hardening --------------------------------------------------------
+
+class TestBackendFaults:
+    def test_transient_retried(self, tmp_path, fault_injection):
+        inj = fault_injection("pwrite:errno=EINTR:nth=1:count=3;"
+                              "pwrite:errno=EAGAIN:nth=4:count=2")
+        p = str(tmp_path / "x.scda")
+        b = FileBackend(p, "w", create=True)
+        b.pwrite(0, b"payload")  # survives 5 injected transient errors
+        b.close(sync=True)
+        assert len(inj.injected) == 5
+        with open(p, "rb") as f:
+            assert f.read() == b"payload"
+
+    def test_hard_errno_is_taxonomy_error(self, tmp_path, fault_injection):
+        fault_injection("pwrite:errno=EIO:count=-1")
+        b = FileBackend(str(tmp_path / "x.scda"), "w", create=True)
+        with pytest.raises(ScdaError) as ei:
+            b.pwrite(128, b"data")
+        b.close()
+        assert ei.value.code == ScdaErrorCode.FS_WRITE
+        assert ei.value.offset == 128
+        assert "x.scda@128" in ei.value.detail
+
+    def test_retries_bounded(self, tmp_path, fault_injection, monkeypatch):
+        monkeypatch.setenv("REPRO_SCDA_RETRIES", "2")
+        fault_injection("pwrite:errno=EAGAIN:count=-1")
+        b = FileBackend(str(tmp_path / "x.scda"), "w", create=True)
+        with pytest.raises(ScdaError) as ei:
+            b.pwrite(0, b"data")
+        b.close()
+        assert "gave up after 2 transient retries" in ei.value.detail
+
+    def test_read_paths_retry_and_convert(self, tmp_path, fault_injection):
+        p = str(tmp_path / "x.scda")
+        with open(p, "wb") as f:
+            f.write(b"A" * 64)
+        fault_injection("pread:errno=EINTR:nth=1;"
+                        "pread:errno=EIO:nth=3")
+        b = FileBackend(p, "r", create=False, readahead=0)
+        assert b.pread(0, 8) == b"A" * 8    # EINTR retried
+        with pytest.raises(ScdaError) as ei:
+            b.pread(16, 8)                   # EIO converts
+        b.close()
+        assert ei.value.code == ScdaErrorCode.FS_READ
+        assert ei.value.offset == 16
+
+    def test_torn_pwritev_lands_prefix_then_crashes(self, tmp_path):
+        p = str(tmp_path / "x.scda")
+        b = faults.FaultBackend(p, "w", True, "pwritev:torn=1")
+        # fragments above the coalescing threshold stay distinct iovecs
+        frags = [b"A" * 16384, b"B" * 16384, b"C" * 16384]
+        with pytest.raises(faults.SimulatedCrash):
+            b.pwritev(0, frags)
+        os.close(b.fd)
+        b.fd = -1
+        with open(p, "rb") as f:
+            assert f.read() == frags[0]  # fragment 0 landed, cut at 1
+
+    def test_crash_is_not_caught_by_taxonomy(self, tmp_path,
+                                             fault_injection):
+        fault_injection("fsync:crash")
+        b = FileBackend(str(tmp_path / "x.scda"), "w", create=True)
+        b.pwrite(0, b"d")
+        with pytest.raises(faults.SimulatedCrash):
+            b.fsync()
+        os.close(b.fd)
+        b.fd = -1
+
+    def test_env_activation(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("REPRO_SCDA_FAULTS", "pwrite:errno=EIO:count=-1")
+        b = FileBackend(str(tmp_path / "x.scda"), "w", create=True)
+        with pytest.raises(ScdaError):
+            b.pwrite(0, b"d")
+        b.close()
+        monkeypatch.setenv("REPRO_SCDA_FAULTS", "")
+        b = FileBackend(str(tmp_path / "y.scda"), "w", create=True)
+        b.pwrite(0, b"d")  # plan cleared with the variable
+        b.close()
+
+    def test_malformed_env_spec_is_inert(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("REPRO_SCDA_FAULTS", "no-such-op:crash")
+        b = FileBackend(str(tmp_path / "x.scda"), "w", create=True)
+        b.pwrite(0, b"d")
+        b.close(sync=True)
+
+    def test_scoped_backend_does_not_leak(self, tmp_path):
+        plan = "pwrite:errno=EIO:count=-1"
+        bad = faults.FaultBackend(str(tmp_path / "bad.scda"), "w", True,
+                                  plan)
+        ok = FileBackend(str(tmp_path / "ok.scda"), "w", create=True)
+        with pytest.raises(ScdaError):
+            bad.pwrite(0, b"d")
+        ok.pwrite(0, b"d")  # unaffected: the plan is per-backend
+        bad.close()
+        ok.close()
+
+
+class TestExecutorFaults:
+    def test_writeback_fault_surfaces_with_offset(self, tmp_path):
+        b = faults.FaultBackend(str(tmp_path / "x.scda"), "w", True,
+                                "pwrite:errno=EIO:count=-1;"
+                                "pwritev:errno=EIO:count=-1")
+        b.submit_write_gather([(4096, b"Z" * 64)], window=1 << 20)
+        with pytest.raises(ScdaError) as ei:
+            b.drain_writes()
+        b.close()
+        assert ei.value.code == ScdaErrorCode.FS_WRITE
+        assert ei.value.offset is not None
+
+    def test_writeback_crash_stays_crash(self, tmp_path):
+        b = faults.FaultBackend(str(tmp_path / "x.scda"), "w", True,
+                                "pwrite:crash;pwritev:crash")
+        b.submit_write_gather([(0, b"Z" * 64)], window=1 << 20)
+        with pytest.raises(faults.SimulatedCrash):
+            b.drain_writes()
+        os.close(b.fd)
+        b.fd = -1
+
+    def test_prefetch_fault_surfaces_on_foreground_read(self, tmp_path):
+        p = str(tmp_path / "x.scda")
+        with open(p, "wb") as f:
+            f.write(b"A" * 8192)
+        b = faults.FaultBackend(p, "r", False, "pread:errno=EIO:count=-1")
+        b.prefetch([(0, 4096)], window=1 << 20)
+        with pytest.raises(ScdaError) as ei:
+            b.pread(0, 4096)  # the advisory prefetch failed; this raises
+        b.close()
+        assert ei.value.code == ScdaErrorCode.FS_READ
+
+
+# -- manager-level clean aborts ----------------------------------------------
+
+def _tree(seed: int):
+    rng = np.random.default_rng(seed)
+    return {"w": rng.standard_normal((33, 7)).astype(np.float32),
+            "s": np.array(seed, dtype=np.int64)}
+
+
+def _assert_no_tmp(directory: str) -> None:
+    leftovers = [n for n in os.listdir(directory) if ".tmp" in n]
+    assert leftovers == [], f"orphaned tmp files: {leftovers}"
+
+
+class TestManagerCleanAbort:
+    @pytest.mark.parametrize("shards", [0, 2])
+    def test_enospc_mid_save_aborts_clean(self, tmp_path, fault_injection,
+                                          shards):
+        d = str(tmp_path / "ckpts")
+        mgr = CheckpointManager(d, keep=3, shards=shards, delta=False)
+        mgr.save(1, _tree(1), blocking=True)
+        fault_injection("pwrite:errno=ENOSPC:path=.tmp:count=-1;"
+                        "pwritev:errno=ENOSPC:path=.tmp:count=-1")
+        with pytest.raises(ScdaError) as ei:
+            mgr.save(2, _tree(2), blocking=True)
+        assert ei.value.code == ScdaErrorCode.FS_WRITE
+        assert "NO SPACE LEFT ON DEVICE" in str(ei.value)
+        # clean abort: no partial checkpoint visible, no tmp orphans
+        _assert_no_tmp(d)
+        out, step = mgr.restore_latest()
+        assert step == 1
+        faults.uninstall()  # "space freed up"
+        mgr.save(2, _tree(2), blocking=True)  # the manager is reusable
+        out, step = mgr.restore_latest()
+        assert step == 2
+        assert np.array_equal(out["w"], _tree(2)["w"])
+        _assert_no_tmp(d)
+
+    def test_fault_during_refresh_sidecar_direct(self, tmp_path,
+                                                 fault_injection):
+        p = str(tmp_path / "a.scda")
+        with fopen_write(None, p, user_string=b"t") as f:
+            f.write_block(b"b", b"payload")
+        ScdaIndex.build(p).write_sidecar()
+        from repro.core import fopen_append
+        with fopen_append(None, p) as f:
+            f.write_block(b"b2", b"more")
+        fault_injection("replace:errno=EIO:path=" + SIDECAR_SUFFIX
+                        + ":count=-1")
+        with pytest.raises(ScdaError) as ei:
+            ScdaIndex.refresh_sidecar(p)
+        assert ei.value.code == ScdaErrorCode.FS_WRITE
+        faults.uninstall()
+        idx = ScdaIndex.refresh_sidecar(p)  # recovers once the fault clears
+        assert idx is not None and len(idx.entries) == 2
+        ScdaIndex.load_sidecar(p).verify(deep=True)
+
+    def test_sidecar_fault_never_blocks_commit(self, tmp_path,
+                                               fault_injection):
+        d = str(tmp_path / "ckpts")
+        mgr = CheckpointManager(d, keep=3, shards=0, delta=False)
+        fault_injection("replace:errno=EIO:path=" + SIDECAR_SUFFIX
+                        + ":count=-1")
+        mgr.save(1, _tree(1), blocking=True)  # sidecars are best-effort
+        out, step = mgr.restore_latest()
+        assert step == 1
+        _assert_no_tmp(d)
+
+
+# -- scdatool repair ----------------------------------------------------------
+
+def _torn_archive(tmp_path, name="a.scda", garbage=b"\x13" * 37,
+                  sidecar=True):
+    p = str(tmp_path / name)
+    with fopen_write(None, p, user_string=b"t") as f:
+        f.write_inline(b"i", b"x" * 32)
+        f.write_block(b"b", b"hello world payload")
+    if sidecar:
+        idx = ScdaIndex.build(p)
+        from repro.core.reader import fopen_read
+        with fopen_read(None, p) as r:
+            idx = idx.with_checksums(r)
+        idx.write_sidecar()
+    clean = os.path.getsize(p)
+    with open(p, "ab") as f:
+        f.write(garbage)
+    return p, clean
+
+
+class TestRepair:
+    def test_repair_salvages_valid_prefix(self, tmp_path):
+        p, clean = _torn_archive(tmp_path)
+        assert any(f.severity == "error" for f in fsck_file(p))
+        res = repair_file(p)
+        assert res.action == "repaired"
+        assert res.valid_bytes == clean and res.sections == 2
+        assert os.path.getsize(p) == clean
+        assert fsck_file(p) == []  # fsck-clean after the repair
+        # quarantined bytes are the exact damaged tail, by offset
+        assert res.quarantine == f"{p}.quarantine-{clean}"
+        with open(res.quarantine, "rb") as f:
+            assert f.read() == b"\x13" * 37
+        # sidecar rebuilt, checksums preserved
+        idx = ScdaIndex.load_sidecar(p)
+        idx.verify(deep=True)
+        assert idx.has_checksums()
+
+    def test_repair_clean_and_dry_run(self, tmp_path):
+        p, clean = _torn_archive(tmp_path)
+        dry = repair_file(p, dry_run=True)
+        assert dry.action == "would-repair"
+        assert os.path.getsize(p) == clean + 37  # untouched
+        repair_file(p)
+        again = repair_file(p)
+        assert again.action == "clean" and again.sections == 2
+
+    def test_repair_unrecoverable_header(self, tmp_path):
+        p = str(tmp_path / "junk.scda")
+        with open(p, "wb") as f:
+            f.write(b"not an scda file at all")
+        res = repair_file(p)
+        assert res.action == "unrecoverable"
+
+    def test_repair_set_reports_per_shard(self, tmp_path):
+        d = str(tmp_path / "ckpts")
+        mgr = CheckpointManager(d, keep=2, shards=3, delta=False)
+        mgr.save(1, _tree(1), blocking=True)
+        manifest = mgr.path_for(1)
+        from repro.checkpoint.sharding import shard_file
+        victim = shard_file(manifest, 1, 3)
+        assert os.path.exists(victim)
+        with open(victim, "ab") as f:
+            f.write(b"\xde\xad\xbe\xef" * 9)
+        results = repair_set(manifest)
+        by_path = {r.path: r for r in results}
+        assert by_path[manifest].action == "clean"
+        assert by_path[victim].action == "repaired"
+        others = [r for r in results
+                  if r.path not in (manifest, victim)]
+        assert others and all(r.action == "clean" for r in others)
+        # the set restores after repair
+        out, step = CheckpointManager(d, keep=2, shards=3,
+                                      delta=False).restore_latest()
+        assert step == 1 and np.array_equal(out["w"], _tree(1)["w"])
+
+    def test_cli_repair(self, tmp_path, capsys):
+        p, clean = _torn_archive(tmp_path)
+        assert cli.main(["repair", "--dry-run", p]) == 1
+        assert os.path.getsize(p) == clean + 37
+        assert cli.main(["repair", p]) == 0
+        out = capsys.readouterr().out
+        assert "repaired" in out and f"quarantine-{clean}" in out
+        assert cli.main(["fsck", p]) == 0
+        assert cli.main(["verify", p]) == 0
+        assert cli.main(["repair", p]) == 0  # idempotent: now clean
