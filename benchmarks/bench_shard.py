@@ -85,4 +85,34 @@ def run(quick=False):
                             f"{restore_t[tag] / restore_t['flat']:.2f}x")
             rows.append((f"shard.restore_{tag}",
                          restore_t[tag] * 1e6, derived))
+    # Erasure coding: parity save overhead (XOR / RS8 passes over the
+    # shard streams) and the degraded-restore penalty (reconstructing a
+    # lost shard's byte ranges from survivors + parity on the fly).
+    with tempfile.TemporaryDirectory() as d:
+        for m in (1, 2):
+            path = os.path.join(d, f"par{m}.scda")
+            t = _best_of(
+                lambda p=path: pytree_io.save(p, tree, step=1, shards=4,
+                                              parity=m), reps)
+            rows.append((f"shard.save_n4_parity{m}", t * 1e6,
+                         f"{total_mb / t:.0f}MB/s "
+                         f"cost={t / save_t['n4']:.2f}x"))
+        from repro.checkpoint import sharding
+        path = os.path.join(d, "par1.scda")
+        t = _best_of(lambda: pytree_io.restore(path), reps)
+        rows.append(("shard.restore_n4_parity1", t * 1e6,
+                     f"{total_mb / t:.0f}MB/s"))
+        doc = sharding.read_sharded_manifest(path)
+        lost = os.path.join(d, doc["shards"][0]["file"])
+        lost_bytes = open(lost, "rb").read()
+
+        def degraded():
+            os.path.exists(lost) and os.remove(lost)
+            return pytree_io.restore(path)
+        t = _best_of(degraded, reps)
+        rows.append(("shard.restore_n4_degraded1", t * 1e6,
+                     f"{total_mb / t:.0f}MB/s "
+                     f"cost={t / restore_t['n4']:.2f}x vs healthy n4"))
+        with open(lost, "wb") as f:
+            f.write(lost_bytes)
     return rows

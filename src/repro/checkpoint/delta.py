@@ -302,6 +302,32 @@ class ChainResolver:
         b = self.bases[sid - 1]
         path = os.path.join(self.base_dir, b["file"])
         try:
+            r = self._open_base(pytree_io, b, path)
+        except ScdaError as e:
+            # A lost/corrupt base that is a shard of a parity-protected
+            # set reconstructs transparently (degraded chain read).
+            r = None
+            if e.code == ScdaErrorCode.FS_OPEN or e.group == 1:
+                from repro.checkpoint import redundancy as _red
+                r = _red.degraded_base_reader(self.base_dir, b["file"])
+            if r is None:
+                raise
+            try:
+                bdoc = pytree_io._read_header_sections(r)
+                got = mf.content_id(bdoc)
+                if got != b.get("id"):
+                    raise ScdaError(
+                        ScdaErrorCode.CORRUPT_CHECKSUM,
+                        f"delta base {b['file']}: reconstructed content "
+                        f"id {got} != recorded {b.get('id')}", offset=0)
+            except BaseException:
+                r.close()
+                raise
+        self._readers[sid] = r
+        return r
+
+    def _open_base(self, pytree_io, b: Dict[str, Any], path: str):
+        try:
             r = fopen_read(None, path)
         except ScdaError as e:
             raise ScdaError(
@@ -320,7 +346,6 @@ class ChainResolver:
         except BaseException:
             r.close()
             raise
-        self._readers[sid] = r
         return r
 
     def section(self, sid: int, user: bytes) -> _SrcSection:

@@ -40,14 +40,24 @@ import numpy as np
 
 from repro.checkpoint import delta as _delta
 from repro.checkpoint import pytree_io
+from repro.checkpoint import redundancy as _red
 from repro.checkpoint import sharding as _sharding
 from repro.checkpoint import manifest as _mf
 from repro.core import ScdaError
 from repro.core.comm import Communicator, SerialComm
+from repro.core.errors import ScdaErrorCode
 from repro.core.index import SIDECAR_SUFFIX, ScdaIndex
 from repro.core.io_backend import replace_durable
 
 _CKPT_RE = re.compile(r"^step_(\d{10})\.scda$")
+
+#: Advisory writer lock: O_EXCL-created in the checkpoint directory so
+#: two managers on one directory refuse instead of interleaving commits.
+LOCK_NAME = ".scda-lock"
+
+#: A foreign-host lock older than this is presumed dead (we cannot
+#: signal-probe across hosts); same-host locks are probed by pid.
+LOCK_TTL_SECONDS = 3600.0
 
 
 def _ckpt_name(step: int) -> str:
@@ -76,7 +86,8 @@ class CheckpointManager:
                  index_sidecar: bool = True,
                  delta: Optional[bool] = None,
                  delta_chain: Optional[int] = None,
-                 shards: Optional[int] = None) -> None:
+                 shards: Optional[int] = None,
+                 parity: Optional[int] = None) -> None:
         self.directory = directory
         self.keep = max(1, keep)
         self.compressed = compressed
@@ -88,6 +99,14 @@ class CheckpointManager:
         # classic single-file saves).  See repro.checkpoint.sharding.
         self.shards = (_sharding.shards_default()
                        if shards is None else max(0, int(shards)))
+        # Erasure coding: m parity shards per set (None defers to
+        # REPRO_SCDA_PARITY).  Parity without sharding has nothing to
+        # code over, so it collapses to 0 for flat saves.
+        self.parity = (_red.parity_default()
+                       if parity is None else max(0, int(parity)))
+        if not self.shards:
+            self.parity = 0
+        _red.check_geometry(self.shards, self.parity)
         # Incremental (delta) saves: None defers to REPRO_SCDA_DELTA; the
         # chain depth cap (REPRO_SCDA_DELTA_CHAIN) forces a periodic full
         # save so restore fan-in stays bounded and retention can
@@ -101,9 +120,101 @@ class CheckpointManager:
         self._error: Optional[BaseException] = None
         self._journal = None  # lazy ScdaJournal (see journal())
         self._crash_before_commit = False  # test hook: simulated node death
+        self._lock_path = os.path.join(directory, LOCK_NAME)
+        self._lock_owned = False
         if self.comm.rank == 0:
             os.makedirs(directory, exist_ok=True)
+            self._acquire_lock()
         self.comm.barrier()
+
+    def __enter__(self) -> "CheckpointManager":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
+
+    def close(self) -> None:
+        """Join any in-flight save and release the writer lock."""
+        try:
+            self.wait()
+        finally:
+            if self._lock_owned and self.comm.rank == 0:
+                try:
+                    os.remove(self._lock_path)
+                except OSError:
+                    pass
+                self._lock_owned = False
+
+    # -- advisory writer lock ------------------------------------------------
+    def _acquire_lock(self) -> None:
+        """O_EXCL lockfile (pid/host/timestamp) in the checkpoint dir.
+
+        A live holder refuses loudly; a stale holder (dead pid on this
+        host, or a foreign-host lock past LOCK_TTL_SECONDS) is taken
+        over with a loud warning.  A lock held by THIS process is
+        silently shared — managers and tooling routinely reopen the
+        same directory in-process, and the advisory target is two
+        *jobs*, not two objects.
+        """
+        import json
+        import socket
+        import sys
+        import time
+        me = {"pid": os.getpid(), "host": socket.gethostname(),
+              "time": time.time()}
+        for _ in range(16):  # bounded takeover races
+            try:
+                fd = os.open(self._lock_path,
+                             os.O_WRONLY | os.O_CREAT | os.O_EXCL, 0o644)
+            except FileExistsError:
+                pass
+            else:
+                with os.fdopen(fd, "w") as f:
+                    f.write(json.dumps(me))
+                self._lock_owned = True
+                return
+            try:
+                with open(self._lock_path, "r") as f:
+                    cur = json.loads(f.read() or "{}")
+            except (OSError, ValueError):
+                cur = {}
+            if not isinstance(cur, dict):
+                cur = {}
+            if cur.get("host") == me["host"] \
+                    and cur.get("pid") == me["pid"]:
+                return  # same process — shared advisory lock
+            stale = False
+            if not cur:
+                stale = True  # unreadable/empty lock: crashed mid-write
+            elif cur.get("host") == me["host"] \
+                    and isinstance(cur.get("pid"), int):
+                try:
+                    os.kill(cur["pid"], 0)
+                except OSError:
+                    stale = True  # holder process is gone
+            else:
+                try:
+                    age = time.time() - float(cur.get("time", 0))
+                except (TypeError, ValueError):
+                    age = LOCK_TTL_SECONDS + 1
+                stale = age > LOCK_TTL_SECONDS
+            if not stale:
+                raise ScdaError(
+                    ScdaErrorCode.FS_OPEN,
+                    f"checkpoint directory {self.directory!r} is locked "
+                    f"by pid {cur.get('pid')} on {cur.get('host')!r} "
+                    f"(since {cur.get('time')}); remove "
+                    f"{self._lock_path!r} if that writer is gone")
+            print(f"repro: TAKING OVER stale checkpoint lock "
+                  f"{self._lock_path!r} (holder pid {cur.get('pid')} on "
+                  f"{cur.get('host')!r} presumed dead)", file=sys.stderr)
+            try:
+                os.remove(self._lock_path)
+            except OSError:
+                pass  # lost a takeover race; retry the O_EXCL create
+        raise ScdaError(
+            ScdaErrorCode.FS_OPEN,
+            f"could not acquire checkpoint lock {self._lock_path!r}")
 
     # -- inventory -----------------------------------------------------------
     def all_steps(self) -> List[int]:
@@ -235,7 +346,8 @@ class CheckpointManager:
                     step=step, compressed=self.compressed,
                     chunk_bytes=self.chunk_bytes, aux_extra=aux_extra,
                     record_hashes=use_delta or self.delta,
-                    delta_base=base, tmp_suffix=".tmp")
+                    delta_base=base, parity=self.parity,
+                    tmp_suffix=".tmp")
             else:
                 doc = pytree_io.save(tmp, host_tree, comm=self.comm,
                                      step=step,
@@ -250,7 +362,8 @@ class CheckpointManager:
             # — the atomic-rename invariant already keeps it invisible)
             # and surface the original error unchanged.
             if self.comm.rank == 0:
-                stale = (_sharding.set_paths(final, self.shards, ".tmp")
+                stale = (_sharding.set_paths(final, self.shards, ".tmp",
+                                             parity=self.parity)
                          if self.shards else [tmp])
                 for p in stale:
                     try:
@@ -265,7 +378,11 @@ class CheckpointManager:
             if self.shards:
                 _sharding.commit_sharded(final, doc, ".tmp")
                 committed = [os.path.join(self.directory, s["file"])
-                             for s in doc["shards"]] + [final]
+                             for s in doc["shards"]]
+                committed += [os.path.join(self.directory, p["file"])
+                              for p in (doc.get("parity") or {})
+                              .get("files", [])]
+                committed.append(final)
             else:
                 # Atomic commit: rename + parent-dir fsync.  Without the
                 # directory fsync a power cut can roll the rename back and
@@ -296,8 +413,11 @@ class CheckpointManager:
         self.comm.barrier()
 
     def _shard_files(self, name: str) -> List[str]:
-        """Shard file names of checkpoint ``name`` (empty for flat
-        archives or anything unreadable)."""
+        """Shard + parity file names of checkpoint ``name`` (empty for
+        flat archives or anything unreadable).  Parity rides along so
+        retention treats the whole erasure-coded set as one atomic
+        unit — a dropped checkpoint takes its parity with it, a kept
+        one keeps its parity restorable."""
         try:
             doc = pytree_io.read_manifest(
                 os.path.join(self.directory, name))
@@ -306,7 +426,10 @@ class CheckpointManager:
         if doc.get("format") != _mf.SHARDED_FORMAT:
             return []
         return [s.get("file") for s in doc.get("shards", [])
-                if s.get("file")]
+                if s.get("file")] \
+            + [p.get("file")
+               for p in (doc.get("parity") or {}).get("files", [])
+               if p.get("file")]
 
     def _referenced_files(self, kept_steps: List[int]) -> set:
         """Transitive closure of delta-base files the kept checkpoints
@@ -368,6 +491,8 @@ class CheckpointManager:
                      or (n.endswith(".scda" + SIDECAR_SUFFIX)
                          and n[:-len(SIDECAR_SUFFIX)] not in keep_names)
                      or (_sharding.is_shard_name(n) is not None
+                         and n not in keep_names)
+                     or (_red.is_parity_name(n) is not None
                          and n not in keep_names))
             if stale:
                 try:

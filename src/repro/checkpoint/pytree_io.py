@@ -33,6 +33,7 @@ File layout:
 """
 from __future__ import annotations
 
+import os
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -64,6 +65,41 @@ def _effective_write_window(write_window: Optional[int]) -> int:
     if write_window is None:
         return write_pipeline_window()
     return max(0, int(write_window))
+
+
+#: ``REPRO_SCDA_VERIFY_RESTORE=1``: CRC-check every restored archive
+#: against its checksummed sidecar (as if ``restore(..., verify=True)``).
+VERIFY_RESTORE_ENV = "REPRO_SCDA_VERIFY_RESTORE"
+
+
+def _effective_verify(verify: Optional[bool]) -> bool:
+    """Resolve verify-on-restore: explicit argument wins, else the
+    ``REPRO_SCDA_VERIFY_RESTORE`` environment knob."""
+    if verify is not None:
+        return bool(verify)
+    return os.environ.get(VERIFY_RESTORE_ENV, "0") not in ("", "0")
+
+
+def _verify_archive(path: str) -> None:
+    """Verify every section payload of ``path`` against its checksummed
+    ``.scdax`` sidecar — the ``restore(..., verify=True)`` pass.
+
+    Requires a fresh, fully checksummed sidecar (``scdatool index
+    --checksums``); a missing/stale one raises ARG_SEQUENCE rather than
+    silently skipping, and a CRC mismatch raises CORRUPT_CHECKSUM with
+    the failing section's exact payload byte offset
+    (``ScdaError.offset``).  Runs on its own reader so the caller's
+    cursor and adopted index are untouched.
+    """
+    try:
+        idx = ScdaIndex.load_sidecar(path)
+    except (ScdaError, OSError) as e:
+        raise ScdaError(
+            ScdaErrorCode.ARG_SEQUENCE,
+            f"{path}: restore(verify=True) needs a fresh checksummed "
+            f"sidecar — run scdatool index --checksums ({e})") from e
+    with fopen_read(None, path) as vr:
+        idx.check_checksums(vr)
 
 
 # --------------------------------------------------------------------------
@@ -148,7 +184,8 @@ def save(path: str, tree, *, comm: Optional[Communicator] = None,
          write_window: Optional[int] = None,
          record_hashes: bool = False,
          delta_base: Optional[Tuple[Dict[str, Any], str]] = None,
-         shards: Optional[int] = None) \
+         shards: Optional[int] = None,
+         parity: Optional[int] = None) \
         -> Dict[str, Any]:
     """Write ``tree`` to ``path`` as a serial-equivalent scda checkpoint.
 
@@ -180,17 +217,27 @@ def save(path: str, tree, *, comm: Optional[Communicator] = None,
     :mod:`repro.checkpoint.sharding`); ``None`` defers to the
     ``REPRO_SCDA_SHARDS`` knob, 0 writes the classic single file.  A
     sharded save returns the sharded manifest document instead.
+
+    ``parity`` adds that many erasure-code shards to a sharded save
+    (``None`` defers to ``REPRO_SCDA_PARITY``; ignored for flat saves —
+    there is no shard set to code over).  See
+    :mod:`repro.checkpoint.redundancy`.
     """
     comm = comm or SerialComm()
+    from repro.checkpoint import redundancy as _red
     from repro.checkpoint import sharding as _sharding
     n_shards = _sharding.shards_default() if shards is None else \
         max(0, int(shards))
+    n_parity = _red.parity_default() if parity is None else \
+        max(0, int(parity))
     if n_shards:
+        _red.check_geometry(n_shards, n_parity)
         return _sharding.save_sharded(
             path, tree, shards=n_shards, comm=comm, step=step,
             compressed=compressed, chunk_bytes=chunk_bytes,
             aux_extra=aux_extra, write_window=write_window,
-            record_hashes=record_hashes, delta_base=delta_base)
+            record_hashes=record_hashes, delta_base=delta_base,
+            parity=n_parity)
     named, _ = flatten_named(tree)
     leaves: List[mf.LeafSpec] = []
     arrays: List[Any] = []
@@ -412,7 +459,8 @@ def read_manifest(path: str, comm: Optional[Communicator] = None) \
 
 
 def restore(path: str, like=None, *, comm: Optional[Communicator] = None,
-            prefetch_bytes: Optional[int] = None):
+            prefetch_bytes: Optional[int] = None,
+            verify: Optional[bool] = None):
     """Restore a checkpoint.
 
     ``like``: an abstract pytree of ``jax.ShapeDtypeStruct`` (with optional
@@ -432,9 +480,19 @@ def restore(path: str, like=None, *, comm: Optional[Communicator] = None,
     and compressed chunks inflate on the codec pool while later preads
     are in flight.  ``prefetch_bytes=0`` restores serially (the byte
     oracle).  Returns ``(tree, step)``.
+
+    ``verify=True`` (or ``REPRO_SCDA_VERIFY_RESTORE=1``) CRC-checks
+    every section payload of each opened archive against its
+    checksummed ``.scdax`` sidecar before any tensor is returned —
+    mismatches raise CORRUPT_CHECKSUM with the exact failing byte
+    offset.  Delta-chain *bases* are not re-verified per restore (cover
+    them with ``scdatool verify --chain``).
     """
     comm = comm or SerialComm()
     pf = _effective_prefetch(prefetch_bytes)
+    vfy = _effective_verify(verify)
+    if vfy:
+        _verify_archive(path)
     with fopen_read(comm, path) as r:
         doc = _read_header_sections(r)
         if doc.get("format") != mf.SHARDED_FORMAT:
@@ -443,7 +501,8 @@ def restore(path: str, like=None, *, comm: Optional[Communicator] = None,
     # resolve the per-shard archives (deterministic collective opens).
     from repro.checkpoint import sharding as _sharding
     return _sharding.restore_sharded(path, doc, like, comm=comm,
-                                     prefetch_bytes=prefetch_bytes)
+                                     prefetch_bytes=prefetch_bytes,
+                                     verify=vfy)
 
 
 def _restore_from_reader(r: ScdaReader, doc: Dict[str, Any], like,
@@ -523,7 +582,8 @@ def _restore_from_reader(r: ScdaReader, doc: Dict[str, Any], like,
 
 def restore_leaf(path: str, name: str, like=None, *,
                  comm: Optional[Communicator] = None,
-                 prefetch_bytes: Optional[int] = None):
+                 prefetch_bytes: Optional[int] = None,
+                 verify: Optional[bool] = None):
     """Load ONE leaf from a checkpoint without touching the rest.
 
     The lazy-restore workload §1 motivates: seek straight to the leaf's
@@ -538,6 +598,9 @@ def restore_leaf(path: str, name: str, like=None, *,
     """
     comm = comm or SerialComm()
     pf = _effective_prefetch(prefetch_bytes)
+    vfy = _effective_verify(verify)
+    if vfy:
+        _verify_archive(path)
     with fopen_read(comm, path) as r:
         doc = _read_header_sections(r)
         if doc.get("format") == mf.SHARDED_FORMAT:
@@ -547,7 +610,8 @@ def restore_leaf(path: str, name: str, like=None, *,
     from repro.checkpoint import sharding as _sharding
     return _sharding.restore_leaf_sharded(path, sharded, name, like,
                                           comm=comm,
-                                          prefetch_bytes=prefetch_bytes)
+                                          prefetch_bytes=prefetch_bytes,
+                                          verify=vfy)
 
 
 def _restore_leaf_from_reader(r: ScdaReader, doc: Dict[str, Any],

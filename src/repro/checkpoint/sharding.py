@@ -141,6 +141,7 @@ def save_sharded(path: str, tree, *, shards: int,
                  write_window: Optional[int] = None,
                  record_hashes: bool = False,
                  delta_base: Optional[Tuple[Dict[str, Any], str]] = None,
+                 parity: int = 0,
                  tmp_suffix: str = "") -> Dict[str, Any]:
     """Write ``tree`` as ``shards`` independent scda archives plus a
     manifest file at ``path``.
@@ -210,6 +211,13 @@ def save_sharded(path: str, tree, *, shards: int,
         "shards": shard_recs,
         "leaves": placed,
     }
+    if parity > 0 and comm.rank == 0:
+        from repro.checkpoint import redundancy as _red
+        doc["parity"] = _red.write_parity_files(
+            path, shard_recs, parity, step=step, tmp_suffix=tmp_suffix,
+            sync=True)
+    if parity > 0 and comm.size > 1:
+        doc["parity"] = comm.bcast(doc.get("parity"), 0)
     # The manifest file: valid scda, tiny, written last (commit point
     # when tmp_suffix is empty — a crash mid-save leaves shards without
     # a manifest, which the retention sweep collects as orphans).
@@ -227,24 +235,32 @@ def save_sharded(path: str, tree, *, shards: int,
     return out
 
 
-def set_paths(path: str, shards: int, tmp_suffix: str = "") -> List[str]:
-    """Every file a ``save_sharded(path, shards=N, tmp_suffix=...)``
-    writes — shards first, manifest last (commit order)."""
+def set_paths(path: str, shards: int, tmp_suffix: str = "",
+              parity: int = 0) -> List[str]:
+    """Every file a ``save_sharded(path, shards=N, parity=m,
+    tmp_suffix=...)`` writes — shards, then parity, manifest last
+    (commit order)."""
+    from repro.checkpoint import redundancy as _red
     n = max(1, int(shards))
     return [shard_file(path, k, n) + tmp_suffix for k in range(n)] \
+        + _red.set_parity_paths(path, parity, tmp_suffix) \
         + [path + tmp_suffix]
 
 
 def commit_sharded(path: str, doc: Dict[str, Any],
                    tmp_suffix: str) -> None:
-    """Atomically rename a sharded tmp set into place: shards first,
-    manifest last — the manifest rename is the commit point, and until
-    it lands no reader can resolve the half-renamed set."""
+    """Atomically rename a sharded tmp set into place: shards (and
+    parity) first, manifest last — the manifest rename is the commit
+    point, and until it lands no reader can resolve the half-renamed
+    set."""
     n = len(doc["shards"])
     d = os.path.dirname(os.path.abspath(path))
     for k in range(n):
         sfile = shard_file(path, k, n)
         replace_file(sfile + tmp_suffix, sfile)
+    for rec in (doc.get("parity") or {}).get("files", []):
+        pfile = os.path.join(d, rec["file"])
+        replace_file(pfile + tmp_suffix, pfile)
     # Shard renames must be durable BEFORE the manifest rename: the
     # manifest is the commit point, so once it lands every shard entry
     # it names has to survive the same power cut.
@@ -366,6 +382,13 @@ def verify_set(path: str) -> List[str]:
             _check_shard_doc(srec, sdoc)
         except (ScdaError, OSError, ValueError) as e:
             problems.append(f"shard #{k} {name!r}: {e}")
+    if doc.get("parity"):
+        from repro.checkpoint import redundancy as _red
+        for j, rec in enumerate(doc["parity"].get("files", [])):
+            name = rec.get("file", "")
+            for p in _red.verify_parity_file(
+                    os.path.join(base, name), rec):
+                problems.append(f"parity #{j} {name!r}: {p}")
     return problems
 
 
@@ -391,39 +414,83 @@ def base_usable_any(doc: Dict[str, Any]) -> bool:
 # Restoring
 # --------------------------------------------------------------------------
 
-def _restore_from_shard(spath: str, srec: Dict[str, Any], wanted,
-                        comm: Optional[Communicator],
-                        pf: int) -> Dict[str, Any]:
+def _restore_from_open_shard(r, srec: Dict[str, Any], wanted,
+                             pf: int, adopt: bool = True) \
+        -> Dict[str, Any]:
     """Restore ``wanted`` — ``(name, shard_leaf_index, target)`` tuples —
-    from one shard archive, content-id-verified against the manifest."""
+    from one OPEN shard reader, content-id-verified against the
+    manifest.  ``adopt=False`` skips sidecar adoption (degraded mode:
+    the on-disk sidecar describes whatever replaced the lost file, not
+    the reconstructed bytes)."""
     from repro.checkpoint import pytree_io as pio
-    with _open_shard(spath, srec, comm) as r:
-        sdoc = pio._read_header_sections(r)
-        _check_shard_doc(srec, sdoc)
-        tuples = []
-        for name, j, target in wanted:
-            if j >= len(sdoc["leaves"]) \
-                    or sdoc["leaves"][j]["name"] != name:
-                raise ScdaError(
-                    ScdaErrorCode.CORRUPT_ENCODING,
-                    f"shard {srec.get('file')!r}: manifest places leaf "
-                    f"{name!r} at index {j}, the shard disagrees")
-            tuples.append((name, j, sdoc["leaves"][j], target))
+    sdoc = pio._read_header_sections(r)
+    _check_shard_doc(srec, sdoc)
+    tuples = []
+    for name, j, target in wanted:
+        if j >= len(sdoc["leaves"]) \
+                or sdoc["leaves"][j]["name"] != name:
+            raise ScdaError(
+                ScdaErrorCode.CORRUPT_ENCODING,
+                f"shard {srec.get('file')!r}: manifest places leaf "
+                f"{name!r} at index {j}, the shard disagrees")
+        tuples.append((name, j, sdoc["leaves"][j], target))
+    if adopt:
         pio._adopt_sidecar(r)
-        if sdoc.get("delta"):
-            from repro.checkpoint import delta as _delta
-            return _delta.restore_chained(r, sdoc, tuples, pf)
-        if pf > 0:
-            return pio._restore_pipelined(r, tuples, pf)
-        values: Dict[str, Any] = {}
-        for name, j, spec_, target in tuples:
-            hdr = r.open_section(mf.leaf_user_string(j))
-            pio._check_leaf_header(hdr, spec_)
-            values[name] = (pio._read_leaf_full(r, hdr, spec_)
-                            if target is None else
-                            pio._read_leaf_to_target(r, hdr, spec_,
-                                                     target))
-        return values
+    if sdoc.get("delta"):
+        from repro.checkpoint import delta as _delta
+        return _delta.restore_chained(r, sdoc, tuples, pf)
+    if pf > 0:
+        return pio._restore_pipelined(r, tuples, pf)
+    values: Dict[str, Any] = {}
+    for name, j, spec_, target in tuples:
+        hdr = r.open_section(mf.leaf_user_string(j))
+        pio._check_leaf_header(hdr, spec_)
+        values[name] = (pio._read_leaf_full(r, hdr, spec_)
+                        if target is None else
+                        pio._read_leaf_to_target(r, hdr, spec_,
+                                                 target))
+    return values
+
+
+def _degraded_eligible(e: ScdaError) -> bool:
+    """Failures the erasure code can route around: a missing file, or
+    corruption of the shard's bytes (rewritten file, torn tail, chunk
+    CRC / decode failure).  Usage errors (group 3) never degrade."""
+    return e.code == ScdaErrorCode.FS_OPEN or e.group == 1
+
+
+def _restore_from_shard(spath: str, srec: Dict[str, Any], wanted,
+                        comm: Optional[Communicator], pf: int,
+                        set_ctx: Optional[Tuple[str, Dict[str, Any]]]
+                        = None, verify: bool = False) -> Dict[str, Any]:
+    """Restore ``wanted`` from one shard archive; when the shard is
+    lost or corrupt and the set carries parity (``set_ctx`` =
+    ``(manifest_path, doc)``), fall back transparently to a degraded
+    read over the surviving shards + parity.  ``verify`` CRC-checks the
+    shard against its checksummed sidecar first (skipped on the
+    degraded path: the on-disk sidecar describes the lost file, while
+    the reconstructed bytes are re-proven by the content-id pin)."""
+    try:
+        if verify:
+            from repro.checkpoint import pytree_io as pio
+            pio._verify_archive(spath)
+        with _open_shard(spath, srec, comm) as r:
+            return _restore_from_open_shard(r, srec, wanted, pf)
+    except ScdaError as e:
+        if set_ctx is None or not _degraded_eligible(e) \
+                or not set_ctx[1].get("parity"):
+            raise
+        from repro.checkpoint import redundancy as _red
+        mpath, doc = set_ctx
+        r = _red.degraded_reader(mpath, doc, srec["file"], comm=comm)
+        try:
+            # pf=0: the serial oracle path — reconstruction already
+            # batches survivor reads per range, background prefetch on
+            # top would only reorder them.
+            return _restore_from_open_shard(r, srec, wanted, 0,
+                                            adopt=False)
+        finally:
+            r.close()
 
 
 def _by_shard(entries) -> Dict[int, List[Tuple[str, int, Any]]]:
@@ -441,7 +508,8 @@ def _by_shard(entries) -> Dict[int, List[Tuple[str, int, Any]]]:
 
 def restore_sharded(path: str, doc: Dict[str, Any], like=None, *,
                     comm: Optional[Communicator] = None,
-                    prefetch_bytes: Optional[int] = None):
+                    prefetch_bytes: Optional[int] = None,
+                    verify: bool = False):
     """Restore a sharded checkpoint (the ``pytree_io.restore``
     delegation target).  Semantics mirror the flat restore exactly —
     ``like=None`` rebuilds a nested numpy dict, a ``like`` tree restores
@@ -462,7 +530,8 @@ def restore_sharded(path: str, doc: Dict[str, Any], like=None, *,
             srec = _shard_rec(doc, k)
             out.update(_restore_from_shard(
                 os.path.join(base, srec.get("file", "")), srec,
-                groups[k], comm, pf))
+                groups[k], comm, pf, set_ctx=(path, doc),
+                verify=verify))
         for name, value in aux.items():
             out[name] = value
         return pio._unflatten_names(out), step
@@ -482,7 +551,7 @@ def restore_sharded(path: str, doc: Dict[str, Any], like=None, *,
         srec = _shard_rec(doc, k)
         values.update(_restore_from_shard(
             os.path.join(base, srec.get("file", "")), srec,
-            groups[k], comm, pf))
+            groups[k], comm, pf, set_ctx=(path, doc), verify=verify))
     for name in targets:
         if name in aux:
             values[name] = aux[name]
@@ -493,7 +562,8 @@ def restore_sharded(path: str, doc: Dict[str, Any], like=None, *,
 def restore_leaf_sharded(path: str, doc: Dict[str, Any], name: str,
                          like=None, *,
                          comm: Optional[Communicator] = None,
-                         prefetch_bytes: Optional[int] = None):
+                         prefetch_bytes: Optional[int] = None,
+                         verify: bool = False):
     """Load ONE leaf of a sharded checkpoint: resolve its shard from the
     manifest, open that shard only (the lazy-restore workload, now also
     lazy across *files*)."""
@@ -506,7 +576,8 @@ def restore_leaf_sharded(path: str, doc: Dict[str, Any], name: str,
         srec = _shard_rec(doc, int(entry["shard"]))
         return _restore_from_shard(
             os.path.join(os.path.dirname(path), srec.get("file", "")),
-            srec, [(name, int(entry["index"]), like)], comm, pf)[name]
+            srec, [(name, int(entry["index"]), like)], comm, pf,
+            set_ctx=(path, doc), verify=verify)[name]
     if name in doc.get("aux", {}):
         return doc["aux"][name]
     raise ScdaError(ScdaErrorCode.ARG_SEQUENCE,
@@ -531,7 +602,7 @@ def restore_flat(path: str, doc: Optional[Dict[str, Any]] = None, *,
         srec = _shard_rec(doc, k)
         values.update(_restore_from_shard(
             os.path.join(base, srec.get("file", "")), srec,
-            groups[k], None, pf))
+            groups[k], None, pf, set_ctx=(path, doc)))
     return values, doc.get("step")
 
 
@@ -567,8 +638,19 @@ def summarize(path: str) -> Dict[str, Any]:
             "leaves": srec.get("leaves"),
             "present": os.path.exists(os.path.join(base, name)),
         })
-    return {"format": mf.SHARDED_FORMAT,
-            "version": doc.get("version", mf.SHARDED_VERSION),
-            "step": doc.get("step"), "shards": shards,
-            "leaves": len(doc.get("leaves", [])),
-            "aux": len(doc.get("aux", {}))}
+    out = {"format": mf.SHARDED_FORMAT,
+           "version": doc.get("version", mf.SHARDED_VERSION),
+           "step": doc.get("step"), "shards": shards,
+           "leaves": len(doc.get("leaves", [])),
+           "aux": len(doc.get("aux", {}))}
+    prec = doc.get("parity")
+    if prec:
+        out["parity"] = [{
+            "file": rec.get("file"),
+            "id": rec.get("id"),
+            "bytes": rec.get("bytes"),
+            "present": os.path.exists(
+                os.path.join(base, rec.get("file", ""))),
+        } for rec in prec.get("files", [])]
+        out["parity_code"] = prec.get("code")
+    return out

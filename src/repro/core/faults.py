@@ -43,6 +43,8 @@ Spec grammar (``REPRO_SCDA_FAULTS`` and everything above)::
            | zero                  zero-progress completion (reads: EOF)
            | torn=<F>              pwritev: land fragments [0,F), then crash
            | crash                 SimulatedCrash instead of the op
+           | missing               the call sees ENOENT (file "lost")
+           | unlink                really unlink the file, then proceed
            | nth=<N>               fire on the Nth matching call (default 1)
            | count=<K>             keep firing for K calls (-1 = forever)
            | p=<float> seed=<S>    seeded per-call Bernoulli instead of nth
@@ -91,7 +93,7 @@ class SimulatedCrash(BaseException):
             + (f": {detail}" if detail else ""))
 
 
-_ACTIONS = ("errno", "short", "zero", "torn", "crash")
+_ACTIONS = ("errno", "short", "zero", "torn", "crash", "missing", "unlink")
 
 
 @dataclasses.dataclass
@@ -159,7 +161,7 @@ class FaultPlan:
                     kw["kind"], kw["errno_"] = "errno", _parse_errno(val)
                 elif key in ("short", "torn"):
                     kw["kind"], kw["n"] = key, int(val)
-                elif key in ("zero", "crash"):
+                elif key in ("zero", "crash", "missing", "unlink"):
                     kw["kind"] = key
                 elif key == "nth":
                     kw["nth"] = max(1, int(val))
@@ -354,6 +356,18 @@ def _apply_simple(act: Optional[FaultRule], op: str, path: str) \
         raise OSError(act.errno_, os.strerror(act.errno_), path)
     if act.kind == "crash":
         raise SimulatedCrash(op, path)
+    if act.kind == "missing":
+        # Whole-file loss as this op sees it: ENOENT, file "gone".
+        raise OSError(_errno.ENOENT, os.strerror(_errno.ENOENT), path)
+    if act.kind == "unlink":
+        # Whole-file loss for real: the dirent goes away; already-open
+        # fds keep working on the orphaned inode (POSIX), later opens
+        # fail naturally — exactly what losing a shard file looks like.
+        try:
+            os.unlink(path)
+        except OSError:
+            pass
+        return None
     return act
 
 

@@ -417,6 +417,39 @@ class ScdaIndex:
                                 f"{got:#010x} != recorded {e.crc32:#010x}")
         return problems
 
+    def check_checksums(self, reader=None) -> None:
+        """Like :meth:`verify_checksums`, but raising — the
+        verify-on-restore path (``restore(..., verify=True)``).
+
+        The first mismatch raises CORRUPT_CHECKSUM carrying the exact
+        starting byte offset of the failing section's payload
+        (``ScdaError.offset``); a section without a recorded CRC raises
+        ARG_SEQUENCE pointing at ``scdatool index --checksums``, since a
+        "verified" restore that silently skipped sections would be a
+        lie.
+        """
+        from repro.core.reader import fopen_read
+        if reader is None:
+            with fopen_read(None, self.path) as r:
+                self.check_checksums(r)
+                return
+        reader.set_index(self)
+        for i, e in enumerate(self.entries):
+            name = e.user_string.decode("latin-1")
+            if e.crc32 is None:
+                raise ScdaError(
+                    ScdaErrorCode.ARG_SEQUENCE,
+                    f"{self.path}: section {i} ({name!r}) has no "
+                    f"recorded checksum — run scdatool index "
+                    f"--checksums first")
+            got = self._section_crc(reader, i)
+            if got != e.crc32:
+                raise ScdaError(
+                    ScdaErrorCode.CORRUPT_CHECKSUM,
+                    f"{self.path}: section {i} ({name!r}): payload "
+                    f"CRC32 {got:#010x} != recorded {e.crc32:#010x}",
+                    offset=e.data_start)
+
     # -- sidecar (.scdax — itself a valid scda file) --------------------------
     def sidecar_path(self, sidecar: Optional[str] = None) -> str:
         return sidecar or self.path + SIDECAR_SUFFIX

@@ -54,10 +54,15 @@ class _Pending:
 class ScdaReader:
     """File context for mode 'r' (§A.3); forward-only cursor."""
 
-    def __init__(self, comm: Optional[Communicator], path: str) -> None:
+    def __init__(self, comm: Optional[Communicator], path: str,
+                 backend: Optional[FileBackend] = None) -> None:
         self.comm = comm or SerialComm()
         self.path = path
-        self._backend = FileBackend(path, "r", create=False)
+        # ``backend`` lets a caller substitute a synthetic byte source —
+        # the degraded-mode reconstructor in repro.checkpoint.redundancy
+        # reads a lost shard's bytes out of surviving shards + parity.
+        self._backend = (backend if backend is not None
+                         else FileBackend(path, "r", create=False))
         self._closed = False
         self._pending: Optional[_Pending] = None
         self._index = None  # lazy ScdaIndex (see repro.core.index)

@@ -42,7 +42,7 @@ from repro.core import (ScdaError, ScdaErrorCode, ScdaIndex, fopen_append,
                         fopen_read, fopen_write)
 from repro.core.index import SIDECAR_SUFFIX
 from repro.tools.fsck import (fsck_file, is_sharded_manifest, repair_file,
-                              repair_set)
+                              repair_set, sibling_shards_exist)
 
 
 def _err(msg: str) -> None:
@@ -234,17 +234,22 @@ def cmd_repair(args) -> int:
     """
     status = 0
     for path in args.files:
-        if is_sharded_manifest(path):
+        # A mangled manifest may not self-identify as a set — shard
+        # files named for its stem are evidence enough to route it
+        # through set repair (which can rebuild the manifest itself).
+        if is_sharded_manifest(path) or sibling_shards_exist(path):
             results = repair_set(path, quarantine=not args.no_quarantine,
                                  dry_run=args.dry_run,
-                                 sidecar=not args.no_sidecar)
+                                 sidecar=not args.no_sidecar,
+                                 rebuild=args.rebuild)
         else:
             results = [repair_file(path, quarantine=not args.no_quarantine,
                                    dry_run=args.dry_run,
                                    sidecar=not args.no_sidecar)]
         for r in results:
             print(r)
-            if r.action in ("unrecoverable", "would-repair"):
+            if r.action in ("unrecoverable", "would-repair",
+                            "would-rebuild"):
                 status = 1
     return status
 
@@ -312,6 +317,20 @@ def cmd_verify(args) -> int:
                 print(f"{path}: verified (chunk digests match across "
                       f"the chain)")
         return status
+    for f in args.files:
+        # Erasure-code health of sharded sets, named per shard — the
+        # one-line answer to "is this checkpoint still restorable".
+        if is_sharded_manifest(f):
+            from repro.checkpoint import redundancy as red
+            try:
+                health, lost_data, lost_parity = red.set_health(f)
+            except (ScdaError, OSError, ValueError):
+                continue  # per-file loop below reports the breakage
+            if health != "clean":
+                lost = ", ".join(lost_data + lost_parity)
+                print(f"{f}: set health: {health} — lost {lost}")
+                if health == "unrecoverable":
+                    status = 1
     for path in [p for f in args.files for p in _expand_set(f)]:
         sidecar = path + SIDECAR_SUFFIX
         try:
@@ -748,6 +767,10 @@ def build_parser() -> argparse.ArgumentParser:
                         "in <file>.quarantine-<offset>")
     p.add_argument("--no-sidecar", action="store_true",
                    help="do not rebuild .scdax sidecars after the repair")
+    p.add_argument("--rebuild", action="store_true",
+                   help="re-materialize lost or rewritten shards of a "
+                        "parity-carrying set from the survivors "
+                        "(byte-identical, content-id verified)")
     p.set_defaults(fn=cmd_repair)
 
     p = sub.add_parser("index", help="write (or --check) .scdax sidecars")

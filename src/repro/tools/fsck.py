@@ -245,6 +245,31 @@ def _check_sharded_set(path: str, deep: bool, check_sidecar: bool,
         for f in fsck_file(spath, deep=deep, check_sidecar=check_sidecar):
             findings.append(Finding(f.severity, f.offset, f.section,
                                     f"shard #{k} {name!r}: {f.message}"))
+    for j, rec in enumerate((doc.get("parity") or {}).get("files", [])):
+        name = rec.get("file", "")
+        ppath = os.path.join(base, name)
+        if not os.path.exists(ppath):
+            continue  # missing: reported below via set health
+        for f in fsck_file(ppath, deep=deep, check_sidecar=check_sidecar):
+            findings.append(Finding(f.severity, f.offset, f.section,
+                                    f"parity #{j} {name!r}: {f.message}"))
+    # Erasure-code health: a finding names the verdict and the exact
+    # shard files it rests on, so "is this checkpoint still restorable"
+    # never requires reading the errors above back together.
+    from repro.checkpoint import redundancy as red
+    health, lost_data, lost_parity = red.set_health(path, doc)
+    lost = ", ".join(lost_data + lost_parity)
+    if health == "degraded-recoverable":
+        findings.append(Finding(
+            "warning", 0, None,
+            f"set health: degraded-recoverable — lost {lost}; every "
+            f"leaf still restores through parity (rebuild with "
+            f"`scdatool repair --rebuild`)"))
+    elif health == "unrecoverable":
+        findings.append(Finding(
+            "error", 0, None,
+            f"set health: unrecoverable — lost {lost} exceeds the "
+            f"parity budget"))
 
 
 def fsck_file(path: str, deep: bool = True,
@@ -329,6 +354,8 @@ class RepairResult:
             return s + f" ({self.sections} sections, {self.valid_bytes} bytes)"
         if self.action == "unrecoverable":
             return s + f": {self.detail}"
+        if self.action in ("rebuilt", "would-rebuild"):
+            return s + f": {self.detail} ({self.valid_bytes} bytes)"
         s += (f": kept {self.sections} sections / {self.valid_bytes} bytes, "
               f"dropped {self.dropped_bytes} damaged bytes at offset "
               f"{self.valid_bytes}")
@@ -413,37 +440,294 @@ def is_sharded_manifest(path: str) -> bool:
         return False
 
 
+def sibling_shards_exist(path: str) -> bool:
+    """True when files named like shards of a set at ``path`` exist —
+    how ``scdatool repair`` recognizes a sharded set whose manifest is
+    too damaged for :func:`is_sharded_manifest` to say so."""
+    from repro.checkpoint import sharding
+    d = os.path.dirname(os.path.abspath(path))
+    mname = os.path.basename(path)
+    stem = mname[:-len(".scda")] if mname.endswith(".scda") else mname
+    try:
+        siblings = os.listdir(d)
+    except OSError:
+        return False
+    for f in siblings:
+        m = sharding._SHARD_RE.match(f)
+        if m and m.group("stem") == stem:
+            return True
+    return False
+
+
 def repair_set(path: str, quarantine: bool = True, dry_run: bool = False,
-               sidecar: bool = True) -> List[RepairResult]:
+               sidecar: bool = True,
+               rebuild: bool = False) -> List[RepairResult]:
     """Repair a sharded checkpoint set, reporting per-shard damage.
 
     The manifest file is repaired first (its own tail can be torn), then
     every shard it names — a damaged shard is salvaged independently
-    instead of the whole set being refused.  Missing shards are reported
-    as unrecoverable entries; the manifest itself is never rewritten to
-    drop them (that would change what was committed).
+    instead of the whole set being refused.  When the manifest itself is
+    beyond tail-salvage, repair falls back to the surviving shard
+    archives: each is repaired on its own and a fresh manifest is
+    rebuilt from their headers (see :func:`_rebuild_set_manifest`).
+
+    With ``rebuild`` (``scdatool repair --rebuild``) a missing or
+    wrong-sized shard of a parity-carrying set is re-materialized in
+    place from the survivors — byte-identical to the lost original,
+    dir-fsynced, content-id-verified before the rename lands.  Without
+    parity (or past the parity budget) those stay unrecoverable
+    entries; the manifest is never rewritten to drop them (that would
+    change what was committed).
     """
-    from repro.checkpoint import sharding
+    from repro.checkpoint import redundancy as red, sharding
     results = [repair_file(path, quarantine=quarantine, dry_run=dry_run,
                            sidecar=sidecar)]
-    if results[0].action == "unrecoverable":
-        return results
-    try:
-        doc = sharding.read_sharded_manifest(path)
-    except (ScdaError, OSError, ValueError) as e:
-        results[0].detail = f"manifest unreadable after repair: {e}"
-        return results
+    doc = None
+    if results[0].action != "unrecoverable":
+        try:
+            doc = sharding.read_sharded_manifest(path)
+        except (ScdaError, OSError, ValueError) as e:
+            results[0].detail = f"manifest unreadable after repair: {e}"
+    if doc is None:
+        return _rebuild_set_manifest(path, quarantine=quarantine,
+                                     dry_run=dry_run, sidecar=sidecar,
+                                     results=results)
     base = os.path.dirname(os.path.abspath(path))
     for k, srec in enumerate(doc.get("shards", [])):
         name = srec.get("file", "")
         spath = os.path.join(base, name)
+        lost = not os.path.exists(spath) \
+            or os.path.getsize(spath) != srec.get("bytes")
+        if lost and rebuild:
+            try:
+                size = red.rebuild_shard(path, doc, name, dry_run=dry_run)
+                results.append(RepairResult(
+                    spath, "would-rebuild" if dry_run else "rebuilt",
+                    valid_bytes=size,
+                    detail=f"shard #{k} reconstructed from surviving "
+                           f"shards + parity"))
+            except (ScdaError, OSError) as e:
+                results.append(RepairResult(
+                    spath, "unrecoverable", detail=f"shard #{k}: {e}"))
+            continue
         if not os.path.exists(spath):
             results.append(RepairResult(
                 spath, "unrecoverable",
-                detail=f"shard #{k} named by the manifest is missing"))
+                detail=f"shard #{k} named by the manifest is missing"
+                       + ("" if not (doc.get("parity") or {})
+                          else " (recoverable: rerun with --rebuild)")))
             continue
         r = repair_file(spath, quarantine=quarantine, dry_run=dry_run,
                         sidecar=sidecar)
         r.detail = (f"shard #{k}" + (f": {r.detail}" if r.detail else ""))
         results.append(r)
+    for j, rec in enumerate((doc.get("parity") or {}).get("files", [])):
+        name = rec.get("file", "")
+        ppath = os.path.join(base, name)
+        problems = red.verify_parity_file(ppath, rec)
+        if not problems:
+            results.append(RepairResult(
+                ppath, "clean", valid_bytes=int(rec.get("bytes", 0)),
+                detail=f"parity #{j}"))
+            continue
+        if rebuild:
+            try:
+                size = red.rebuild_shard(path, doc, name, dry_run=dry_run)
+                results.append(RepairResult(
+                    ppath, "would-rebuild" if dry_run else "rebuilt",
+                    valid_bytes=size,
+                    detail=f"parity #{j} recomputed from the data "
+                           f"shards"))
+            except (ScdaError, OSError) as e:
+                results.append(RepairResult(
+                    ppath, "unrecoverable", detail=f"parity #{j}: {e}"))
+        else:
+            results.append(RepairResult(
+                ppath, "unrecoverable",
+                detail=f"parity #{j}: {problems[0]} (recoverable: rerun "
+                       f"with --rebuild)"))
+    return results
+
+
+def _rebuild_set_manifest(path: str, *, quarantine: bool, dry_run: bool,
+                          sidecar: bool,
+                          results: List[RepairResult]) -> List[RepairResult]:
+    """Fallback for a sharded set whose MANIFEST is damaged beyond tail
+    salvage: repair every sibling shard independently, then rebuild the
+    manifest from the surviving shard headers.
+
+    Everything the manifest records is re-derivable from the shards
+    themselves — content ids and byte sizes from the repaired files,
+    leaf placement from each shard's own manifest (ordered by
+    ``(shard, index)``; the original global manifest order is gone, which
+    is harmless: restore resolves leaves by name), the step from the
+    status inline, the parity record from surviving parity meta blocks.
+    Only set-level ``aux`` values are truly unrecoverable — they lived
+    nowhere but the manifest — and are reported loudly.  Data shards
+    missing from disk are reconstructed from parity first when the
+    surviving rows cover them.
+    """
+    from repro.checkpoint import manifest as mf, redundancy as red, sharding
+    d = os.path.dirname(os.path.abspath(path))
+    mname = os.path.basename(path)
+    stem = mname[:-len(".scda")] if mname.endswith(".scda") else mname
+    shard_names: dict = {}
+    n = None
+    for f in sorted(os.listdir(d)):
+        m = sharding._SHARD_RE.match(f)
+        if m and m.group("stem") == stem:
+            shard_names[int(m.group("k"))] = f
+            n = int(m.group("n"))
+    if n is None:
+        results[0].action = "unrecoverable"
+        results[0].detail += ("; no sibling shard files found — the "
+                              "manifest cannot be rebuilt")
+        return results
+    # Surviving parity rows, keyed by row index j (position == j in the
+    # manifest record, which is what the reconstructor checks against).
+    parity_meta: dict = {}
+    m_rows = 0
+    for f in sorted(os.listdir(d)):
+        g = red._PARITY_RE.match(f)
+        if not g or g.group("stem") != stem:
+            continue
+        m_rows = max(m_rows, int(g.group("m")))
+        try:
+            meta = red.read_parity_meta(os.path.join(d, f))
+        except (ScdaError, OSError, ValueError):
+            continue
+        if meta.get("n") == n:
+            parity_meta[int(meta["j"])] = (f, meta)
+    for k in sorted(shard_names):
+        r = repair_file(os.path.join(d, shard_names[k]),
+                        quarantine=quarantine, dry_run=dry_run,
+                        sidecar=sidecar)
+        r.detail = (f"shard #{k}" + (f": {r.detail}" if r.detail else ""))
+        results.append(r)
+    missing = [k for k in range(n) if k not in shard_names]
+    if missing and parity_meta:
+        # Parity meta records every shard's name and size — enough to
+        # reconstruct the lost byte streams before reading any headers.
+        meta = parity_meta[sorted(parity_meta)[0]][1]
+        sizes = meta.get("sizes", [])
+        names = meta.get("shards", [])
+        pseudo = {
+            "shards": [{"file": nm, "bytes": sz}
+                       for nm, sz in zip(names, sizes)],
+            "parity": {"code": meta.get("code"), "m": meta.get("m"),
+                       "length": meta.get("length"),
+                       "files": [
+                           {"file": parity_meta[j][0],
+                            "id": red.parity_id(parity_meta[j][1])}
+                           if j in parity_meta else
+                           {"file": red.parity_file(path, j,
+                                                    int(meta.get("m", 0))),
+                            "id": ""}
+                           for j in range(int(meta.get("m", 0)))]},
+        }
+        for k in missing:
+            name = names[k] if k < len(names) else \
+                os.path.basename(sharding.shard_file(path, k, n))
+            spath = os.path.join(d, name)
+            try:
+                recon = red.SetReconstructor(path, pseudo, lost=(name,))
+            except (ScdaError, OSError) as e:
+                results.append(RepairResult(
+                    spath, "unrecoverable", detail=f"shard #{k}: {e}"))
+                continue
+            try:
+                size = recon.shard_size(name)
+                if not dry_run:
+                    tmp = spath + ".rebuild"
+                    with open(tmp, "wb") as out:
+                        step_bytes = 4 << 20
+                        for off in range(0, size, step_bytes):
+                            out.write(recon.read(
+                                name, off, min(step_bytes, size - off)))
+                        out.flush()
+                        os.fsync(out.fileno())
+                    os.replace(tmp, spath)
+                    fsync_dir(d)
+                    shard_names[k] = name
+                results.append(RepairResult(
+                    spath, "would-rebuild" if dry_run else "rebuilt",
+                    valid_bytes=size,
+                    detail=f"shard #{k} reconstructed from surviving "
+                           f"shards + parity"))
+            except (ScdaError, OSError) as e:
+                results.append(RepairResult(
+                    spath, "unrecoverable", detail=f"shard #{k}: {e}"))
+            finally:
+                recon.close()
+        missing = [k for k in range(n) if k not in shard_names]
+    if missing:
+        results[0].action = "unrecoverable"
+        results[0].detail += (
+            f"; shard(s) {sorted(missing)} are gone and no parity row "
+            f"covers them — the manifest cannot be rebuilt")
+        return results
+    shard_recs, placed, step = [], [], None
+    for k in sorted(shard_names):
+        spath = os.path.join(d, shard_names[k])
+        try:
+            sdoc = _read_checkpoint_doc(spath)
+        except (ScdaError, OSError, ValueError) as e:
+            results[0].action = "unrecoverable"
+            results[0].detail += (f"; shard #{k} has no readable "
+                                  f"checkpoint manifest ({e})")
+            return results
+        if sdoc is None:
+            results[0].action = "unrecoverable"
+            results[0].detail += (f"; shard #{k} is not a checkpoint "
+                                  f"archive")
+            return results
+        if step is None:
+            step = sdoc.get("step")
+        shard_recs.append({"file": shard_names[k],
+                           "id": mf.content_id(sdoc),
+                           "bytes": int(os.path.getsize(spath)),
+                           "leaves": len(sdoc.get("leaves", []))})
+        for j, leaf in enumerate(sdoc.get("leaves", [])):
+            placed.append({"name": leaf["name"], "shard": k, "index": j,
+                           "nbytes": leaf["nbytes"]})
+    doc = {"format": mf.SHARDED_FORMAT, "version": mf.SHARDED_VERSION,
+           "step": step, "aux": {}, "shards": shard_recs,
+           "leaves": placed}
+    if parity_meta:
+        j0 = sorted(parity_meta)[0]
+        meta0 = parity_meta[j0][1]
+        prec = {"code": meta0.get("code"), "m": int(meta0.get("m", 0)),
+                "length": int(meta0.get("length", 0)), "files": []}
+        for j in range(prec["m"]):
+            if j in parity_meta:
+                f, meta = parity_meta[j]
+                prec["files"].append({
+                    "file": f, "id": red.parity_id(meta),
+                    "bytes": int(os.path.getsize(os.path.join(d, f)))})
+            else:
+                # The row is gone; record the expected name with its
+                # real id unknown — repair --rebuild recomputes it.
+                prec["files"].append({
+                    "file": os.path.basename(
+                        red.parity_file(path, j, prec["m"])),
+                    "id": "", "bytes": 0})
+        doc["parity"] = prec
+    res = RepairResult(path, "would-rebuild" if dry_run else "rebuilt",
+                       valid_bytes=0, sections=2,
+                       detail="manifest rebuilt from shard headers; "
+                              "set-level aux entries (if any) were only "
+                              "recorded in the manifest and are LOST")
+    if not dry_run:
+        from repro.core.writer import fopen_write
+        tmp = path + ".rebuild"
+        with fopen_write(None, tmp,
+                         user_string=mf.SHARDS_FILE_USER_STRING,
+                         sync=True) as f:
+            f.write_inline(mf.STATUS_USER_STRING, mf.status_inline(step))
+            f.write_block(mf.SHARDS_MANIFEST_USER_STRING,
+                          mf.build_sharded(doc), E=None)
+        os.replace(tmp, path)
+        fsync_dir(d)
+        res.valid_bytes = os.path.getsize(path)
+    results[0] = res
     return results

@@ -109,6 +109,22 @@ def test_powercut_replay_sharded(tmp_path):
                      dict(keep=4, shards=4, delta=False))
 
 
+def test_powercut_replay_sharded_parity(tmp_path):
+    """An erasure-coded set commits atomically: shards AND parity rename
+    before the manifest, so every crash prefix restores prev-or-new and
+    a completed save is durable with its parity rows intact."""
+    d = str(tmp_path / "ckpts")
+    kw = dict(keep=4, shards=2, parity=1, delta=False)
+    mgr = CheckpointManager(d, **kw)
+    mgr.save(1, _tree(1), blocking=True)
+    rec = crashsim.record_commit(
+        d, lambda: mgr.save(2, _tree(2), blocking=True))
+    renames = [o for o in rec.ops if o.op == "replace"]
+    assert len(renames) >= 4  # 2 shards + 1 parity + manifest
+    assert any("-p00of01" in (o.dst or "") for o in renames)
+    _check_invariant(rec, d, (1, _tree(1)), (2, _tree(2)), kw)
+
+
 def test_powercut_replay_delta_depth2(tmp_path):
     d = str(tmp_path / "ckpts")
     kw = dict(keep=6, shards=0, delta=True, delta_chain=4)

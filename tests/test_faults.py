@@ -38,6 +38,33 @@ class TestFaultPlan:
         plan = faults.FaultPlan.parse("fsync:errno=5")
         assert plan.rules[0].errno_ == 5
 
+    def test_parse_whole_file_loss_actions(self):
+        plan = faults.FaultPlan.parse(
+            "open:missing:path=-s00of04;open:unlink:count=-1")
+        assert plan.rules[0].kind == "missing"
+        assert plan.rules[0].path == "-s00of04"
+        assert plan.rules[1].kind == "unlink"
+
+    def test_missing_raises_enoent(self, tmp_path):
+        p = str(tmp_path / "f.bin")
+        with open(p, "wb") as f:
+            f.write(b"x")
+        with faults.inject("open:missing"):
+            with pytest.raises(OSError) as ei:
+                faults.os_open(p, os.O_RDONLY)
+        assert ei.value.errno == errno.ENOENT
+        assert os.path.exists(p)  # the file itself is untouched
+
+    def test_unlink_removes_file_for_real(self, tmp_path):
+        p = str(tmp_path / "f.bin")
+        with open(p, "wb") as f:
+            f.write(b"x")
+        with faults.inject("open:unlink"):
+            with pytest.raises(ScdaError) as ei:
+                FileBackend(p, "r", create=False)
+        assert ei.value.code == ScdaErrorCode.FS_OPEN
+        assert not os.path.exists(p)
+
     @pytest.mark.parametrize("bad", [
         "frobnicate:crash",            # unknown op
         "pwrite:nth=2",                # no action

@@ -1,0 +1,565 @@
+"""Erasure-coded shard sets: GF(2^8) algebra, parity archive validity,
+degraded-mode restores under every covered loss combination, byte-exact
+shard rebuilds, parity-aware fsck/repair, the advisory writer lock, and
+verify-on-restore."""
+import glob
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import pytree_io, redundancy as red, sharding
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import (ScdaError, ScdaErrorCode, ThreadComm, faults,
+                        fopen_read, run_ranks)
+from repro.tools.fsck import fsck_file, repair_set
+
+
+def _assert_tree_equal(got, want):
+    assert set(got) == set(want)
+    for k, v in want.items():
+        if isinstance(v, np.ndarray) or hasattr(v, "dtype"):
+            np.testing.assert_array_equal(np.asarray(got[k]),
+                                          np.asarray(v))
+        else:
+            assert got[k] == v
+
+
+def _fuzz_tree(rng, max_leaves=5):
+    dtypes = [np.float32, np.int32, np.uint8, np.float16]
+    tree = {}
+    for i in range(int(rng.integers(2, max_leaves + 1))):
+        dt = dtypes[int(rng.integers(0, len(dtypes)))]
+        shape = (int(rng.integers(1, 4000)),)
+        if np.issubdtype(dt, np.floating):
+            tree[f"leaf{i:02d}"] = rng.standard_normal(shape).astype(dt)
+        else:
+            tree[f"leaf{i:02d}"] = rng.integers(0, 100, shape).astype(dt)
+    tree["aux_note"] = "hello"
+    return tree
+
+
+def _read_doc(path):
+    return sharding.read_sharded_manifest(path)
+
+
+def _shard_paths(path, doc):
+    base = os.path.dirname(path)
+    return [os.path.join(base, s["file"]) for s in doc["shards"]]
+
+
+def _parity_paths(path, doc):
+    base = os.path.dirname(path)
+    return [os.path.join(base, r["file"])
+            for r in (doc.get("parity") or {}).get("files", [])]
+
+
+# ------------------------------------------------------------- GF(2^8) ----
+
+class TestGF:
+    def test_mul_matches_reference(self):
+        rng = np.random.default_rng(0)
+        for _ in range(200):
+            a = int(rng.integers(0, 256))
+            b = int(rng.integers(0, 256))
+            # schoolbook carry-less multiply mod 0x11d
+            acc, x, y = 0, a, b
+            while y:
+                if y & 1:
+                    acc ^= x
+                x <<= 1
+                if x & 0x100:
+                    x ^= 0x11D
+                y >>= 1
+            assert red.gf_mul(a, b) == acc
+
+    def test_inverse(self):
+        for a in range(1, 256):
+            assert red.gf_mul(a, red.gf_inv(a)) == 1
+
+    def test_mul_table_vectorized(self):
+        rng = np.random.default_rng(1)
+        data = rng.integers(0, 256, 512).astype(np.uint8)
+        for c in (0, 1, 2, 37, 255):
+            acc = np.zeros(512, dtype=np.uint8)
+            red._mul_into(acc, c, data.tobytes())
+            want = np.array([red.gf_mul(c, int(v)) for v in data],
+                            dtype=np.uint8)
+            np.testing.assert_array_equal(acc, want)
+
+    def test_rs_coefficients_distinct_rows(self):
+        # Any 2x2 minor of the rs8 coefficient matrix must be
+        # invertible for 2-erasure decoding to exist.
+        for x in range(8):
+            for y in range(x + 1, 8):
+                a, b = red._coeff(x, 0), red._coeff(y, 0)
+                c, d = red._coeff(x, 1), red._coeff(y, 1)
+                det = red.gf_mul(a, d) ^ red.gf_mul(b, c)
+                assert det != 0, (x, y)
+
+    def test_geometry_limits(self):
+        red.check_geometry(4, 0)
+        red.check_geometry(4, 2)
+        with pytest.raises(ScdaError):
+            red.check_geometry(4, 3)
+        with pytest.raises(ScdaError):
+            red.check_geometry(256, 2)
+
+
+# ------------------------------------------------- parity file format ----
+
+class TestParityFormat:
+    def test_parity_naming_round_trip(self):
+        p = red.parity_file("/x/ck.scda", 1, 2)
+        assert os.path.basename(p) == "ck-p01of02.scda"
+        assert red.is_parity_name("ck-p01of02.scda") == ("ck.scda", 1, 2)
+        assert red.is_parity_name("ck-s01of02.scda") is None
+        assert sharding.is_shard_name("ck-p01of02.scda") is None
+
+    def test_parity_files_are_valid_scda(self, tmp_path):
+        path = str(tmp_path / "ck.scda")
+        tree = _fuzz_tree(np.random.default_rng(2))
+        pytree_io.save(path, tree, step=1, shards=3, parity=2)
+        doc = _read_doc(path)
+        assert doc["parity"]["code"] == "rs8"
+        for pp in _parity_paths(path, doc):
+            findings = fsck_file(pp, deep=True)
+            assert not findings, findings
+            with fopen_read(None, pp) as r:
+                meta = red._parity_sections(r)[0]
+            assert meta["format"] == red.PARITY_FORMAT
+
+    def test_xor_parity_is_xor_of_streams(self, tmp_path):
+        path = str(tmp_path / "ck.scda")
+        pytree_io.save(path, _fuzz_tree(np.random.default_rng(3)),
+                       step=1, shards=2, parity=1)
+        doc = _read_doc(path)
+        shard_bytes = [open(p, "rb").read()
+                       for p in _shard_paths(path, doc)]
+        length = doc["parity"]["length"]
+        want = np.zeros(length, dtype=np.uint8)
+        for b in shard_bytes:
+            want[:len(b)] ^= np.frombuffer(b, dtype=np.uint8)
+        pp = _parity_paths(path, doc)[0]
+        with fopen_read(None, pp) as r:
+            meta, data_start, nbytes = red._parity_sections(r)
+            got = r._backend.pread(data_start, nbytes)
+        np.testing.assert_array_equal(
+            np.frombuffer(got, dtype=np.uint8), want)
+
+    def test_manifest_records_code_geometry_and_ids(self, tmp_path):
+        path = str(tmp_path / "ck.scda")
+        pytree_io.save(path, _fuzz_tree(np.random.default_rng(4)),
+                       step=1, shards=4, parity=2)
+        prec = _read_doc(path)["parity"]
+        assert prec["m"] == 2 and len(prec["files"]) == 2
+        for j, rec in enumerate(prec["files"]):
+            pp = str(tmp_path / rec["file"])
+            assert os.path.getsize(pp) == rec["bytes"]
+            meta = red.read_parity_meta(pp)
+            assert red.parity_id(meta) == rec["id"]
+            assert meta["j"] == j and meta["code"] == "rs8"
+
+
+# ------------------------------------- non-degraded byte identity ---------
+
+@pytest.mark.parametrize("P", [1, 2, 4, 8])
+@pytest.mark.parametrize("parity", [0, 1, 2])
+def test_parity_never_changes_data_shards_fuzzed(tmp_path, P, parity):
+    """Data shard files (and restores) at parity m are byte-identical to
+    the parity=0 save — parity only ADDS files, raw and compressed."""
+    rng = np.random.default_rng(100 + 10 * P + parity)
+    # Compressed saves need chunk-aligned partitions (serial comm only).
+    variants = (False, True) if P == 1 else (False,)
+    for trial, compressed in enumerate(variants):
+        tree = _fuzz_tree(rng)
+        os.makedirs(tmp_path / f"o{trial}")
+        os.makedirs(tmp_path / f"p{trial}")
+        oracle = str(tmp_path / f"o{trial}" / "ck.scda")
+        pytree_io.save(oracle, tree, step=trial, shards=2,
+                       compressed=compressed)
+        path = str(tmp_path / f"p{trial}" / "ck.scda")
+
+        def workload(comm):
+            pytree_io.save(path, tree, step=trial, comm=comm, shards=2,
+                           parity=parity, compressed=compressed)
+        run_ranks(ThreadComm.group(P), workload)
+        for k in range(2):
+            got = open(sharding.shard_file(path, k, 2), "rb").read()
+            want = open(sharding.shard_file(oracle, k, 2), "rb").read()
+            assert got == want, f"shard {k} differs (P={P} m={parity})"
+        out, step = pytree_io.restore(path)
+        assert step == trial
+        _assert_tree_equal(out, tree)
+
+
+# --------------------------------------------- degraded-mode restore ------
+
+@pytest.mark.parametrize("n", [2, 4, 8])
+def test_every_single_shard_loss_restores_xor(tmp_path, n):
+    rng = np.random.default_rng(200 + n)
+    tree = _fuzz_tree(rng)
+    path = str(tmp_path / "ck.scda")
+    pytree_io.save(path, tree, step=1, shards=n, parity=1)
+    doc = _read_doc(path)
+    originals = {p: open(p, "rb").read() for p in _shard_paths(path, doc)}
+    for lost in _shard_paths(path, doc):
+        os.remove(lost)
+        out, step = pytree_io.restore(path)
+        assert step == 1
+        _assert_tree_equal(out, tree)
+        with open(lost, "wb") as f:
+            f.write(originals[lost])
+
+
+@pytest.mark.parametrize("n", [2, 4, 8])
+def test_every_two_shard_loss_restores_rs8(tmp_path, n):
+    rng = np.random.default_rng(300 + n)
+    tree = _fuzz_tree(rng)
+    path = str(tmp_path / "ck.scda")
+    pytree_io.save(path, tree, step=2, shards=n, parity=2)
+    doc = _read_doc(path)
+    paths = _shard_paths(path, doc)
+    originals = {p: open(p, "rb").read() for p in paths}
+    combos = [(a,) for a in range(n)] \
+        + [(a, b) for a in range(n) for b in range(a + 1, n)]
+    for combo in combos:
+        for i in combo:
+            os.remove(paths[i])
+        out, step = pytree_io.restore(path)
+        assert step == 2, combo
+        _assert_tree_equal(out, tree)
+        for i in combo:
+            with open(paths[i], "wb") as f:
+                f.write(originals[paths[i]])
+
+
+def test_data_plus_parity_loss_within_budget(tmp_path):
+    """m=2 covers one data + one parity shard lost at once."""
+    tree = _fuzz_tree(np.random.default_rng(5))
+    path = str(tmp_path / "ck.scda")
+    pytree_io.save(path, tree, step=1, shards=3, parity=2)
+    doc = _read_doc(path)
+    os.remove(_shard_paths(path, doc)[0])
+    os.remove(_parity_paths(path, doc)[1])
+    out, _ = pytree_io.restore(path)
+    _assert_tree_equal(out, tree)
+
+
+def test_loss_beyond_budget_refused_loudly(tmp_path):
+    tree = _fuzz_tree(np.random.default_rng(6))
+    path = str(tmp_path / "ck.scda")
+    pytree_io.save(path, tree, step=1, shards=4, parity=1)
+    doc = _read_doc(path)
+    for p in _shard_paths(path, doc)[:2]:
+        os.remove(p)
+    with pytest.raises(ScdaError) as ei:
+        pytree_io.restore(path)
+    assert "unrecoverable" in str(ei.value)
+
+
+def test_rewritten_shard_triggers_degraded_read(tmp_path):
+    """A shard rewritten in place (content-id mismatch) reconstructs
+    through parity instead of refusing."""
+    tree = _fuzz_tree(np.random.default_rng(7))
+    path = str(tmp_path / "ck.scda")
+    pytree_io.save(path, tree, step=1, shards=2, parity=1)
+    doc = _read_doc(path)
+    victim = _shard_paths(path, doc)[0]
+    other = {"other": np.zeros(10, dtype=np.float32)}
+    pytree_io.save(victim, other, step=9)
+    out, _ = pytree_io.restore(path)
+    _assert_tree_equal(out, tree)
+
+
+def test_degraded_restore_leaf_and_like(tmp_path):
+    tree = {"a": np.arange(1000, dtype=np.float32),
+            "b": np.ones((5, 5), dtype=np.float64)}
+    path = str(tmp_path / "ck.scda")
+    doc = pytree_io.save(path, tree, step=1, shards=2, parity=1)
+    placement = {e["name"]: e["shard"] for e in doc["leaves"]}
+    lost_k = placement["a"]
+    os.remove(sharding.shard_file(path, lost_k, 2))
+    got = pytree_io.restore_leaf(path, "a")
+    np.testing.assert_array_equal(got, tree["a"])
+    like = {"a": np.zeros_like(tree["a"]), "b": np.zeros_like(tree["b"])}
+    out, _ = pytree_io.restore(path, like=like)
+    _assert_tree_equal(out, tree)
+
+
+def test_degraded_delta_chain_over_sharded_base(tmp_path):
+    """Losing a shard of the BASE set still resolves a delta restore."""
+    d = str(tmp_path / "ck")
+    mgr = CheckpointManager(d, keep=4, shards=2, parity=1, delta=True,
+                            delta_chain=3)
+    rng = np.random.default_rng(8)
+    t1 = {"w": rng.standard_normal(2048).astype(np.float32)}
+    t2 = {"w": t1["w"].copy()}
+    t2["w"][:4] += 1.0
+    mgr.save(1, t1, blocking=True)
+    mgr.save(2, t2, blocking=True)
+    base_shards = sorted(glob.glob(os.path.join(
+        d, "step_0000000001-s*.scda")))
+    os.remove(base_shards[0])
+    out, step = mgr.restore_latest()
+    assert step == 2
+    np.testing.assert_array_equal(out["w"], t2["w"])
+    mgr.close()
+
+
+def test_missing_and_unlink_fault_specs(tmp_path):
+    tree = {"a": np.arange(256, dtype=np.float32), "b": np.ones(300)}
+    path = str(tmp_path / "ck.scda")
+    pytree_io.save(path, tree, step=1, shards=2, parity=1)
+    with faults.inject("open:missing:path=-s00of02:count=-1") as inj:
+        out, _ = pytree_io.restore(path)
+    _assert_tree_equal(out, tree)
+    assert any(k == "missing" for _, _, k in inj.injected)
+
+    path2 = str(tmp_path / "ck2.scda")
+    pytree_io.save(path2, tree, step=1, shards=2, parity=1)
+    with faults.inject("open:unlink:path=ck2-s00of02:count=-1") as inj:
+        out, _ = pytree_io.restore(path2)
+    _assert_tree_equal(out, tree)
+    assert any(k == "unlink" for _, _, k in inj.injected)
+    assert not os.path.exists(str(tmp_path / "ck2-s00of02.scda"))
+
+
+# ------------------------------------------------------ rebuild / fsck ----
+
+def test_rebuild_shard_byte_identical(tmp_path):
+    tree = _fuzz_tree(np.random.default_rng(9))
+    path = str(tmp_path / "ck.scda")
+    pytree_io.save(path, tree, step=3, shards=4, parity=2)
+    doc = _read_doc(path)
+    paths = _shard_paths(path, doc)
+    originals = {p: open(p, "rb").read() for p in paths}
+    os.remove(paths[1])
+    os.remove(paths[3])
+    for p in (paths[1], paths[3]):
+        red.rebuild_shard(path, doc, os.path.basename(p))
+        assert open(p, "rb").read() == originals[p]
+    assert red.set_health(path)[0] == "clean"
+
+
+def test_rebuild_parity_shard_byte_identical(tmp_path):
+    tree = _fuzz_tree(np.random.default_rng(10))
+    path = str(tmp_path / "ck.scda")
+    pytree_io.save(path, tree, step=3, shards=2, parity=2)
+    doc = _read_doc(path)
+    pp = _parity_paths(path, doc)[1]
+    orig = open(pp, "rb").read()
+    os.remove(pp)
+    red.rebuild_shard(path, doc, os.path.basename(pp))
+    assert open(pp, "rb").read() == orig
+
+
+def test_set_health_classification(tmp_path):
+    tree = _fuzz_tree(np.random.default_rng(11))
+    path = str(tmp_path / "ck.scda")
+    pytree_io.save(path, tree, step=1, shards=3, parity=1)
+    doc = _read_doc(path)
+    assert red.set_health(path)[0] == "clean"
+    lost = _shard_paths(path, doc)[2]
+    data = open(lost, "rb").read()
+    os.remove(lost)
+    health, lost_data, _ = red.set_health(path)
+    assert health == "degraded-recoverable"
+    assert lost_data == [os.path.basename(lost)]
+    os.remove(_shard_paths(path, doc)[0])
+    assert red.set_health(path)[0] == "unrecoverable"
+    with open(lost, "wb") as f:
+        f.write(data)
+    assert red.set_health(path)[0] == "degraded-recoverable"
+
+
+def test_fsck_reports_set_health(tmp_path):
+    tree = _fuzz_tree(np.random.default_rng(12))
+    path = str(tmp_path / "ck.scda")
+    pytree_io.save(path, tree, step=1, shards=2, parity=1)
+    assert not fsck_file(path)
+    doc = _read_doc(path)
+    lost = _shard_paths(path, doc)[0]
+    os.remove(lost)
+    msgs = [f.message for f in fsck_file(path)]
+    health = [m for m in msgs if m.startswith("set health:")]
+    assert health and "degraded-recoverable" in health[0]
+    assert os.path.basename(lost) in health[0]
+
+
+def test_repair_rebuild_cli_path(tmp_path):
+    tree = _fuzz_tree(np.random.default_rng(13))
+    path = str(tmp_path / "ck.scda")
+    pytree_io.save(path, tree, step=1, shards=3, parity=1)
+    doc = _read_doc(path)
+    lost = _shard_paths(path, doc)[1]
+    orig = open(lost, "rb").read()
+    os.remove(lost)
+    results = repair_set(path, rebuild=True)
+    actions = {os.path.basename(r.path): r.action for r in results}
+    assert actions[os.path.basename(lost)] == "rebuilt"
+    assert open(lost, "rb").read() == orig
+    assert not fsck_file(path)
+
+
+def test_repair_set_rebuilds_damaged_manifest(tmp_path):
+    """Satellite: per-shard repair + manifest rebuild from surviving
+    shard headers when the manifest itself is mangled."""
+    tree = {"a": np.arange(2048, dtype=np.float32),
+            "b": np.ones((32, 32))}
+    path = str(tmp_path / "ck.scda")
+    pytree_io.save(path, tree, step=9, shards=3, parity=1)
+    with open(path, "r+b") as f:
+        f.write(b"\x00" * 128)
+    results = repair_set(path, rebuild=True)
+    assert results[0].action == "rebuilt"
+    out, step = pytree_io.restore(path)
+    assert step == 9
+    _assert_tree_equal(out, tree)
+
+
+def test_repair_set_manifest_gone_plus_shard_lost(tmp_path):
+    tree = {"a": np.arange(2048, dtype=np.float32),
+            "b": np.ones((32, 32))}
+    path = str(tmp_path / "ck.scda")
+    pytree_io.save(path, tree, step=9, shards=3, parity=1)
+    doc = _read_doc(path)
+    os.remove(path)
+    os.remove(_shard_paths(path, doc)[1])
+    # scdatool routes this through set repair via sibling shard names
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src")]
+        + env.get("PYTHONPATH", "").split(os.pathsep))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.tools.cli", "repair", "--rebuild",
+         path], capture_output=True, text=True, env=env)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    out, step = pytree_io.restore(path)
+    assert step == 9
+    _assert_tree_equal(out, tree)
+
+
+# --------------------------------------------------- manager / lockfile ---
+
+def test_manager_parity_knob_and_retention(tmp_path, monkeypatch):
+    d = str(tmp_path / "ck")
+    tree = {"a": np.arange(64, dtype=np.float32), "b": np.ones(500)}
+    mgr = CheckpointManager(d, keep=1, shards=2, parity=1)
+    mgr.save(1, tree, blocking=True)
+    mgr.save(2, tree, blocking=True)
+    names = set(os.listdir(d))
+    assert "step_0000000002-p00of01.scda" in names
+    assert "step_0000000001-p00of01.scda" not in names  # swept with set
+    mgr.close()
+    monkeypatch.setenv(red.PARITY_ENV, "2")
+    mgr2 = CheckpointManager(d, keep=1, shards=3)
+    assert mgr2.parity == 2
+    mgr2.close()
+
+
+def test_manager_degraded_restore_latest(tmp_path):
+    d = str(tmp_path / "ck")
+    tree = {"a": np.arange(512, dtype=np.float32), "b": np.ones(700)}
+    with CheckpointManager(d, keep=2, shards=2, parity=1) as mgr:
+        mgr.save(5, tree, blocking=True)
+        lost = glob.glob(os.path.join(d, "step_0000000005-s0*.scda"))[0]
+        os.remove(lost)
+        out, step = mgr.restore_latest()
+    assert step == 5
+    _assert_tree_equal(out, tree)
+
+
+def test_writer_lock_excludes_live_holder(tmp_path):
+    d = str(tmp_path / "ck")
+    mgr = CheckpointManager(d, keep=2, shards=0)
+    lock = os.path.join(d, ".scda-lock")
+    assert os.path.exists(lock)
+    # same pid shares silently (multiple managers in one process)
+    mgr2 = CheckpointManager(d, keep=2, shards=0)
+    # a live FOREIGN holder refuses
+    with open(lock, "w") as f:
+        json.dump({"pid": os.getpid() + 1, "host": "elsewhere",
+                   "time": __import__("time").time()}, f)
+    with pytest.raises(ScdaError) as ei:
+        CheckpointManager(d, keep=2, shards=0)
+    assert ei.value.code == ScdaErrorCode.FS_OPEN
+    os.remove(lock)
+    mgr.close()
+    mgr2.close()
+
+
+def test_writer_lock_stale_takeover(tmp_path, capsys):
+    d = str(tmp_path / "ck")
+    os.makedirs(d)
+    lock = os.path.join(d, ".scda-lock")
+    # same-host pid that is certainly dead
+    with open(lock, "w") as f:
+        json.dump({"pid": 2 ** 22 + 1,
+                   "host": __import__("socket").gethostname(),
+                   "time": 0.0}, f)
+    mgr = CheckpointManager(d, keep=2, shards=0)
+    err = capsys.readouterr().err
+    assert "TAKING OVER" in err
+    mgr.close()
+    assert not os.path.exists(lock)
+
+
+# --------------------------------------------------- verify-on-restore ----
+
+def test_verify_restore_needs_checksummed_sidecar(tmp_path):
+    path = str(tmp_path / "ck.scda")
+    pytree_io.save(path, {"a": np.arange(64, dtype=np.float32)}, step=1)
+    with pytest.raises(ScdaError) as ei:
+        pytree_io.restore(path, verify=True)
+    assert ei.value.code == ScdaErrorCode.ARG_SEQUENCE
+    assert "scdatool index --checksums" in str(ei.value)
+
+
+def test_verify_restore_catches_payload_corruption(tmp_path, monkeypatch):
+    path = str(tmp_path / "ck.scda")
+    tree = {"a": np.arange(512, dtype=np.float32)}
+    pytree_io.save(path, tree, step=1)
+    with fopen_read(None, path) as r:
+        r.index().with_checksums(r).write_sidecar()
+    out, _ = pytree_io.restore(path, verify=True)
+    _assert_tree_equal(out, tree)
+    off = os.path.getsize(path) - 200  # inside the tensor payload
+    with open(path, "r+b") as f:
+        f.seek(off)
+        b = f.read(1)
+        f.seek(off)
+        f.write(bytes([b[0] ^ 0xFF]))
+    with pytest.raises(ScdaError) as ei:
+        pytree_io.restore(path, verify=True)
+    assert ei.value.code == ScdaErrorCode.CORRUPT_CHECKSUM
+    assert ei.value.offset is not None
+    # the env knob takes the same path
+    monkeypatch.setenv(pytree_io.VERIFY_RESTORE_ENV, "1")
+    with pytest.raises(ScdaError):
+        pytree_io.restore(path)
+
+
+def test_verify_restore_covers_shards(tmp_path):
+    path = str(tmp_path / "ck.scda")
+    tree = {"a": np.arange(512, dtype=np.float32), "b": np.ones(700)}
+    pytree_io.save(path, tree, step=1, shards=2)
+    doc = _read_doc(path)
+    for p in [path] + _shard_paths(path, doc):
+        with fopen_read(None, p) as r:
+            r.index().with_checksums(r).write_sidecar()
+    out, _ = pytree_io.restore(path, verify=True)
+    _assert_tree_equal(out, tree)
+    victim = _shard_paths(path, doc)[0]
+    off = os.path.getsize(victim) - 64
+    with open(victim, "r+b") as f:
+        f.seek(off)
+        b = f.read(1)
+        f.seek(off)
+        f.write(bytes([b[0] ^ 0xFF]))
+    with pytest.raises(ScdaError) as ei:
+        pytree_io.restore(path, verify=True)
+    assert ei.value.code == ScdaErrorCode.CORRUPT_CHECKSUM
