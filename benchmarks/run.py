@@ -115,7 +115,16 @@ def main() -> None:
                     help="comma-separated benchmark prefixes to run")
     ap.add_argument("--json", default="", metavar="PATH",
                     help="also write the I/O trajectory (BENCH_io schema)")
+    ap.add_argument("--trace", default="", metavar="PATH",
+                    help="capture a Chrome trace of the whole run "
+                         "(REPRO_SCDA_TRACE equivalent); the per-stage "
+                         "breakdown also lands in the --json trajectory")
     args = ap.parse_args()
+
+    tc = None
+    if args.trace:
+        from repro.core import trace as _tr
+        tc = _tr.install(_tr.TraceCollector(path=args.trace))
 
     from benchmarks import (bench_append, bench_checkpoint,
                             bench_compression, bench_delta, bench_format,
@@ -148,10 +157,29 @@ def main() -> None:
             print(f"{bench},{us:.1f},{derived}")
             sys.stdout.flush()
 
+    trace_summary = None
+    if tc is not None:
+        from repro.core import trace as _tr
+        _tr.uninstall()
+        tc.export()
+        s = _tr.summarize_chrome(tc.chrome()["traceEvents"])
+        trace_summary = {
+            "wall_us": s["wall_us"],
+            "io_calls": s["io_calls"],
+            "io_bytes": s["io_bytes"],
+            "stage_us": {k: st["total_us"]
+                         for k, st in sorted(s["stages"].items())},
+        }
+        print(f"# wrote {args.trace}", file=sys.stderr)
+        for line in _tr.format_summary(s):
+            print(f"# {line}", file=sys.stderr)
+
     if args.json:
+        doc = _distill(rows, args.quick)
+        if trace_summary is not None:
+            doc["trace"] = trace_summary
         with open(args.json, "w") as fh:
-            json.dump(_distill(rows, args.quick), fh, indent=2,
-                      sort_keys=True)
+            json.dump(doc, fh, indent=2, sort_keys=True)
             fh.write("\n")
         print(f"# wrote {args.json}", file=sys.stderr)
 

@@ -44,6 +44,7 @@ from repro.checkpoint import redundancy as _red
 from repro.checkpoint import sharding as _sharding
 from repro.checkpoint import manifest as _mf
 from repro.core import ScdaError
+from repro.core import trace as _trace
 from repro.core.comm import Communicator, SerialComm
 from repro.core.errors import ScdaErrorCode
 from repro.core.index import SIDECAR_SUFFIX, ScdaIndex
@@ -158,7 +159,6 @@ class CheckpointManager:
         """
         import json
         import socket
-        import sys
         import time
         me = {"pid": os.getpid(), "host": socket.gethostname(),
               "time": time.time()}
@@ -205,9 +205,11 @@ class CheckpointManager:
                     f"by pid {cur.get('pid')} on {cur.get('host')!r} "
                     f"(since {cur.get('time')}); remove "
                     f"{self._lock_path!r} if that writer is gone")
-            print(f"repro: TAKING OVER stale checkpoint lock "
-                  f"{self._lock_path!r} (holder pid {cur.get('pid')} on "
-                  f"{cur.get('host')!r} presumed dead)", file=sys.stderr)
+            _trace.warn(
+                f"repro: TAKING OVER stale checkpoint lock "
+                f"{self._lock_path!r} (holder pid {cur.get('pid')} on "
+                f"{cur.get('host')!r} presumed dead)",
+                key=("lock-takeover", self._lock_path))
             try:
                 os.remove(self._lock_path)
             except OSError:
@@ -334,7 +336,9 @@ class CheckpointManager:
                           use_delta: bool = False) -> None:
         final = self.path_for(step)
         tmp = final + ".tmp"
-        base = self._delta_base(step) if use_delta else None
+        with _trace.span("plan", "ckpt", step=step, delta=use_delta,
+                         shards=self.shards, parity=self.parity):
+            base = self._delta_base(step) if use_delta else None
         try:
             if self.shards:
                 # Sharded save: every file (shards + manifest) is written
@@ -375,26 +379,36 @@ class CheckpointManager:
             raise RuntimeError("injected crash before commit")
         self.comm.barrier()
         if self.comm.rank == 0:
-            if self.shards:
-                _sharding.commit_sharded(final, doc, ".tmp")
-                committed = [os.path.join(self.directory, s["file"])
-                             for s in doc["shards"]]
-                committed += [os.path.join(self.directory, p["file"])
-                              for p in (doc.get("parity") or {})
-                              .get("files", [])]
-                committed.append(final)
-            else:
-                # Atomic commit: rename + parent-dir fsync.  Without the
-                # directory fsync a power cut can roll the rename back and
-                # lose the commit entirely.
-                replace_durable(tmp, final)
-                committed = [final]
-            if self.index_sidecar:
-                # The .scdax sidecars make restore_leaf / lazy restores
-                # seek without a scan.  Best-effort: the checkpoint is
-                # already committed, and readers fall back to a fresh
-                # header scan when a sidecar is missing or stale.
-                ScdaIndex.write_sidecars(committed)
+            with _trace.span("commit", "ckpt", path=final, step=step):
+                if self.shards:
+                    _sharding.commit_sharded(final, doc, ".tmp")
+                    committed = [os.path.join(self.directory, s["file"])
+                                 for s in doc["shards"]]
+                    committed += [os.path.join(self.directory, p["file"])
+                                  for p in (doc.get("parity") or {})
+                                  .get("files", [])]
+                    committed.append(final)
+                else:
+                    # Atomic commit: rename + parent-dir fsync.  Without
+                    # the directory fsync a power cut can roll the rename
+                    # back and lose the commit entirely.
+                    replace_durable(tmp, final)
+                    committed = [final]
+                if self.index_sidecar:
+                    # The .scdax sidecars make restore_leaf / lazy
+                    # restores seek without a scan.  Best-effort: the
+                    # checkpoint is already committed, and readers fall
+                    # back to a fresh header scan when a sidecar is
+                    # missing or stale.
+                    ScdaIndex.write_sidecars(committed)
+            c = _trace.collector()
+            if c is not None:
+                # Metrics sink: counter deltas since the last commit ride
+                # into the checkpoint's own journal, so the archive that
+                # holds the state also records the I/O it cost.
+                rec = c.commit_record()
+                if rec:
+                    self.journal().log(step, {"trace": rec})
             if self._journal is not None:
                 # Flush-on-commit: buffered telemetry follows the newest
                 # checkpoint into its file (and refreshes the sidecar it
@@ -406,7 +420,8 @@ class CheckpointManager:
                     self._journal.flush()
                 except (ScdaError, OSError):
                     pass
-            self._apply_retention()
+            with _trace.span("retention", "ckpt", keep=self.keep):
+                self._apply_retention()
         # Cache the exact doc a re-read of the fresh archive would parse —
         # the next delta save references it without touching the disk.
         self._last_doc = (doc, _ckpt_name(step))

@@ -41,6 +41,7 @@ import numpy as np
 
 from repro.checkpoint import layout, manifest as mf
 from repro.core import ScdaError, ScdaErrorCode, partition
+from repro.core import trace as _trace
 from repro.core.comm import Communicator, SerialComm
 from repro.core.index import ScdaIndex
 from repro.core.io_backend import prefetch_window, write_pipeline_window
@@ -98,8 +99,9 @@ def _verify_archive(path: str) -> None:
             ScdaErrorCode.ARG_SEQUENCE,
             f"{path}: restore(verify=True) needs a fresh checksummed "
             f"sidecar — run scdatool index --checksums ({e})") from e
-    with fopen_read(None, path) as vr:
-        idx.check_checksums(vr)
+    with _trace.span("verify", "ckpt", path=path):
+        with fopen_read(None, path) as vr:
+            idx.check_checksums(vr)
 
 
 # --------------------------------------------------------------------------
@@ -185,7 +187,8 @@ def save(path: str, tree, *, comm: Optional[Communicator] = None,
          record_hashes: bool = False,
          delta_base: Optional[Tuple[Dict[str, Any], str]] = None,
          shards: Optional[int] = None,
-         parity: Optional[int] = None) \
+         parity: Optional[int] = None,
+         trace: Optional[Any] = None) \
         -> Dict[str, Any]:
     """Write ``tree`` to ``path`` as a serial-equivalent scda checkpoint.
 
@@ -222,7 +225,22 @@ def save(path: str, tree, *, comm: Optional[Communicator] = None,
     (``None`` defers to ``REPRO_SCDA_PARITY``; ignored for flat saves —
     there is no shard set to code over).  See
     :mod:`repro.checkpoint.redundancy`.
+
+    ``trace`` activates telemetry for this one save: a
+    :class:`repro.core.trace.TraceCollector` (events/metrics accumulate
+    there) or a path string (a Chrome ``trace_event`` JSON is exported
+    on completion).  ``None`` leaves the process-wide
+    ``REPRO_SCDA_TRACE`` behavior in charge.  Purely observational —
+    traced saves are byte-identical to untraced ones.
     """
+    if trace is not None:
+        with _trace.scoped(trace):
+            return save(path, tree, comm=comm, step=step,
+                        compressed=compressed, chunk_bytes=chunk_bytes,
+                        aux_extra=aux_extra, write_window=write_window,
+                        record_hashes=record_hashes,
+                        delta_base=delta_base, shards=shards,
+                        parity=parity)
     comm = comm or SerialComm()
     from repro.checkpoint import redundancy as _red
     from repro.checkpoint import sharding as _sharding
@@ -230,31 +248,34 @@ def save(path: str, tree, *, comm: Optional[Communicator] = None,
         max(0, int(shards))
     n_parity = _red.parity_default() if parity is None else \
         max(0, int(parity))
-    if n_shards:
-        _red.check_geometry(n_shards, n_parity)
-        return _sharding.save_sharded(
-            path, tree, shards=n_shards, comm=comm, step=step,
-            compressed=compressed, chunk_bytes=chunk_bytes,
-            aux_extra=aux_extra, write_window=write_window,
-            record_hashes=record_hashes, delta_base=delta_base,
-            parity=n_parity)
-    named, _ = flatten_named(tree)
-    leaves: List[mf.LeafSpec] = []
-    arrays: List[Any] = []
-    aux: Dict[str, Any] = dict(aux_extra or {})
-    for name, value in named:
-        if _is_array(value):
-            leaves.append(mf.LeafSpec.make(
-                name, tuple(np.shape(value)), value.dtype,
-                compressed, chunk_bytes))
-            arrays.append(value)
-        else:
-            aux[name] = _encode_aux(value)
-    return _write_checkpoint(
-        path, comm=comm, step=step, leaves=leaves, arrays=arrays, aux=aux,
-        compressed=compressed, chunk_bytes=chunk_bytes,
-        write_window=write_window, record_hashes=record_hashes,
-        delta_base=delta_base)
+    with _trace.span("save", "ckpt", path=path, step=step,
+                     shards=n_shards, parity=n_parity,
+                     compressed=compressed):
+        if n_shards:
+            _red.check_geometry(n_shards, n_parity)
+            return _sharding.save_sharded(
+                path, tree, shards=n_shards, comm=comm, step=step,
+                compressed=compressed, chunk_bytes=chunk_bytes,
+                aux_extra=aux_extra, write_window=write_window,
+                record_hashes=record_hashes, delta_base=delta_base,
+                parity=n_parity)
+        named, _ = flatten_named(tree)
+        leaves: List[mf.LeafSpec] = []
+        arrays: List[Any] = []
+        aux: Dict[str, Any] = dict(aux_extra or {})
+        for name, value in named:
+            if _is_array(value):
+                leaves.append(mf.LeafSpec.make(
+                    name, tuple(np.shape(value)), value.dtype,
+                    compressed, chunk_bytes))
+                arrays.append(value)
+            else:
+                aux[name] = _encode_aux(value)
+        return _write_checkpoint(
+            path, comm=comm, step=step, leaves=leaves, arrays=arrays,
+            aux=aux, compressed=compressed, chunk_bytes=chunk_bytes,
+            write_window=write_window, record_hashes=record_hashes,
+            delta_base=delta_base)
 
 
 def _write_checkpoint(path: str, *, comm: Optional[Communicator],
@@ -355,16 +376,18 @@ def _write_checkpoint(path: str, *, comm: Optional[Communicator],
 
     # sync=True: checkpoints must be durable before the manager's atomic
     # rename commits them (every rank fsyncs at close).
-    with fopen_write(comm, path, user_string=b"repro checkpoint",
-                     sync=True) as f:
-        f.write_inline(mf.STATUS_USER_STRING, mf.status_inline(step),
-                       root=0)
-        f.write_block(
-            mf.MANIFEST_USER_STRING,
-            mf.build(step, leaves, aux, delta_table)
-            if comm.rank == 0 else None,
-            E=None, root=0)
-        planner.write_placements(f, placements, ww)
+    with _trace.span("write_archive", "ckpt", path=path,
+                     sections=len(placements)):
+        with fopen_write(comm, path, user_string=b"repro checkpoint",
+                         sync=True) as f:
+            f.write_inline(mf.STATUS_USER_STRING, mf.status_inline(step),
+                           root=0)
+            f.write_block(
+                mf.MANIFEST_USER_STRING,
+                mf.build(step, leaves, aux, delta_table)
+                if comm.rank == 0 else None,
+                E=None, root=0)
+            planner.write_placements(f, placements, ww)
     return mf.document(step, leaves, aux, delta_table)
 
 
@@ -491,18 +514,19 @@ def restore(path: str, like=None, *, comm: Optional[Communicator] = None,
     comm = comm or SerialComm()
     pf = _effective_prefetch(prefetch_bytes)
     vfy = _effective_verify(verify)
-    if vfy:
-        _verify_archive(path)
-    with fopen_read(comm, path) as r:
-        doc = _read_header_sections(r)
-        if doc.get("format") != mf.SHARDED_FORMAT:
-            return _restore_from_reader(r, doc, like, pf)
-    # Sharded set: the manifest file holds no payloads — close it and
-    # resolve the per-shard archives (deterministic collective opens).
-    from repro.checkpoint import sharding as _sharding
-    return _sharding.restore_sharded(path, doc, like, comm=comm,
-                                     prefetch_bytes=prefetch_bytes,
-                                     verify=vfy)
+    with _trace.span("restore", "ckpt", path=path):
+        if vfy:
+            _verify_archive(path)
+        with fopen_read(comm, path) as r:
+            doc = _read_header_sections(r)
+            if doc.get("format") != mf.SHARDED_FORMAT:
+                return _restore_from_reader(r, doc, like, pf)
+        # Sharded set: the manifest file holds no payloads — close it and
+        # resolve the per-shard archives (deterministic collective opens).
+        from repro.checkpoint import sharding as _sharding
+        return _sharding.restore_sharded(path, doc, like, comm=comm,
+                                         prefetch_bytes=prefetch_bytes,
+                                         verify=vfy)
 
 
 def _restore_from_reader(r: ScdaReader, doc: Dict[str, Any], like,
@@ -599,19 +623,20 @@ def restore_leaf(path: str, name: str, like=None, *,
     comm = comm or SerialComm()
     pf = _effective_prefetch(prefetch_bytes)
     vfy = _effective_verify(verify)
-    if vfy:
-        _verify_archive(path)
-    with fopen_read(comm, path) as r:
-        doc = _read_header_sections(r)
-        if doc.get("format") == mf.SHARDED_FORMAT:
-            sharded = doc
-        else:
-            return _restore_leaf_from_reader(r, doc, name, like, pf)
-    from repro.checkpoint import sharding as _sharding
-    return _sharding.restore_leaf_sharded(path, sharded, name, like,
-                                          comm=comm,
-                                          prefetch_bytes=prefetch_bytes,
-                                          verify=vfy)
+    with _trace.span("restore_leaf", "ckpt", path=path, leaf=name):
+        if vfy:
+            _verify_archive(path)
+        with fopen_read(comm, path) as r:
+            doc = _read_header_sections(r)
+            if doc.get("format") == mf.SHARDED_FORMAT:
+                sharded = doc
+            else:
+                return _restore_leaf_from_reader(r, doc, name, like, pf)
+        from repro.checkpoint import sharding as _sharding
+        return _sharding.restore_leaf_sharded(path, sharded, name, like,
+                                              comm=comm,
+                                              prefetch_bytes=prefetch_bytes,
+                                              verify=vfy)
 
 
 def _restore_leaf_from_reader(r: ScdaReader, doc: Dict[str, Any],

@@ -38,13 +38,13 @@ import hashlib
 import json
 import os
 import re
-import sys
 import zlib
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.checkpoint import manifest as mf
+from repro.core import trace as _trace
 from repro.core.errors import ScdaError, ScdaErrorCode
 from repro.core.io_backend import FileBackend, fsync_dir, replace_file
 from repro.core.reader import ScdaReader, fopen_read
@@ -241,6 +241,8 @@ def write_parity_files(path: str, shard_recs: List[Dict[str, Any]],
     length = max(sizes) if sizes else 0
     code = "xor" if parity == 1 else "rs8"
     files: List[Dict[str, Any]] = []
+    _tc = _trace.collector()
+    _t0 = _tc.now() if _tc is not None else 0
     for j in range(parity):
         chunks: List[bytes] = []
         crc = 0
@@ -279,6 +281,10 @@ def write_parity_files(path: str, shard_recs: List[Dict[str, Any]],
                                   length, 1)
         files.append({"file": os.path.basename(ppath), "id": pid,
                       "bytes": int(os.path.getsize(ppath + tmp_suffix))})
+    if _tc is not None:
+        _tc.end("parity_encode", "ckpt", _t0,
+                {"path": path, "code": code, "n": len(shard_recs),
+                 "m": parity, "bytes": length * parity})
     return {"code": code, "m": parity, "length": length, "files": files}
 
 
@@ -375,10 +381,19 @@ def verify_parity_file(path: str, rec: Dict[str, Any],
 # --------------------------------------------------------------------------
 
 def warn_degraded(set_name: str, lost: List[str], via: List[str]) -> None:
-    """The loud one-line degraded-read warning."""
-    print(f"repro: DEGRADED READ of {set_name!r}: reconstructing "
-          f"{', '.join(sorted(lost))} from surviving shards + "
-          f"{', '.join(via)}", file=sys.stderr)
+    """The loud one-line degraded-read warning.
+
+    Routed through :func:`repro.core.trace.warn` — logging-backed (so
+    tests and applications can capture or silence it) and rate-limited
+    per (set, lost-file) key so a restore that reconstructs a lost shard
+    leaf-by-leaf warns once, not once per read."""
+    _trace.warn(
+        f"DEGRADED READ of {set_name!r}: reconstructing "
+        f"{', '.join(sorted(lost))} from surviving shards + "
+        f"{', '.join(via)}",
+        key=("degraded", set_name, tuple(sorted(lost))))
+    _trace.event("degraded_read", "ckpt", set=set_name,
+                 lost=",".join(sorted(lost)), via=",".join(via))
 
 
 class SetReconstructor:

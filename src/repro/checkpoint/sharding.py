@@ -47,6 +47,7 @@ import re
 from typing import Any, Dict, List, Optional, Tuple
 
 from repro.checkpoint import manifest as mf
+from repro.core import trace as _trace
 from repro.core.comm import Communicator, SerialComm
 from repro.core.errors import ScdaError, ScdaErrorCode
 from repro.core.io_backend import fsync_dir, replace_file
@@ -176,6 +177,8 @@ def save_sharded(path: str, tree, *, shards: int,
             aux[name] = pio._encode_aux(value)
 
     placement = assign_shards([l["nbytes"] for l in leaves], n)
+    _trace.event("shard_placement", "ckpt", shards=n,
+                 leaves=len(leaves), parity=parity)
     shard_recs: List[Dict[str, Any]] = []
     shard_docs: List[Dict[str, Any]] = []
     placed: List[Dict[str, Any]] = []
@@ -255,18 +258,19 @@ def commit_sharded(path: str, doc: Dict[str, Any],
     set."""
     n = len(doc["shards"])
     d = os.path.dirname(os.path.abspath(path))
-    for k in range(n):
-        sfile = shard_file(path, k, n)
-        replace_file(sfile + tmp_suffix, sfile)
-    for rec in (doc.get("parity") or {}).get("files", []):
-        pfile = os.path.join(d, rec["file"])
-        replace_file(pfile + tmp_suffix, pfile)
-    # Shard renames must be durable BEFORE the manifest rename: the
-    # manifest is the commit point, so once it lands every shard entry
-    # it names has to survive the same power cut.
-    fsync_dir(d)
-    replace_file(path + tmp_suffix, path)
-    fsync_dir(d)
+    with _trace.span("commit", "ckpt", path=path, shards=n):
+        for k in range(n):
+            sfile = shard_file(path, k, n)
+            replace_file(sfile + tmp_suffix, sfile)
+        for rec in (doc.get("parity") or {}).get("files", []):
+            pfile = os.path.join(d, rec["file"])
+            replace_file(pfile + tmp_suffix, pfile)
+        # Shard renames must be durable BEFORE the manifest rename: the
+        # manifest is the commit point, so once it lands every shard
+        # entry it names has to survive the same power cut.
+        fsync_dir(d)
+        replace_file(path + tmp_suffix, path)
+        fsync_dir(d)
 
 
 # --------------------------------------------------------------------------

@@ -58,6 +58,7 @@ except ImportError:  # pragma: no cover - numpy is a hard dep elsewhere
     _np = None
 
 from repro.core import spec
+from repro.core import trace as _trace
 from repro.core.errors import ScdaError, ScdaErrorCode
 
 BytesLike = Union[bytes, bytearray, memoryview]
@@ -396,6 +397,16 @@ def submit_decompress_batch(streams: Sequence[BytesLike],
             out.append(raw)
         return out
 
+    c = _trace.collector()
+    if c is not None:
+        inner = _job
+        nbytes = sum(map(len, streams))
+
+        def _job() -> List[bytes]:  # noqa: F811 - traced worker-side span
+            with c.span("inflate", "codec",
+                        elements=len(parsed), bytes=nbytes):
+                return inner()
+
     return _get_pool().submit(_job)
 
 
@@ -418,6 +429,16 @@ def submit_compress_batch(payloads: Sequence[BytesLike],
 
     def _job() -> List[bytes]:
         return [deflate_stage1(v, level) for v in views]
+
+    c = _trace.collector()
+    if c is not None:
+        inner = _job
+        nbytes = sum(v.nbytes for v in views)
+
+        def _job() -> List[bytes]:  # noqa: F811 - traced worker-side span
+            with c.span("deflate", "codec",
+                        elements=len(views), bytes=nbytes):
+                return inner()
 
     return _get_pool().submit(_job)
 

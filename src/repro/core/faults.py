@@ -65,6 +65,8 @@ import random
 import threading
 from typing import Callable, List, Optional, Sequence
 
+from repro.core import trace as _trace
+
 __all__ = [
     "SimulatedCrash", "FaultRule", "FaultPlan", "FaultInjector",
     "FaultBackend", "OpLog", "Op", "install", "uninstall", "inject",
@@ -352,6 +354,9 @@ def _apply_simple(act: Optional[FaultRule], op: str, path: str) \
     per-op wrapper (they change the completion, not the outcome)."""
     if act is None:
         return None
+    c = _trace.collector()
+    if c is not None:
+        c.event(f"fault.{act.kind}", "io", op=op, path=path)
     if act.kind == "errno":
         raise OSError(act.errno_, os.strerror(act.errno_), path)
     if act.kind == "crash":
@@ -379,18 +384,26 @@ def _record(op: Op) -> None:
 
 # -- instrumented syscalls ----------------------------------------------------
 # Each wrapper: decide → maybe inject → real call → record → return.  The
-# fast path (no injector, no recorder) is a single function call + two
-# global reads on top of the raw syscall.
+# fast path (no injector, no recorder, no trace collector) is two function
+# calls + a few global reads on top of the raw syscall; telemetry spans
+# (op kind, path, offset, bytes, latency) are emitted only when
+# ``trace.collector()`` is live, around the real syscall (injected early
+# completions show up as ``fault.*`` events instead).
 
 def os_open(path: str, flags: int, mode: int = 0o644,
             inj: Optional[FaultInjector] = None) -> int:
+    c = _trace.collector()
+    t0 = c.now() if c is not None else 0
     if not _quiet() or inj is not None:
         _apply_simple(_decide("open", path, inj), "open", path)
         fd = os.open(path, flags, mode)
         if flags & os.O_WRONLY or flags & os.O_RDWR:
             _record(Op("open", path, n=flags))
-        return fd
-    return os.open(path, flags, mode)
+    else:
+        fd = os.open(path, flags, mode)
+    if c is not None:
+        c.io_op("open", path, 0, 0, t0)
+    return fd
 
 
 def os_pwrite(fd: int, view, offset: int, path: str = "",
@@ -404,7 +417,11 @@ def os_pwrite(fd: int, view, offset: int, path: str = "",
             view = view[:max(0, act.n)]
             if not len(view):
                 return 0
+    c = _trace.collector()
+    t0 = c.now() if c is not None else 0
     n = os.pwrite(fd, view, offset)
+    if c is not None:
+        c.io_op("pwrite", path, offset, n, t0)
     if _recorder is not None:
         _record(Op("pwrite", path, offset=offset, data=bytes(view[:n])))
     return n
@@ -451,7 +468,11 @@ def os_pwritev(fd: int, views: Sequence, offset: int, path: str = "",
         for v in views:
             n += os_pwrite(fd, v, offset + n, path=path)
         return n
+    c = _trace.collector()
+    t0 = c.now() if c is not None else 0
     n = os.pwritev(fd, views, offset)
+    if c is not None:
+        c.io_op("pwritev", path, offset, n, t0)
     if _recorder is not None and n > 0:
         joined = b"".join(bytes(v) for v in views)
         _record(Op("pwritev", path, offset=offset, data=joined[:n]))
@@ -469,7 +490,13 @@ def os_pread(fd: int, n: int, offset: int, path: str = "",
                 n = min(n, max(0, act.n))
                 if n == 0:
                     return b""
-    return os.pread(fd, n, offset)
+    c = _trace.collector()
+    if c is None:
+        return os.pread(fd, n, offset)
+    t0 = c.now()
+    data = os.pread(fd, n, offset)
+    c.io_op("pread", path, offset, len(data), t0)
+    return data
 
 
 def os_preadv(fd: int, views: Sequence, offset: int, path: str = "",
@@ -499,37 +526,55 @@ def os_preadv(fd: int, views: Sequence, offset: int, path: str = "",
             if len(data) < len(v):
                 break
         return got
-    return os.preadv(fd, views, offset)
+    c = _trace.collector()
+    if c is None:
+        return os.preadv(fd, views, offset)
+    t0 = c.now()
+    n = os.preadv(fd, views, offset)
+    c.io_op("preadv", path, offset, n, t0)
+    return n
 
 
 def os_fsync(fd: int, path: str = "",
              inj: Optional[FaultInjector] = None) -> None:
+    c = _trace.collector()
+    t0 = c.now() if c is not None else 0
     if not _quiet() or inj is not None:
         _apply_simple(_decide("fsync", path, inj), "fsync", path)
         os.fsync(fd)
         _record(Op("fsync", path))
-        return
-    os.fsync(fd)
+    else:
+        os.fsync(fd)
+    if c is not None:
+        c.io_op("fsync", path, 0, 0, t0)
 
 
 def os_ftruncate(fd: int, length: int, path: str = "",
                  inj: Optional[FaultInjector] = None) -> None:
+    c = _trace.collector()
+    t0 = c.now() if c is not None else 0
     if not _quiet() or inj is not None:
         _apply_simple(_decide("truncate", path, inj), "truncate", path)
         os.ftruncate(fd, length)
         _record(Op("truncate", path, n=length))
-        return
-    os.ftruncate(fd, length)
+    else:
+        os.ftruncate(fd, length)
+    if c is not None:
+        c.io_op("truncate", path, length, 0, t0)
 
 
 def os_replace(src: str, dst: str,
                inj: Optional[FaultInjector] = None) -> None:
+    c = _trace.collector()
+    t0 = c.now() if c is not None else 0
     if not _quiet() or inj is not None:
         _apply_simple(_decide("replace", dst, inj), "replace", dst)
         os.replace(src, dst)
         _record(Op("replace", src, dst=dst))
-        return
-    os.replace(src, dst)
+    else:
+        os.replace(src, dst)
+    if c is not None:
+        c.io_op("replace", dst, 0, 0, t0)
 
 
 def os_fsync_dir(path: str,
@@ -537,6 +582,8 @@ def os_fsync_dir(path: str,
     """fsync a DIRECTORY — what makes a rename durable.  POSIX: the
     rename itself only mutates the in-memory dirent; power loss before
     the directory inode reaches disk can undo an "atomic commit"."""
+    c = _trace.collector()
+    t0 = c.now() if c is not None else 0
     if not _quiet() or inj is not None:
         _apply_simple(_decide("fsync_dir", path, inj), "fsync_dir", path)
     fd = os.open(path or ".", os.O_RDONLY)
@@ -545,6 +592,8 @@ def os_fsync_dir(path: str,
     finally:
         os.close(fd)
     _record(Op("fsync_dir", path))
+    if c is not None:
+        c.io_op("fsync_dir", path, 0, 0, t0)
 
 
 # -- the test-facing backend shim ---------------------------------------------

@@ -54,6 +54,7 @@ import time
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
 
 from repro.core import faults as _faults
+from repro.core import trace as _trace
 from repro.core.errors import (TRANSIENT_ERRNOS, ScdaError, ScdaErrorCode,
                                os_error_detail)
 
@@ -187,7 +188,9 @@ class FileBackend:
         # Writeback state (mode 'w' only; executor created lazily on the
         # first submit_write_gather so serial writers never pay for it).
         self._wb_lock = threading.Lock()
-        self._wb: List[Tuple["Future", int]] = []  # (future, bytes queued)
+        # (future, bytes queued, start offset) — the offset rides along so
+        # a background failure can name the fragment run that was lost.
+        self._wb: List[Tuple["Future", int, int]] = []
         self._wb_pool = None
         self._wb_error: Optional[BaseException] = None
         # Sticky copy of the first failure: _wb_error is cleared once
@@ -206,6 +209,10 @@ class FileBackend:
         aborts NOW as the exact taxonomy error with the failing byte
         offset attached.  Returns the next attempt count."""
         if e.errno in TRANSIENT_ERRNOS and attempt < max_retries():
+            c = _trace.collector()
+            if c is not None:
+                c.metrics.count("io.retries")
+                c.event("retry", "io", path=self.path, errno=e.errno)
             if e.errno != _errno.EINTR:  # EINTR immediate; EAGAIN backs off
                 time.sleep(min(0.001 * (1 << min(attempt, 6)), 0.05))
             return attempt + 1
@@ -371,6 +378,15 @@ class FileBackend:
             return
         frags = [(off, buf) for off, buf in frags if len(buf)]
         nbytes = sum(len(buf) for _, buf in frags)
+        off0 = frags[0][0] if frags else 0
+        c = _trace.collector()
+        if c is None:
+            job = self.write_gather
+        else:
+            def job(frags=frags):  # traced worker-side span
+                with c.span("writeback", "pipeline", path=self.path,
+                            offset=off0, bytes=nbytes):
+                    self.write_gather(frags)
         with self._wb_lock:
             if self._wb_pool is None:
                 from concurrent.futures import ThreadPoolExecutor
@@ -381,12 +397,19 @@ class FileBackend:
             with self._wb_lock:
                 self._reap_done_locked()
                 self._raise_poison_locked()
-                if not self._wb or \
-                        sum(n for _, n in self._wb) + nbytes <= window:
-                    self._wb.append((self._wb_pool.submit(
-                        self.write_gather, frags), nbytes))
+                inflight = sum(t[1] for t in self._wb)
+                if not self._wb or inflight + nbytes <= window:
+                    self._wb.append((
+                        self._wb_pool.submit(job, frags) if c is None
+                        else self._wb_pool.submit(job), nbytes, off0))
+                    if c is not None:
+                        c.counter("writeback.in_flight_bytes",
+                                  inflight + nbytes)
+                        c.counter("writeback.queue_depth", len(self._wb))
                     return
                 head = self._wb[0][0]
+            if c is not None:
+                c.metrics.count("pipeline.writeback.stalls")
             # Oldest-first wait OUTSIDE the lock (the reap and
             # pending_write_bytes must stay reachable meanwhile):
             # submission order is also file order, so draining the head
@@ -405,9 +428,17 @@ class FileBackend:
             raise self._wb_poison
 
     def _reap_done_locked(self) -> None:
-        """Drop completed writeback jobs; record the first failure."""
+        """Drop completed writeback jobs; record the first failure.
+
+        A failure that crossed the executor boundary has lost the
+        submitting stack, so the submission-time op context (stage, path,
+        offset, bytes) is re-attached here: as ``op_context``/``stage``
+        attributes plus an exception note (3.11+), never by rewriting the
+        message — background errors must stay byte-identical to the
+        foreground ones the pipeline fuzz compares against.
+        """
         still = []
-        for fut, n in self._wb:
+        for fut, n, off in self._wb:
             if fut.done():
                 err = fut.exception()
                 if err is not None and self._wb_poison is None:
@@ -416,12 +447,38 @@ class FileBackend:
                     if isinstance(err, (ScdaError, _faults.SimulatedCrash)):
                         self._wb_poison = err
                     else:
-                        self._wb_poison = ScdaError(
-                            ScdaErrorCode.FS_WRITE, f"{self.path}: {err}")
+                        wrapped = ScdaError(
+                            ScdaErrorCode.FS_WRITE,
+                            f"{self.path}: background writeback of {n} "
+                            f"bytes @ {off}: {err}")
+                        wrapped.__cause__ = err
+                        self._wb_poison = wrapped
+                    self._attach_op_context(
+                        self._wb_poison, "writeback", off, n)
                     self._wb_error = self._wb_poison
             else:
-                still.append((fut, n))
+                still.append((fut, n, off))
         self._wb[:] = still
+
+    def _attach_op_context(self, err: BaseException, stage: str,
+                           offset: int, nbytes: int) -> None:
+        """Pin the failed stage onto an error surfaced from a pool worker
+        (satellite of the telemetry PR): ``err.op_context`` for callers,
+        an exception note for tracebacks, and a trace event when live."""
+        err.stage = stage
+        err.op_context = {"stage": stage, "path": self.path,
+                          "offset": offset, "bytes": nbytes}
+        note = getattr(err, "add_note", None)
+        if note is not None:  # Python 3.11+
+            try:
+                note(f"stage: {stage} ({self.path} @ {offset}, "
+                     f"{nbytes} bytes)")
+            except TypeError:  # pragma: no cover - exotic BaseExceptions
+                pass
+        c = _trace.collector()
+        if c is not None:
+            c.event("error", "pipeline", stage=stage, path=self.path,
+                    offset=offset, bytes=nbytes, error=str(err))
 
     def drain_writes(self) -> None:
         """Wait for every queued background write; raise the first error.
@@ -436,7 +493,7 @@ class FileBackend:
         """
         with self._wb_lock:
             pending = list(self._wb)
-        for fut, _ in pending:
+        for fut, _, _ in pending:
             try:
                 fut.result()
             except BaseException:  # noqa: BLE001 - reap owns delivery
@@ -452,7 +509,7 @@ class FileBackend:
         a clean shutdown must leave this at 0)."""
         with self._wb_lock:
             self._reap_done_locked()
-            return sum(n for _, n in self._wb)
+            return sum(t[1] for t in self._wb)
 
     # -- reads ----------------------------------------------------------------
     def pread(self, offset: int, n: int) -> bytes:
@@ -697,7 +754,18 @@ class FileBackend:
                 got += len(chunk)
             return b"".join(chunks)
 
+        c = _trace.collector()
+        if c is not None:
+            inner = _job
+
+            def _job() -> bytes:  # noqa: F811 - traced worker-side span
+                with c.span("prefetch", "pipeline", path=path,
+                            offset=offset, bytes=length):
+                    return inner()
+
         self._pf[offset] = (length, self._pf_pool.submit(_job))
+        if c is not None:
+            c.counter("prefetch.extents", len(self._pf))
         return length
 
     def _take_prefetched(self, offset: int, n: int) -> Optional[memoryview]:
@@ -716,7 +784,10 @@ class FileBackend:
         po, plen, fut = found
         try:
             data = fut.result()
-        except OSError:
+        except OSError as e:
+            # The foreground re-read owns error delivery; name the stage
+            # that actually failed so diagnostics don't blame the re-read.
+            self._attach_op_context(e, "prefetch", po, plen)
             with self._pf_lock:
                 self._pf.pop(po, None)
             return None

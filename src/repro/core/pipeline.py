@@ -62,6 +62,7 @@ from typing import (Any, Callable, Iterator, List, Optional, Sequence,
 
 from repro.core import codec, spec
 from repro.core import faults as _faults
+from repro.core import trace as _trace
 from repro.core.errors import ScdaError, ScdaErrorCode
 from repro.core.io_backend import BytesLike, FileBackend
 
@@ -126,11 +127,14 @@ def run_pipeline(backend: FileBackend, items: Sequence[ReadItem],
     # flight so read/inflate overlap survives the cap.
     byte_cap = max(4 * prefetch_bytes, 64 << 20)
     released = 0
+    c = _trace.collector()
 
     def _drain_head() -> Tuple[Any, List]:
         nonlocal inflight_bytes
         key, futs, est = inflight.pop(0)
         inflight_bytes -= est
+        if c is not None:
+            c.counter("restore.in_flight_bytes", inflight_bytes)
         out: List[bytes] = []
         for f in futs:  # each future resolves to a batch of payloads
             out.extend(f.result())
@@ -178,6 +182,9 @@ def run_pipeline(backend: FileBackend, items: Sequence[ReadItem],
                        + sum(it.expected_sizes or ()))
                 inflight.append((it.key, futs, est))
                 inflight_bytes += est
+                if c is not None:
+                    c.counter("restore.in_flight_bytes", inflight_bytes)
+                    c.counter("restore.in_flight_items", len(inflight))
                 while inflight and (len(inflight) > depth
                                     or (inflight_bytes > byte_cap
                                         and len(inflight) > 1)
@@ -288,10 +295,16 @@ def run_write_pipeline(backend: FileBackend, items: Sequence[WriteItem],
     pend = {}     # idx -> (deflate futures or None, payload, est bytes)
     pend_bytes = 0
     sub = 0       # next item to move snapshot → deflate
+    c = _trace.collector()
 
     def _ensure_snap(j: int) -> None:
         if j < len(items) and j not in snaps and j not in pend:
-            snaps[j] = codec.submit_task(items[j].snapshot)
+            fn = items[j].snapshot
+            if c is not None:
+                def fn(snap=fn, j=j):  # traced worker-side span
+                    with c.span("snapshot", "pipeline", item=j):
+                        return snap()
+            snaps[j] = codec.submit_task(fn)
 
     try:
         for idx, it in enumerate(items):
@@ -323,13 +336,21 @@ def run_write_pipeline(backend: FileBackend, items: Sequence[WriteItem],
                     pend[sub] = (None, payload, est)
                 pend_bytes += est
                 sub += 1
+                if c is not None:
+                    c.counter("save.pend_bytes", pend_bytes)
+                    c.counter("save.pend_items", len(pend))
             futs, payload, est = pend.pop(idx)
             pend_bytes -= est
             if futs is not None:
                 streams: List[bytes] = []
+                t0 = c.now() if c is not None else 0
                 for f in futs:
                     streams.extend(codec.encode_stage2(s1, it.style)
                                    for s1 in f.result())
+                if c is not None:
+                    c.end("encode", "codec", t0,
+                          {"elements": len(streams),
+                           "bytes": sum(map(len, streams))})
                 frags = it.plan(streams)
             else:
                 frags = it.plan(payload)

@@ -24,6 +24,11 @@ Subcommands::
                                      # SRC's sections; sidecar refreshed
     scdatool tail FILE               # print journal records; -f follows
                                      # new sections as they land
+    scdatool stats FILE...           # per-section stored/logical bytes and
+                                     # compression ratios (via the index)
+    scdatool stats --trace T.json    # summarize a Chrome trace captured
+                                     # with REPRO_SCDA_TRACE: per-stage
+                                     # time, syscall counts, bytes, MB/s
 
 ``SECTION`` is a section number (as printed by ``ls``) or a user string.
 Installed as a console script via ``pyproject.toml``; equivalently
@@ -40,6 +45,7 @@ from typing import List, Optional
 
 from repro.core import (ScdaError, ScdaErrorCode, ScdaIndex, fopen_append,
                         fopen_read, fopen_write)
+from repro.core import trace as _trace
 from repro.core.index import SIDECAR_SUFFIX
 from repro.tools.fsck import (fsck_file, is_sharded_manifest, repair_file,
                               repair_set, sibling_shards_exist)
@@ -205,7 +211,37 @@ def cmd_cat(args) -> int:
 
 # -- fsck --------------------------------------------------------------------
 
+def _timed(args, body, label: str) -> int:
+    """``--timing``: run ``body`` under a private trace collector and
+    print the per-phase wall-time / bytes-scanned breakdown (Metrics
+    counters from the syscall choke point) after its normal output."""
+    tc = _trace.TraceCollector()
+    t0 = tc.now()
+    with _trace.scoped(tc):
+        status = body(args)
+    wall_ms = (tc.now() - t0) / 1e6
+    snap = tc.metrics.snapshot()
+    ctr = snap["counters"]
+    scanned = ctr.get("io.pread.bytes", 0) + ctr.get("io.preadv.bytes", 0)
+    calls = sum(v for k, v in ctr.items()
+                if k.startswith("io.") and k.endswith(".calls"))
+    print(f"# {label} timing: {wall_ms:.1f} ms wall, {scanned} bytes "
+          f"scanned, {calls} syscalls")
+    phases = sorted(((h["total_us"], name[:-3], h["count"])
+                     for name, h in snap["histograms"].items()
+                     if name.endswith(".us")), reverse=True)
+    for total_us, name, count in phases:
+        print(f"#   {name:<24} {count:>7} calls {total_us / 1e3:>9.1f} ms")
+    return status
+
+
 def cmd_fsck(args) -> int:
+    if args.timing:
+        return _timed(args, _fsck_body, "fsck")
+    return _fsck_body(args)
+
+
+def _fsck_body(args) -> int:
     status = 0
     for path in args.files:
         findings = fsck_file(path, deep=not args.fast,
@@ -297,6 +333,12 @@ def cmd_verify(args) -> int:
     on any mismatch, unreadable section, missing checksum, or missing
     sidecar.
     """
+    if args.timing:
+        return _timed(args, _verify_body, "verify")
+    return _verify_body(args)
+
+
+def _verify_body(args) -> int:
     status = 0
     if args.chain:
         from repro.checkpoint.delta import verify_chain
@@ -474,6 +516,101 @@ def cmd_tail(args) -> int:
                 continue
     except KeyboardInterrupt:
         return 0
+
+
+# -- stats -------------------------------------------------------------------
+
+def _entry_logical_bytes(r, e) -> Optional[int]:
+    """Decoded (logical) payload size of one indexed section.
+
+    Raw kinds carry it in the entry itself; ``zB``/``zA`` record it as
+    ``raw_E`` / ``N*E``; ``zV`` needs the decoded element sizes, which
+    live in the on-disk ``U`` count-entry table (parsed, not decoded)."""
+    if e.kind in ("I", "B", "V"):
+        return e.payload_bytes
+    if e.kind in ("A", "zA"):
+        return e.N * e.E
+    if e.kind == "zB":
+        return e.raw_E
+    if e.kind == "zV":
+        return sum(r._parse_entries(e.entries_start, 0, e.N, b"U"))
+    return None
+
+
+def cmd_stats(args) -> int:
+    """Size/compression accounting and Chrome-trace summarization.
+
+    With FILEs: a per-section table of stored (on-disk payload) vs
+    logical (decoded) bytes and the compression ratio, from the seekable
+    index — §3-encoded sections report real ratios, raw ones 1.00.
+    Sharded-set manifests expand to the whole set.  With ``--trace``,
+    summarizes a Chrome trace captured via ``REPRO_SCDA_TRACE`` (or
+    ``benchmarks/run.py --trace``): per-stage time breakdown, syscall
+    counts, bytes moved, MB/s.
+    """
+    if not args.files and not args.trace:
+        _err("nothing to do: pass FILEs and/or --trace TRACE.json")
+        return 2
+    status = 0
+    docs = []
+    for path in [p for f in args.files for p in _expand_set(f)]:
+        try:
+            with fopen_read(None, path) as r:
+                idx = r.index()
+                rows = []
+                for i, e in enumerate(idx):
+                    logical = _entry_logical_bytes(r, e)
+                    stored = e.payload_bytes
+                    ratio = (logical / stored
+                             if logical is not None and stored else None)
+                    rows.append({"sec": i, "kind": e.kind,
+                                 "stored": stored, "logical": logical,
+                                 "ratio": ratio,
+                                 "user": _printable(e.user_string)})
+        except (ScdaError, OSError, ValueError) as e:
+            _err(f"{path}: {e}")
+            status = 1
+            continue
+        stored_t = sum(row["stored"] for row in rows)
+        logical_t = sum(row["logical"] or 0 for row in rows)
+        doc = {"file": path, "bytes": idx.file_size, "sections": rows,
+               "stored_bytes": stored_t, "logical_bytes": logical_t,
+               "ratio": (logical_t / stored_t) if stored_t else None}
+        if args.json:
+            docs.append(doc)
+            continue
+        print(f"# {path}: {len(idx)} sections, {idx.file_size} bytes on "
+              f"disk, payload {stored_t} stored / {logical_t} logical"
+              + (f" (ratio {logical_t / stored_t:.2f})" if stored_t
+                 else ""))
+        print(f"{'sec':>4} {'kind':>4} {'stored':>12} {'logical':>12} "
+              f"{'ratio':>6}  user string")
+        for row in rows:
+            ratio = (f"{row['ratio']:.2f}" if row["ratio"] is not None
+                     else "-")
+            logical = row["logical"] if row["logical"] is not None else "-"
+            print(f"{row['sec']:>4} {row['kind']:>4} {row['stored']:>12} "
+                  f"{logical:>12} {ratio:>6}  {row['user']}")
+    trace_doc = None
+    if args.trace:
+        try:
+            summary = _trace.summarize_chrome(
+                _trace.load_chrome(args.trace))
+        except (OSError, ValueError) as e:
+            _err(f"{args.trace}: {e}")
+            return 1
+        if args.json:
+            trace_doc = summary
+        else:
+            print(f"# {args.trace}:")
+            for line in _trace.format_summary(summary):
+                print(line)
+    if args.json:
+        out = {"files": docs}
+        if trace_doc is not None:
+            out["trace"] = trace_doc
+        print(json.dumps(out, indent=1, sort_keys=True))
+    return status
 
 
 # -- diff --------------------------------------------------------------------
@@ -752,6 +889,9 @@ def build_parser() -> argparse.ArgumentParser:
                    help="warnings also fail")
     p.add_argument("-q", "--quiet", action="store_true",
                    help="print errors only")
+    p.add_argument("--timing", action="store_true",
+                   help="print per-phase wall time and bytes scanned "
+                        "after the check")
     p.set_defaults(fn=cmd_fsck)
 
     p = sub.add_parser("repair",
@@ -790,6 +930,9 @@ def build_parser() -> argparse.ArgumentParser:
                    help="digest-verify checkpoint chunk content across the "
                         "delta chain (CRC32 + SHA-256; follows base "
                         "archives)")
+    p.add_argument("--timing", action="store_true",
+                   help="print per-phase wall time and bytes scanned "
+                        "after the check")
     p.set_defaults(fn=cmd_verify)
 
     p = sub.add_parser("copy", help="rewrite an archive section by section")
@@ -852,6 +995,19 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--interval", type=float, default=1.0,
                    help="poll interval for --follow (seconds, default 1)")
     p.set_defaults(fn=cmd_tail)
+
+    p = sub.add_parser("stats",
+                       help="per-section stored/logical bytes and "
+                            "compression ratios; --trace summarizes a "
+                            "Chrome trace")
+    p.add_argument("files", nargs="*")
+    p.add_argument("--trace", metavar="TRACE.json", default=None,
+                   help="summarize a Chrome trace captured with "
+                        "REPRO_SCDA_TRACE (per-stage time, syscalls, "
+                        "bytes, MB/s)")
+    p.add_argument("--json", action="store_true",
+                   help="machine-readable output")
+    p.set_defaults(fn=cmd_stats)
     return ap
 
 

@@ -492,7 +492,7 @@ def test_writer_lock_excludes_live_holder(tmp_path):
     mgr2.close()
 
 
-def test_writer_lock_stale_takeover(tmp_path, capsys):
+def test_writer_lock_stale_takeover(tmp_path, caplog):
     d = str(tmp_path / "ck")
     os.makedirs(d)
     lock = os.path.join(d, ".scda-lock")
@@ -501,9 +501,9 @@ def test_writer_lock_stale_takeover(tmp_path, capsys):
         json.dump({"pid": 2 ** 22 + 1,
                    "host": __import__("socket").gethostname(),
                    "time": 0.0}, f)
-    mgr = CheckpointManager(d, keep=2, shards=0)
-    err = capsys.readouterr().err
-    assert "TAKING OVER" in err
+    with caplog.at_level("WARNING", logger="repro.scda"):
+        mgr = CheckpointManager(d, keep=2, shards=0)
+    assert "TAKING OVER" in caplog.text
     mgr.close()
     assert not os.path.exists(lock)
 
